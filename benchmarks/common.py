@@ -1,0 +1,121 @@
+"""Shared benchmark protocol (paper §5.1).
+
+Runs every optimizer (MOAR + 4 baselines) on every workload with the same
+budget B=40 and seed, evaluates each returned plan on the held-out test
+set D_T, and caches everything to artifacts/bench/results_seed<k>.json.
+All paper tables read from this cache.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+from repro.baselines import OPTIMIZERS
+from repro.core.search import MOARSearch
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.operators import LLM_TYPES, models_used, op_types
+from repro.engine.workloads import WORKLOADS
+
+BUDGET = 40
+ART_DIR = "artifacts/bench"
+
+
+def _test_eval(executor: Executor, workload, pipeline) -> Dict[str, Any]:
+    out, stats = executor.run(pipeline, workload.test)
+    return {
+        "test_acc": workload.score(out, workload.test),
+        "test_cost": stats.cost,
+        "latency_s": stats.latency_s,
+        "llm_calls": stats.llm_calls,
+    }
+
+
+def run_workload(name: str, seed: int = 0, budget: int = BUDGET
+                 ) -> Dict[str, Any]:
+    w = WORKLOADS[name]()
+    backend = SimBackend(seed=seed, domain=w.domain)
+    executor = Executor(backend, seed=seed)
+    results: Dict[str, Any] = {"workload": name, "seed": seed,
+                               "budget": budget}
+
+    # the user's original plan
+    orig = _test_eval(executor, w, w.initial_pipeline)
+    results["original"] = {"plans": [{**orig, "n_ops":
+                                      len(w.initial_pipeline["operators"]),
+                                      "models": models_used(w.initial_pipeline),
+                                      "op_types": op_types(w.initial_pipeline)}],
+                           "opt_cost": 0.0, "opt_latency_s": 0.0}
+
+    # MOAR
+    t0 = time.time()
+    search = MOARSearch(w, backend, budget=budget, seed=seed)
+    res = search.run()
+    opt_cost = sum(n.cost for n in res.evaluated)
+    plans = []
+    for n in res.frontier:
+        e = _test_eval(executor, w, n.pipeline)
+        plans.append({**e,
+                      "sample_acc": n.acc, "sample_cost": n.cost,
+                      "path": n.path_actions(),
+                      "n_ops": len(n.pipeline["operators"]),
+                      "models": models_used(n.pipeline),
+                      "op_types": op_types(n.pipeline),
+                      "eval_index": n.eval_index})
+    results["moar"] = {
+        "plans": plans,
+        "opt_cost": opt_cost,
+        "opt_latency_s": res.wall_s,
+        "budget_used": res.budget_used,
+        "errors": res.errors,
+        "n_evaluated": len(res.evaluated),
+    }
+
+    # baselines
+    for oname, cls in OPTIMIZERS.items():
+        opt = cls(w, backend, budget=budget, seed=seed)
+        r = opt.optimize()
+        opt_cost = sum(p.cost for p in r.evaluated)
+        plans = []
+        for p in r.frontier:
+            e = _test_eval(executor, w, p.pipeline)
+            plans.append({**e, "sample_acc": p.acc, "sample_cost": p.cost,
+                          "note": p.note,
+                          "n_ops": len(p.pipeline["operators"]),
+                          "models": models_used(p.pipeline),
+                          "op_types": op_types(p.pipeline)})
+        results[oname] = {"plans": plans, "opt_cost": opt_cost,
+                          "opt_latency_s": r.wall_s,
+                          "budget_used": r.budget_used}
+    return results
+
+
+def load_or_run(seed: int = 0, refresh: bool = False) -> Dict[str, Any]:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"results_seed{seed}.json")
+    if os.path.exists(path) and not refresh:
+        with open(path) as f:
+            return json.load(f)
+    out = {}
+    for name in WORKLOADS:
+        out[name] = run_workload(name, seed=seed)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+METHODS = ["moar", "docetl_v1", "abacus", "lotus", "simple_agent"]
+METHOD_LABELS = {"moar": "MOAR", "docetl_v1": "DocETL-V1",
+                 "abacus": "ABACUS", "lotus": "LOTUS",
+                 "simple_agent": "SimpleAgent", "original": "Original"}
+
+
+def best_acc(entry: Dict[str, Any]) -> float:
+    return max((p["test_acc"] for p in entry["plans"]), default=0.0)
+
+
+def best_plan(entry: Dict[str, Any]) -> Dict[str, Any]:
+    return max(entry["plans"], key=lambda p: p["test_acc"])

@@ -1,0 +1,44 @@
+"""Fig 4: accuracy-cost Pareto frontiers per method (test set).
+
+Prints frontier point lists and a domination summary; the raw points are
+in the artifacts JSON for plotting.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import METHOD_LABELS, METHODS, load_or_run
+
+
+def _dominated_by(frontier, p) -> bool:
+    return any(q["test_acc"] > p["test_acc"] and
+               q["test_cost"] <= p["test_cost"] for q in frontier)
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    print("\n== Fig 4: Pareto frontiers (test set) ==")
+    summary = []
+    for wname, r in results.items():
+        moar_front = r["moar"]["plans"]
+        print(f"  {wname}:")
+        for m in METHODS:
+            pts = sorted(r[m]["plans"], key=lambda p: p["test_cost"])
+            s = " ".join(f"(${p['test_cost']:.4f},{p['test_acc']:.2f})"
+                         for p in pts[:8])
+            print(f"    {METHOD_LABELS[m]:>12s}: {s}")
+        # domination check: how many baseline points survive MOAR's frontier
+        survivors = 0
+        total = 0
+        for m in METHODS:
+            if m == "moar":
+                continue
+            for p in r[m]["plans"]:
+                total += 1
+                if not _dominated_by(moar_front, p):
+                    survivors += 1
+        dominated = total - survivors
+        print(f"    -> MOAR dominates {dominated}/{total} baseline plans"
+              f" ({survivors} non-dominated)")
+        summary.append({"workload": wname, "dominated": dominated,
+                        "total": total})
+    return summary

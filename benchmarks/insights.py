@@ -1,0 +1,43 @@
+"""§5.3 insights: characteristics of MOAR's top-accuracy pipelines."""
+
+from __future__ import annotations
+
+from benchmarks.common import load_or_run
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    top = []
+    for wname, r in results.items():
+        top.extend(sorted(r["moar"]["plans"],
+                          key=lambda p: -p["test_acc"])[:5])
+    n = max(len(top), 1)
+
+    def frac(pred):
+        return 100.0 * sum(1 for p in top if pred(p)) / n
+
+    init_types = {"map", "filter", "reduce"}
+    modified = frac(lambda p: len(p.get("op_types", [])) != p.get("_init", 1)
+                    or any(t not in init_types for t in p.get("op_types", []))
+                    or len(p.get("op_types", [])) > 3)
+    proj = frac(lambda p: any(a in ("doc_summarization", "doc_compression_llm",
+                                    "doc_compression_code",
+                                    "head_tail_compression", "context_isolation",
+                                    "projection_chain", "task_decomposition")
+                              for a in p.get("path", [])))
+    code = frac(lambda p: any(t.startswith("code_")
+                              for t in p.get("op_types", [])))
+    late = frac(lambda p: p.get("eval_index", 0) > 20)
+    very_late = frac(lambda p: p.get("eval_index", 0) > 30)
+    avg_ops = sum(len(p.get("op_types", [])) for p in top) / n
+
+    print("\n== §5.3 insights: 5 most-accurate MOAR pipelines per workload ==")
+    print(f"  pipelines analyzed:                {len(top)}")
+    print(f"  use a modified logical plan:       {modified:.0f}%")
+    print(f"  use projection synthesis:          {proj:.0f}%")
+    print(f"  contain agent-authored code ops:   {code:.0f}%")
+    print(f"  discovered after iteration 20:     {late:.0f}%")
+    print(f"  discovered after iteration 30:     {very_late:.0f}%")
+    print(f"  mean operator count:               {avg_ops:.1f}")
+    return {"modified": modified, "projection": proj, "code": code,
+            "late": late, "avg_ops": avg_ops}

@@ -1,0 +1,88 @@
+"""§Roofline: the full baseline table from dry-run artifacts."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS
+from repro.configs.shapes import SHAPE_NAMES, skip_reason
+
+ART = "artifacts/dryrun"
+
+
+def run(seed: int = 0, results=None, mesh: str = "pod16x16",
+        art: str = ART):
+    print(f"\n== Roofline table ({mesh}, {art}) ==")
+    print(f"  {'arch':22s} {'shape':12s} {'comp(s)':>10s} {'mem(s)':>10s} "
+          f"{'coll(s)':>10s} {'bound':>6s} {'useful':>7s} {'roofl%':>7s} "
+          f"{'HBM%':>6s}")
+    rows = []
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPE_NAMES:
+            reason = skip_reason(cfg, shape)
+            if reason:
+                print(f"  {arch:22s} {shape:12s} {'skipped (' + reason.split(':')[0] + ')':>20s}")
+                continue
+            path = os.path.join(art, mesh, f"{arch}__{shape}.json")
+            if not os.path.exists(path):
+                print(f"  {arch:22s} {shape:12s} MISSING")
+                continue
+            with open(path) as f:
+                r = json.load(f)
+            if r.get("status") != "ok":
+                print(f"  {arch:22s} {shape:12s} {r.get('status')}")
+                continue
+            print(f"  {arch:22s} {shape:12s} {r['compute_s']:>10.3e} "
+                  f"{r['memory_s']:>10.3e} {r['collective_s']:>10.3e} "
+                  f"{r['bottleneck'][:6]:>6s} {r['useful_ratio']:>7.3f} "
+                  f"{100 * r['roofline_fraction']:>6.1f}% "
+                  f"{100 * r['peak_fraction_of_hbm']:>5.1f}%")
+            rows.append(r)
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        coll = max(rows, key=lambda r: r["collective_s"] /
+                   max(r["compute_s"] + r["memory_s"], 1e-12))
+        print(f"  worst roofline fraction: {worst['arch']} x {worst['shape']}"
+              f" ({100 * worst['roofline_fraction']:.1f}%)")
+        print(f"  most collective-bound:   {coll['arch']} x {coll['shape']}")
+    if art == ART and os.path.isdir("artifacts/dryrun_opt"):
+        compare(mesh=mesh)
+    return rows
+
+
+def compare(mesh: str = "pod16x16", base_dir: str = "artifacts/dryrun",
+            opt_dir: str = "artifacts/dryrun_opt"):
+    """Baseline vs optimized step-time lower bounds per cell."""
+    print(f"\n== baseline vs optimized ({mesh}) ==")
+    print(f"  {'cell':36s} {'base(s)':>10s} {'opt(s)':>10s} {'speedup':>8s} "
+          f"{'base-bound':>10s} {'opt-bound':>10s}")
+    rows = []
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPE_NAMES:
+            if skip_reason(cfg, shape):
+                continue
+            pair = []
+            for d in (base_dir, opt_dir):
+                path = os.path.join(d, mesh, f"{arch}__{shape}.json")
+                if not os.path.exists(path):
+                    pair.append(None)
+                    continue
+                with open(path) as f:
+                    pair.append(json.load(f))
+            if not pair[0] or not pair[1]:
+                continue
+            b = pair[0]["step_time_lower_bound_s"]
+            o = pair[1]["step_time_lower_bound_s"]
+            rows.append((f"{arch} x {shape}", b, o,
+                         pair[0]["bottleneck"], pair[1]["bottleneck"]))
+            print(f"  {arch + ' x ' + shape:36s} {b:>10.3e} {o:>10.3e} "
+                  f"{b / o:>7.2f}x {pair[0]['bottleneck']:>10s} "
+                  f"{pair[1]['bottleneck']:>10s}")
+    if rows:
+        import math
+        geo = math.exp(sum(math.log(b / o) for _, b, o, _, _ in rows)
+                       / len(rows))
+        print(f"  geomean speedup (step-time lower bound): {geo:.2f}x over "
+              f"{len(rows)} cells")
+    return rows

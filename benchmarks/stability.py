@@ -1,0 +1,33 @@
+"""Multi-seed robustness: Table 4 across seeds (mean +- std)."""
+
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import METHODS, best_acc, load_or_run
+
+SEEDS = (0, 1, 2)
+
+
+def run(seed: int = 0, results=None):
+    per_seed = {s: load_or_run(s) for s in SEEDS}
+    print(f"\n== Table 4 stability over seeds {SEEDS} (test-set best acc) ==")
+    print("  " + "  ".join([f"{'workload':>16s}"] +
+                           [f"{m:>22s}" for m in METHODS]))
+    wins = 0
+    rows = 0
+    for wname in per_seed[SEEDS[0]]:
+        cells = [f"{wname:>16s}"]
+        means = {}
+        for m in METHODS:
+            accs = [best_acc(per_seed[s][wname][m]) for s in SEEDS]
+            mu = statistics.mean(accs)
+            sd = statistics.pstdev(accs)
+            means[m] = mu
+            cells.append(f"{mu:.3f}+-{sd:.3f}")
+        rows += 1
+        if means["moar"] >= max(v for k, v in means.items() if k != "moar"):
+            wins += 1
+        print("  " + "  ".join(f"{c:>22s}" for c in cells))
+    print(f"  MOAR highest (by mean) on {wins}/{rows} workloads")
+    return wins, rows

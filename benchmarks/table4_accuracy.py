@@ -1,0 +1,33 @@
+"""Table 4: best accuracy by method (held-out test set)."""
+
+from __future__ import annotations
+
+from benchmarks.common import METHOD_LABELS, METHODS, best_acc, load_or_run
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    rows = []
+    header = ["Workload"] + [METHOD_LABELS[m] for m in METHODS] + ["Original"]
+    print("\n== Table 4: best accuracy by method (test set) ==")
+    print("  " + "  ".join(f"{h:>12s}" for h in header))
+    gains = {m: [] for m in METHODS if m != "moar"}
+    moar_wins = 0
+    for wname, r in results.items():
+        accs = {m: best_acc(r[m]) for m in METHODS}
+        accs["original"] = best_acc(r["original"])
+        row = [wname] + [f"{accs[m]:.3f}" for m in METHODS] + \
+            [f"{accs['original']:.3f}"]
+        print("  " + "  ".join(f"{c:>12s}" for c in row))
+        rows.append({"workload": wname, **accs})
+        if accs["moar"] >= max(accs[m] for m in METHODS if m != "moar"):
+            moar_wins += 1
+        for m in gains:
+            if accs[m] > 0:
+                gains[m].append((accs["moar"] - accs[m]) / accs[m])
+    print(f"  MOAR highest on {moar_wins}/{len(results)} workloads")
+    for m, g in gains.items():
+        if g:
+            print(f"  avg gain vs {METHOD_LABELS[m]}: "
+                  f"{100 * sum(g) / len(g):+.1f}%")
+    return rows

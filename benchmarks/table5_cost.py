@@ -1,0 +1,42 @@
+"""Table 5: cost of the cheapest MOAR plan matching or exceeding each
+baseline's best accuracy, as a multiple of that baseline's cost."""
+
+from __future__ import annotations
+
+from benchmarks.common import METHOD_LABELS, METHODS, best_plan, load_or_run
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    baselines = [m for m in METHODS if m != "moar"]
+    print("\n== Table 5: MOAR cost to match baseline best accuracy "
+          "(x baseline cost; '-' = unmatched) ==")
+    print("  " + "  ".join([f"{'Workload':>16s}"] +
+                           [f"{METHOD_LABELS[m]:>12s}" for m in baselines]))
+    ratios_all = {m: [] for m in baselines}
+    rows = []
+    for wname, r in results.items():
+        cells = [f"{wname:>16s}"]
+        row = {"workload": wname}
+        for m in baselines:
+            target = best_plan(r[m])
+            # cheapest MOAR plan with test_acc >= baseline best
+            cands = [p for p in r["moar"]["plans"]
+                     if p["test_acc"] >= target["test_acc"] - 1e-9]
+            if not cands or target["test_cost"] <= 0:
+                cells.append(f"{'-':>12s}")
+                row[m] = None
+                continue
+            cheapest = min(cands, key=lambda p: p["test_cost"])
+            ratio = cheapest["test_cost"] / target["test_cost"]
+            ratios_all[m].append(ratio)
+            cells.append(f"{ratio:>11.3f}x")
+            row[m] = ratio
+        rows.append(row)
+        print("  " + "  ".join(cells))
+    for m in baselines:
+        if ratios_all[m]:
+            avg = sum(ratios_all[m]) / len(ratios_all[m])
+            print(f"  avg: MOAR matches {METHOD_LABELS[m]} best accuracy at "
+                  f"{avg:.3f}x its cost")
+    return rows

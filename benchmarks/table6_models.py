@@ -1,0 +1,29 @@
+"""Table 6: model usage across top-accuracy MOAR pipelines (5/workload)."""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from benchmarks.common import load_or_run
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    usage = Counter()
+    total_pipelines = 0
+    switched = 0
+    default = "llama3.2-1b"
+    for wname, r in results.items():
+        top = sorted(r["moar"]["plans"], key=lambda p: -p["test_acc"])[:5]
+        for p in top:
+            total_pipelines += 1
+            models = p.get("models") or []
+            if models and all(m != default for m in models):
+                switched += 1
+            usage.update(set(models))
+    print("\n== Table 6: model usage across top-accuracy MOAR pipelines ==")
+    print(f"  {total_pipelines} pipelines; "
+          f"{switched} fully switched off the default ({default})")
+    for model, n in usage.most_common():
+        print(f"  {model:24s} {100 * n / max(total_pipelines, 1):5.1f}%")
+    return dict(usage)

@@ -1,0 +1,37 @@
+"""Table 8: test-plan latency (seconds) across datasets and methods.
+
+Latency model: LLM calls x size-dependent per-call latency / 3 workers
+(engine/executor.py) — mirrors the paper's observation that optimized
+plans often run FASTER than the original despite more operators (smaller
+models + less text per call).
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import METHOD_LABELS, METHODS, best_plan, load_or_run
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    print("\n== Table 8: test-plan latency (s), mean over returned plans "
+          "(best-accuracy plan in parens) ==")
+    print("  " + "  ".join([f"{'Workload':>16s}"] +
+                           [f"{METHOD_LABELS[m]:>18s}" for m in METHODS] +
+                           [f"{'Original':>12s}"]))
+    for wname, r in results.items():
+        cells = [f"{wname:>16s}"]
+        for m in METHODS:
+            lats = [p.get("latency_s", 0.0) for p in r[m]["plans"]]
+            if not lats:
+                cells.append(f"{'-':>18s}")
+                continue
+            mu = statistics.mean(lats)
+            best = best_plan(r[m]).get("latency_s", 0.0)
+            cells.append(f"{mu:8.1f} ({best:6.1f})")
+        orig = r["original"]["plans"][0].get("latency_s", 0.0)
+        cells.append(f"{orig:>12.1f}")
+        print("  " + "  ".join(f"{c:>18s}" for c in cells[1:-1]).join(
+            [cells[0] + "  ", "  " + cells[-1]]))
+    return True

@@ -1,0 +1,23 @@
+"""Table 9: optimization cost ($, simulated tokens) and latency."""
+
+from __future__ import annotations
+
+from benchmarks.common import METHOD_LABELS, METHODS, load_or_run
+
+
+def run(seed: int = 0, results=None):
+    results = results or load_or_run(seed)
+    print("\n== Table 9: optimization overhead ==")
+    print("  " + "  ".join([f"{'Workload':>16s}"] +
+                           [f"{METHOD_LABELS[m]:>14s}" for m in METHODS]))
+    rows = []
+    for wname, r in results.items():
+        cells = [f"{wname:>16s}"]
+        row = {"workload": wname}
+        for m in METHODS:
+            cost = r[m].get("opt_cost", 0.0)
+            cells.append(f"${cost:>8.4f}")
+            row[m] = cost
+        print("  " + "  ".join(f"{c:>14s}" for c in cells))
+        rows.append(row)
+    return rows

@@ -1,0 +1,42 @@
+"""Head-to-head: MOAR vs the four baseline optimizers on one workload.
+
+  PYTHONPATH=src python examples/compare_optimizers.py [workload]
+"""
+
+import sys
+
+from repro.baselines import OPTIMIZERS
+from repro.core.search import MOARSearch
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.workloads import WORKLOADS
+
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "blackvault"
+    w = WORKLOADS[name]()
+    backend = SimBackend(seed=0, domain=w.domain)
+    executor = Executor(backend)
+
+    def test_acc(pipeline):
+        out, stats = executor.run(pipeline, w.test)
+        return w.score(out, w.test), stats.cost
+
+    print(f"workload: {name} | budget: 40 evaluations each")
+    res = MOARSearch(w, backend, budget=40, seed=0).run()
+    acc, cost = test_acc(res.best().pipeline)
+    print(f"  {'MOAR':>12s}: best test acc {acc:.3f} (${cost:.4f}), "
+          f"frontier size {len(res.frontier)}")
+
+    for oname, cls in OPTIMIZERS.items():
+        r = cls(w, backend, budget=40, seed=0).optimize()
+        if not r.frontier:
+            continue
+        best = max(r.frontier, key=lambda p: p.acc)
+        acc, cost = test_acc(best.pipeline)
+        print(f"  {oname:>12s}: best test acc {acc:.3f} (${cost:.4f}), "
+              f"returned {len(r.frontier)} plan(s)")
+
+
+if __name__ == "__main__":
+    main()

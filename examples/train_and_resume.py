@@ -1,0 +1,47 @@
+"""End-to-end training driver with fault-tolerant restart.
+
+Trains a reduced llama3.2-1b for a few hundred steps on the synthetic
+corpus, kills the run halfway (simulated node failure), and auto-resumes
+from the latest committed checkpoint — final weights are bit-identical to
+an uninterrupted run because the loader is a pure function of the step.
+
+  PYTHONPATH=src python examples/train_and_resume.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.launch.train import train
+
+
+def main():
+    steps = 200
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        print("== uninterrupted reference run ==")
+        p_ref, _, hist_ref, _ = train(
+            "llama3.2-1b", reduced=True, steps=steps, global_batch=8,
+            seq_len=128, ckpt_dir=None, log_every=50)
+
+        print("\n== run that 'crashes' at step 100 ==")
+        train("llama3.2-1b", reduced=True, steps=100, global_batch=8,
+              seq_len=128, ckpt_dir=ckpt_dir, ckpt_every=50, log_every=50)
+
+        print("\n== restart: auto-resume from latest checkpoint ==")
+        p_res, _, hist_res, watchdog = train(
+            "llama3.2-1b", reduced=True, steps=steps, global_batch=8,
+            seq_len=128, ckpt_dir=ckpt_dir, ckpt_every=100, log_every=50)
+
+    diffs = [float(np.max(np.abs(np.asarray(a, np.float32)
+                                 - np.asarray(b, np.float32))))
+             for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                             jax.tree_util.tree_leaves(p_res))]
+    print(f"\nloss: {hist_ref[0]:.3f} -> {hist_ref[-1]:.3f} (reference), "
+          f"resumed run final {hist_res[-1]:.3f}")
+    print(f"max param divergence after resume: {max(diffs):.2e}")
+    print(f"straggler watchdog flags: {len(watchdog.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

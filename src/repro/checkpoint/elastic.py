@@ -1,0 +1,51 @@
+"""Elastic rescaling + failure recovery on top of CheckpointManager.
+
+Checkpoints store logical (unsharded) arrays, so a run that started on a
+2x16x16 multi-pod mesh can resume on a single 16x16 pod (or vice versa):
+``reshard`` places every leaf according to the *new* mesh's sharding rules.
+
+``recover_or_init`` is the launcher's entry point: scan the checkpoint
+directory for the newest committed step (torn writes are invisible thanks
+to the COMMITTED marker + atomic rename), reshard onto the current mesh,
+and fall back to fresh initialization when nothing is recoverable.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def reshard(tree, sharding_tree):
+    """Place logical arrays onto devices per a matching sharding pytree.
+
+    sharding_tree may be a single sharding (applied to every leaf) or a
+    pytree of shardings congruent with ``tree``.
+    """
+    if not isinstance(sharding_tree, (dict, list, tuple)):
+        return jax.tree.map(lambda x: jax.device_put(x, sharding_tree), tree)
+    return jax.tree.map(jax.device_put, tree, sharding_tree)
+
+
+def recover_or_init(
+    manager: CheckpointManager,
+    init_fn: Callable[[], Dict[str, Any]],
+    *,
+    like: Optional[Dict[str, Any]] = None,
+    shardings: Optional[Dict[str, Any]] = None,
+) -> Tuple[Dict[str, Any], Dict[str, Any], bool]:
+    """Returns (trees, metadata, resumed)."""
+    step = manager.latest_step()
+    if step is None:
+        trees = init_fn()
+        return trees, {"step": 0}, False
+    like = like if like is not None else init_fn()
+    trees, metadata = manager.load(step, like=like)
+    if shardings:
+        trees = {k: reshard(v, shardings[k]) if k in shardings else v
+                 for k, v in trees.items()}
+    return trees, metadata, True

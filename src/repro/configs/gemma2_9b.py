@@ -1,0 +1,27 @@
+"""gemma2-9b — 42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.
+Alternating local(4096-window)/global attention, attn softcap 50, final
+logit softcap 30, post-norms, scaled embeddings, head_dim 256.
+[arXiv:2408.00118]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    attn_pattern="local_global",
+    local_global_ratio=(1, 1),
+    local_window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_norms=True,
+    scale_embeddings=True,
+    tie_embeddings=True,
+)

@@ -1,0 +1,26 @@
+"""gemma3-27b — 62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+5:1 local:global (window 1024), qk-norm, 128k+ context. head_dim 128 per the
+released model. [hf:google/gemma-3-27b-pt family]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    attn_pattern="local_global",
+    local_global_ratio=(5, 1),
+    local_window=1024,
+    qk_norm=True,
+    post_norms=True,
+    scale_embeddings=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+)

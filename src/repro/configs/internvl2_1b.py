@@ -1,0 +1,22 @@
+"""internvl2-1b — 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+InternViT frontend is a STUB: inputs include precomputed patch embeddings
+(B, 256, 1024) projected into the LM. [arXiv:2404.16821]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    num_patches=256,
+    vit_dim=1024,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+)

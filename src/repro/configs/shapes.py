@@ -1,0 +1,63 @@
+"""Assigned input-shape cells and per-arch applicability.
+
+Four LM shapes (seq_len x global_batch):
+  train_4k     4,096 x 256   -> lowers train_step
+  prefill_32k  32,768 x 32   -> lowers prefill (inference)
+  decode_32k   32,768 x 128  -> lowers serve_step (1 new token, 32k KV cache)
+  long_500k    524,288 x 1   -> lowers serve_step; sub-quadratic archs only
+
+``long_500k`` runs for SSM/hybrid archs (state-space decode is O(1)/token)
+and for the gemma local:global family (sliding-window layers carry
+ring-buffer caches; only the sparse global layers hold the 500k cache). It
+is SKIPPED for pure full-attention archs — see DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+SHAPE_NAMES = list(SHAPES.keys())
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell is runnable; else why it is skipped."""
+    spec = SHAPES[shape_name]
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k-token decode requires "
+                "sub-quadratic attention (per assignment)")
+    return None
+
+
+def runnable_cells(cfg: ModelConfig) -> List[str]:
+    return [s for s in SHAPE_NAMES if skip_reason(cfg, s) is None]
+
+
+def all_cells(archs: List[ModelConfig]) -> List[Tuple[str, str]]:
+    """Every (arch, shape) pair including skipped ones (callers filter)."""
+    return [(c.name, s) for c in archs for s in SHAPE_NAMES]
+
+
+def cache_len_for(cfg: ModelConfig, spec: ShapeSpec) -> int:
+    """Decode cache capacity: the assigned seq_len plus a small headroom,
+    rounded up to a 128 multiple for TPU-friendly tiling."""
+    extra = 128
+    return ((spec.seq_len + extra + 127) // 128) * 128

@@ -1,0 +1,20 @@
+"""whisper-medium — enc-dec, 24+24L d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865. Conv audio frontend is a STUB: inputs are precomputed frame
+embeddings (B, 1500, 1024). [arXiv:2212.04356]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,          # decoder layers
+    encoder_layers=24,
+    encoder_seq_len=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    tie_embeddings=True,
+)

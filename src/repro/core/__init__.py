@@ -1,0 +1,8 @@
+# MOAR — Multi-Objective Agentic Rewrites (the paper's contribution).
+#
+# directives.py : 32-directive rewrite library (Table 2 + DocETL-V1)
+# agent.py      : deterministic agent policy w/ progressive disclosure
+# search.py     : UCT global search w/ progressive widening (Alg. 1-3)
+# pareto.py     : Pareto sets + marginal-accuracy-contribution reward
+# cost_model.py : pipeline cost estimation against the model catalog
+# models_catalog.py : the 10 assigned archs as the model pool M

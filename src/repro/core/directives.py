@@ -1,0 +1,1282 @@
+"""MOAR rewrite-directive library (paper §3, Table 2 + appendix B).
+
+31 directives: the 18 new MOAR directives (fusion & reordering 5, code
+synthesis 4, data decomposition 3, projection synthesis 2, LLM-centric 4)
+plus 13 DocETL-V1 directives. Each directive is a class carrying the
+progressive-disclosure documentation (name/description/use_case shown at
+stage 1; instantiation schema + example loaded at stage 2), an LHS matcher
+(``targets``), an agent-driven ``instantiate`` (returns k>=1 candidate
+parameter sets; parameter-sensitive directives marked ``param_sensitive``
+return several and the evaluator keeps the most accurate — Alg. 3), and a
+pure ``apply`` that produces the rewritten pipeline config.
+
+Instantiation receives an AgentContext (core/agent.py) whose helpers mirror
+what the paper's gpt-5 agent does with its ``read_next_doc`` tool: scan
+sample documents to discover surface patterns (canonical ``[tag]`` markers,
+paraphrase ``(alt-tag)`` variants), consult model/directive statistics, and
+choose models by objective.
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.engine.operators import (LLM_TYPES, OpConfig, PipelineConfig,
+                                    clone_pipeline, validate_pipeline)
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Target:
+    start: int
+    end: int  # exclusive
+
+    def ops(self, pipeline) -> List[OpConfig]:
+        return pipeline["operators"][self.start:self.end]
+
+
+def _replace(pipeline: PipelineConfig, target: Target,
+             new_ops: List[OpConfig]) -> PipelineConfig:
+    p = clone_pipeline(pipeline)
+    p["operators"][target.start:target.end] = new_ops
+    return p
+
+
+def _is_extract_map(op: OpConfig) -> bool:
+    return (op["type"] == "map" and bool(op.get("task_tags"))
+            and not op.get("classify") and not op.get("summarize")
+            and not op.get("format_field"))
+
+
+def _text_source_ops(pipeline) -> List[int]:
+    """Indices of semantic ops that read document text (compressible)."""
+    out = []
+    for i, op in enumerate(pipeline["operators"]):
+        if op["type"] in ("map", "filter", "extract") and \
+                op["type"] in LLM_TYPES and not op.get("format_field"):
+            out.append(i)
+    return out
+
+
+class Directive:
+    name: str = ""
+    category: str = ""
+    description: str = ""
+    use_case: str = ""
+    schema: Dict[str, str] = {}
+    example: Dict[str, Any] = {}
+    param_sensitive: bool = False
+    new_in_moar: bool = True
+    kind: str = "other"  # "chaining" | "fusion" | "compression" | "model" | ...
+
+    def targets(self, pipeline: PipelineConfig) -> List[Target]:
+        raise NotImplementedError
+
+    def instantiate(self, ctx, pipeline, target: Target) -> List[Params]:
+        raise NotImplementedError
+
+    def apply(self, pipeline, target: Target, params: Params) -> PipelineConfig:
+        raise NotImplementedError
+
+    def validate_params(self, params: Params) -> Optional[str]:
+        for key in self.schema:
+            if key not in params:
+                return f"missing parameter {key!r}"
+        return None
+
+    def stage1_doc(self) -> str:
+        return f"{self.name} [{self.category}]: {self.description} " \
+               f"Use when: {self.use_case}"
+
+    def stage2_doc(self) -> str:
+        return (f"{self.name}\nschema: {self.schema}\n"
+                f"example: {self.example}")
+
+
+# ===========================================================================
+# Fusion & Reordering (new in MOAR)
+# ===========================================================================
+
+
+class SameTypeFusion(Directive):
+    name = "same_type_fusion"
+    category = "fusion_reordering"
+    kind = "fusion"
+    description = "Fuse two adjacent same-type operators (map-map, " \
+                  "filter-filter) into one operator with merged prompts/schemas."
+    use_case = "Two adjacent LLM ops of the same type each pay a per-call " \
+               "cost; fusing halves LLM calls at slightly higher task complexity."
+    schema = {"merged_prompt": "str"}
+    example = {"before": "map(a) -> map(b)", "after": "map(a+b)"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i in range(len(ops) - 1):
+            a, b = ops[i], ops[i + 1]
+            if a["type"] == b["type"] == "map" and _is_extract_map(a) \
+                    and _is_extract_map(b):
+                out.append(Target(i, i + 2))
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        a, b = target.ops(pipeline)
+        return [{"merged_prompt": f"{a.get('prompt','')} AND {b.get('prompt','')}"}]
+
+    def apply(self, pipeline, target, params):
+        a, b = target.ops(pipeline)
+        fused = copy.deepcopy(a)
+        fused["name"] = f"{a['name']}_x_{b['name']}"
+        fused["prompt"] = params["merged_prompt"]
+        fused["task_tags"] = list(dict.fromkeys(
+            a.get("task_tags", []) + b.get("task_tags", [])))
+        fused["output_schema"] = {**a.get("output_schema", {}),
+                                  **b.get("output_schema", {})}
+        return _replace(pipeline, target, [fused])
+
+
+class MapReduceFusion(Directive):
+    name = "map_reduce_fusion"
+    category = "fusion_reordering"
+    kind = "fusion"
+    description = "Fold a map into the downstream reduce: one aggregation " \
+                  "call both extracts and aggregates."
+    use_case = "When the map's outputs exist only to feed the reduce and " \
+               "the grouping keys don't come from the map."
+    schema = {"merged_prompt": "str"}
+    example = {"before": "map -> reduce(k)", "after": "reduce(k)"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i in range(len(ops) - 1):
+            a, b = ops[i], ops[i + 1]
+            if a["type"] == "map" and b["type"] == "reduce" and \
+                    _is_extract_map(a) and \
+                    b.get("reduce_key") not in (a.get("output_schema") or {}):
+                out.append(Target(i, i + 2))
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        a, b = target.ops(pipeline)
+        return [{"merged_prompt": f"{a.get('prompt','')} THEN {b.get('prompt','')}"}]
+
+    def apply(self, pipeline, target, params):
+        a, b = target.ops(pipeline)
+        fused = copy.deepcopy(b)
+        fused["name"] = f"{a['name']}_into_{b['name']}"
+        fused["prompt"] = params["merged_prompt"]
+        fused["task_tags"] = list(dict.fromkeys(
+            a.get("task_tags", []) + b.get("task_tags", [])))
+        fused.pop("aggregate_field", None)  # re-analyzes raw group text
+        return _replace(pipeline, target, [fused])
+
+
+class MapFilterFusion(Directive):
+    name = "map_filter_fusion"
+    category = "fusion_reordering"
+    kind = "fusion"
+    description = "Fuse map -> filter into a single map that also emits a " \
+                  "boolean keep-flag, followed by a zero-cost code_filter."
+    use_case = "Eliminates one LLM call per document when a filter " \
+               "directly follows a map."
+    schema = {"flag_field": "str"}
+    example = {"before": "map -> filter", "after": "map(+flag) -> code_filter"}
+    _order = ("map", "filter")
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        first, second = self._order
+        out = []
+        for i in range(len(ops) - 1):
+            a, b = ops[i], ops[i + 1]
+            if a["type"] == first and b["type"] == second:
+                m = a if first == "map" else b
+                if not m.get("classify") and not m.get("summarize"):
+                    out.append(Target(i, i + 2))
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"flag_field": "keep_flag"}]
+
+    def apply(self, pipeline, target, params):
+        a, b = target.ops(pipeline)
+        m = a if a["type"] == "map" else b
+        f = b if a["type"] == "map" else a
+        fused = copy.deepcopy(m)
+        fused["name"] = f"{m['name']}_w_{f['name']}"
+        fused["emit_filter_flag"] = {
+            "field": params["flag_field"],
+            "tag": f.get("filter_tag", ""),
+            "truth_field": f.get("filter_truth_field", "_keep"),
+        }
+        fused["output_schema"] = {**m.get("output_schema", {}),
+                                  params["flag_field"]: "bool"}
+        code_filter = {
+            "name": f"drop_{f['name']}",
+            "type": "code_filter",
+            "code": {"kind": "drop_if_false", "field": params["flag_field"]},
+        }
+        return _replace(pipeline, target, [fused, code_filter])
+
+
+class FilterMapFusion(MapFilterFusion):
+    name = "filter_map_fusion"
+    description = "Fuse filter -> map into a single map emitting the " \
+                  "filter flag, followed by a code_filter."
+    use_case = "Saves the dedicated filter call; NOT beneficial when the " \
+               "filter is very selective (the map then sees every document)."
+    _order = ("filter", "map")
+
+
+class Reordering(Directive):
+    name = "reordering"
+    category = "fusion_reordering"
+    kind = "reorder"
+    description = "Swap two adjacent commuting operators so the cheaper/" \
+                  "more selective one runs first."
+    use_case = "A selective filter after an expensive map should usually " \
+               "run before it."
+    schema = {"confirm_independent": "bool"}
+    example = {"before": "map -> filter", "after": "filter -> map"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i in range(len(ops) - 1):
+            a, b = ops[i], ops[i + 1]
+            if b["type"] in ("filter", "code_filter") and \
+                    a["type"] in ("map", "extract") and \
+                    not self._depends(b, a):
+                out.append(Target(i, i + 2))
+        return out
+
+    @staticmethod
+    def _depends(b, a) -> bool:
+        produced = set((a.get("output_schema") or {}).keys())
+        flag = (b.get("code") or {}).get("field")
+        needs = set(b.get("requires", []))
+        if flag:
+            needs.add(flag)
+        return bool(needs & produced)
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"confirm_independent": True}]
+
+    def apply(self, pipeline, target, params):
+        a, b = target.ops(pipeline)
+        return _replace(pipeline, target, [copy.deepcopy(b), copy.deepcopy(a)])
+
+
+# ===========================================================================
+# Code Synthesis (new in MOAR)
+# ===========================================================================
+
+
+class CodeSubstitution(Directive):
+    name = "code_substitution"
+    category = "code_synthesis"
+    kind = "code"
+    description = "Replace an LLM-powered operator with synthesized code " \
+                  "(regex/keyword matching) producing the same schema."
+    use_case = "When target content is identifiable by surface patterns; " \
+               "eliminates LLM cost entirely but misses paraphrases."
+    schema = {"patterns": "list[str]"}
+    example = {"before": "map(extract X)", "after": "code_map(regex X)"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i, op in enumerate(ops):
+            if _is_extract_map(op):
+                out.append(Target(i, i + 1))
+            elif op["type"] == "filter" and op.get("filter_tag"):
+                out.append(Target(i, i + 1))
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        tags = op.get("task_tags") or [op.get("filter_tag")]
+        kws = ctx.keywords_for_tags(tags, include_alt=False)
+        return [{"patterns": kws}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        if op["type"] == "map":
+            out_field = next(iter(op.get("output_schema", {})), "extractions")
+            new = {
+                "name": f"code_{op['name']}",
+                "type": "code_map",
+                "code": {"kind": "keyword_facts",
+                         "tags": op.get("task_tags", []),
+                         "output_field": out_field},
+                "output_schema": op.get("output_schema", {}),
+            }
+        else:
+            new = {
+                "name": f"code_{op['name']}",
+                "type": "code_filter",
+                "code": {"kind": "keyword_filter",
+                         "keywords": params["patterns"], "min_hits": 1},
+            }
+        return _replace(pipeline, target, [new])
+
+
+class CodeSubReduce(Directive):
+    name = "code_sub_reduce"
+    category = "code_synthesis"
+    kind = "code"
+    description = "Split a reduce into code-based aggregation plus a small " \
+                  "LLM map that formats the aggregate."
+    use_case = "When the reduce mostly collects/counts and only the final " \
+               "narrative needs an LLM."
+    schema = {"aggregate_field": "str"}
+    example = {"before": "reduce", "after": "code_reduce -> map(format)"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        return [Target(i, i + 1) for i, op in enumerate(ops)
+                if op["type"] == "reduce" and op.get("aggregate_field")]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        return [{"aggregate_field": op["aggregate_field"]}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        fld = params["aggregate_field"]
+        out_field = next(iter(op.get("output_schema", {})), "aggregated")
+        code_reduce = {
+            "name": f"code_{op['name']}",
+            "type": "code_reduce",
+            "reduce_key": op["reduce_key"],
+            "restore_id": op.get("restore_id", False),
+            "code": {"kind": "concat_group", "field": fld, "limit": 500},
+        }
+        fmt_map = {
+            "name": f"format_{op['name']}",
+            "type": "map",
+            "prompt": f"Format the aggregated {fld} into: {op.get('prompt','')}",
+            "format_field": f"{fld}_all",
+            "output_schema": {out_field: "list"},
+            "model": op["model"],
+        }
+        return _replace(pipeline, target, [code_reduce, fmt_map])
+
+
+class DocCompressionCode(Directive):
+    name = "doc_compression_code"
+    category = "code_synthesis"
+    kind = "compression"
+    description = "Insert a zero-cost code_map that keeps only pattern-" \
+                  "matching portions of each document before the LLM op."
+    use_case = "Long documents where relevant content carries distinctive " \
+               "keywords; cuts downstream tokens sharply."
+    schema = {"keywords": "list[str]", "window": "int"}
+    example = {"before": "map(long doc)", "after": "code_map(keep matches) -> map"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i in _text_source_ops(pipeline)]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        tags = op.get("task_tags") or ([op.get("filter_tag")]
+                                       if op.get("filter_tag") else [])
+        if not tags:
+            tags = ctx.workload_tags
+        strict = ctx.keywords_for_tags(tags, include_alt=False)
+        broad = ctx.keywords_for_tags(tags, include_alt=True)
+        return [
+            {"keywords": strict, "window": 0, "_variant": "precision"},
+            {"keywords": broad, "window": 1, "_variant": "recall"},
+        ]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        code_map = {
+            "name": f"compress_{op['name']}_{params.get('_variant','p')}",
+            "type": "code_map",
+            "code": {"kind": "keyword_extract",
+                     "keywords": params["keywords"],
+                     "window": params["window"]},
+        }
+        return _replace(pipeline, target, [code_map, copy.deepcopy(op)])
+
+
+class HeadTailCompression(Directive):
+    name = "head_tail_compression"
+    category = "code_synthesis"
+    kind = "compression"
+    description = "Keep only the first h and last t words of each document " \
+                  "via a synthesized code_map."
+    use_case = "Key information at document boundaries (abstract, " \
+               "conclusion, headers)."
+    schema = {"head": "int", "tail": "int"}
+    example = {"before": "map(doc)", "after": "code_map(head/tail) -> map"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i in _text_source_ops(pipeline)]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"head": 150, "tail": 75, "_variant": "lean"},
+                {"head": 400, "tail": 200, "_variant": "broad"}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        code_map = {
+            "name": f"headtail_{op['name']}_{params.get('_variant','l')}",
+            "type": "code_map",
+            "code": {"kind": "head_tail", "head": params["head"],
+                     "tail": params["tail"]},
+        }
+        return _replace(pipeline, target, [code_map, copy.deepcopy(op)])
+
+
+# ===========================================================================
+# Data Decomposition (MOAR additions)
+# ===========================================================================
+
+
+class ChunkSampling(Directive):
+    name = "chunk_sampling"
+    category = "data_decomposition"
+    kind = "sampling"
+    description = "After split->gather, sample only the most relevant " \
+                  "chunks (BM25/embedding/random) before the map."
+    use_case = "Documents whose chunks are mostly irrelevant to the task."
+    schema = {"method": "str", "size": "int", "query_keywords": "list[str]"}
+    example = {"before": "split -> gather -> map -> reduce",
+               "after": "split -> gather -> sample -> map -> reduce"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i in range(len(ops) - 3):
+            kinds = [o["type"] for o in ops[i:i + 4]]
+            if kinds == ["split", "gather", "map", "reduce"]:
+                out.append(Target(i + 2, i + 2))  # insertion point
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        tags = ctx.workload_tags
+        strict = ctx.keywords_for_tags(tags, include_alt=False, bare=True)
+        return [
+            {"method": "bm25", "size": 3, "query_keywords": strict,
+             "_variant": "precision"},
+            {"method": "embedding", "size": 5, "query_keywords": strict,
+             "_variant": "recall"},
+        ]
+
+    def apply(self, pipeline, target, params):
+        sample = {
+            "name": f"sample_chunks_{params.get('_variant','p')}",
+            "type": "sample",
+            "method": params["method"],
+            "size": params["size"],
+            "group_key": "_parent_id",
+            "query_keywords": params["query_keywords"],
+        }
+        p = clone_pipeline(pipeline)
+        p["operators"].insert(target.start, sample)
+        return p
+
+
+class DocSampling(Directive):
+    name = "doc_sampling"
+    category = "data_decomposition"
+    kind = "sampling"
+    description = "Sample a subset of documents within each group before " \
+                  "a reduce."
+    use_case = "Groups with many redundant/low-signal documents feeding an " \
+               "aggregation."
+    schema = {"method": "str", "size": "int", "query_keywords": "list[str]"}
+    example = {"before": "reduce(k)", "after": "sample(k) -> reduce(k)"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        return [Target(i, i + 1) for i, op in enumerate(ops)
+                if op["type"] == "reduce" and op.get("reduce_key") != "_parent_id"]
+
+    def instantiate(self, ctx, pipeline, target):
+        tags = ctx.workload_tags
+        strict = ctx.keywords_for_tags(tags, include_alt=False, bare=True)
+        return [
+            {"method": "bm25", "size": 8, "query_keywords": strict,
+             "_variant": "precision"},
+            {"method": "embedding", "size": 20, "query_keywords": strict,
+             "_variant": "recall"},
+        ]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        sample = {
+            "name": f"sample_docs_{params.get('_variant','p')}",
+            "type": "sample",
+            "method": params["method"],
+            "size": params["size"],
+            "group_key": op.get("reduce_key") if op.get("reduce_key") != "_all"
+            else None,
+            "query_keywords": params["query_keywords"],
+        }
+        if sample["group_key"] is None:
+            sample.pop("group_key")
+        return _replace(pipeline, target, [sample, copy.deepcopy(op)])
+
+
+class CascadeFiltering(Directive):
+    name = "cascade_filtering"
+    category = "data_decomposition"
+    kind = "cascade"
+    description = "Insert cheaper high-recall pre-filters (code, then a " \
+                  "cheap-model filter) before an expensive filter."
+    use_case = "Expensive filters over large collections where obvious " \
+               "negatives can be eliminated cheaply."
+    schema = {"keywords": "list[str]", "cheap_model": "str"}
+    example = {"before": "filter", "after": "code_filter -> filter(cheap) -> filter"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        return [Target(i, i + 1) for i, op in enumerate(ops)
+                if op["type"] == "filter"]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        tags = [op["filter_tag"]] if op.get("filter_tag") else ctx.workload_tags
+        broad = ctx.keywords_for_tags(tags, include_alt=True)
+        cheap = ctx.cheapest_model()
+        return [
+            {"keywords": broad, "cheap_model": cheap, "_variant": "code+llm"},
+            {"keywords": broad, "cheap_model": "", "_variant": "code_only"},
+        ]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        new_ops: List[OpConfig] = [{
+            "name": f"prefilter_code_{op['name']}",
+            "type": "code_filter",
+            "code": {"kind": "keyword_filter", "keywords": params["keywords"],
+                     "min_hits": 1},
+        }]
+        if params.get("cheap_model"):
+            pre = copy.deepcopy(op)
+            pre["name"] = f"prefilter_llm_{op['name']}"
+            pre["model"] = params["cheap_model"]
+            pre["bias_recall"] = True
+            new_ops.append(pre)
+        new_ops.append(copy.deepcopy(op))
+        return _replace(pipeline, target, new_ops)
+
+
+# ===========================================================================
+# Projection Synthesis (MOAR additions)
+# ===========================================================================
+
+
+class DocSummarization(Directive):
+    name = "doc_summarization"
+    category = "projection_synthesis"
+    kind = "compression"
+    description = "Insert an LLM map that summarizes each document; " \
+                  "downstream ops read the (canonicalized) summary."
+    use_case = "Long noisy documents; summaries also normalize paraphrases " \
+               "so later code ops match more."
+    schema = {"summary_model": "str"}
+    example = {"before": "op(doc)", "after": "map(summarize) -> op(summary)"}
+
+    def targets(self, pipeline):
+        idxs = _text_source_ops(pipeline)
+        return [Target(i, i + 1) for i in idxs]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"summary_model": ctx.summarizer_model()}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        summ = {
+            "name": f"summarize_{op['name']}",
+            "type": "map",
+            "summarize": True,
+            "prompt": "Summarize the document, preserving every task-"
+                      "relevant finding.",
+            "output_schema": {"summary": "str"},
+            "model": params["summary_model"],
+        }
+        return _replace(pipeline, target, [summ, copy.deepcopy(op)])
+
+
+class DocCompressionLLM(Directive):
+    name = "doc_compression_llm"
+    category = "projection_synthesis"
+    kind = "compression"
+    description = "Insert an extract operator: the LLM returns relevant " \
+                  "line ranges; only those lines are kept (exact subset)."
+    use_case = "Cheaper than summarization (output = line numbers); keeps " \
+               "original wording for downstream extraction."
+    schema = {"extract_model": "str"}
+    example = {"before": "op(doc)", "after": "extract -> op(subset)"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i in _text_source_ops(pipeline)]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"extract_model": ctx.summarizer_model()}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        ext = {
+            "name": f"extract_for_{op['name']}",
+            "type": "extract",
+            "prompt": "Return the line ranges relevant to the task.",
+            "task_tags": op.get("task_tags", []),
+            "model": params["extract_model"],
+        }
+        return _replace(pipeline, target, [ext, copy.deepcopy(op)])
+
+
+# ===========================================================================
+# LLM-centric (MOAR additions)
+# ===========================================================================
+
+
+class ModelSubstitution(Directive):
+    name = "model_substitution"
+    category = "llm_centric"
+    kind = "model"
+    description = "Swap the model executing an operator for another pool " \
+                  "member."
+    use_case = "Cheaper models for easy/short ops; stronger or longer-" \
+               "context models for hard/long ops."
+    schema = {"model": "str"}
+    example = {"before": "map[m1]", "after": "map[m2]"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] in LLM_TYPES and op.get("model")]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        return [{"model": ctx.pick_model(op)}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        op["model"] = params["model"]
+        return _replace(pipeline, target, [op])
+
+
+class ClarifyInstructions(Directive):
+    name = "clarify_instructions"
+    category = "llm_centric"
+    kind = "prompt"
+    description = "Rewrite the prompt to be more specific/detailed, " \
+                  "reducing ambiguity."
+    use_case = "Cheap models misreading broad instructions; the strong " \
+               "agent encodes its reasoning into the prompt."
+    schema = {"clarified_prompt": "str", "style": "str"}
+    example = {"before": "map(vague)", "after": "map(specific)"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] in LLM_TYPES and op.get("prompt")
+                and (op.get("prompt_features", {}).get("clarified", 0) < 2)]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        base = op.get("prompt", "")
+        return [
+            {"clarified_prompt": base + " [clarified: enumerate criteria "
+             "(i)..(n); include every qualifying span]", "style": "criteria"},
+            {"clarified_prompt": base + " [clarified: worked definitions "
+             "with inclusion and exclusion rules]", "style": "definitions"},
+        ]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        feats = dict(op.get("prompt_features", {}))
+        feats["clarified"] = feats.get("clarified", 0) + 1
+        feats["clarify_style"] = params.get("style", "criteria")
+        op["prompt_features"] = feats
+        op["prompt"] = params["clarified_prompt"]
+        return _replace(pipeline, target, [op])
+
+
+class FewShotExamples(Directive):
+    name = "few_shot_examples"
+    category = "llm_centric"
+    kind = "prompt"
+    description = "Embed input->output examples (synthesized from sample " \
+                  "docs) into the prompt."
+    use_case = "Standard accuracy lift, at the cost of a longer prompt on " \
+               "every call."
+    schema = {"n_examples": "int"}
+    example = {"before": "map(p)", "after": "map(p + 2 examples)"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] in LLM_TYPES and op.get("prompt")
+                and not op.get("prompt_features", {}).get("few_shot")]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"n_examples": 2}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        feats = dict(op.get("prompt_features", {}))
+        feats["few_shot"] = params["n_examples"]
+        op["prompt_features"] = feats
+        return _replace(pipeline, target, [op])
+
+
+class ArbitraryRewrite(Directive):
+    name = "arbitrary_rewrite"
+    category = "llm_centric"
+    kind = "arbitrary"
+    description = "Free-form pipeline edit proposed by the agent (search-" \
+                  "and-replace over the config), validated before use."
+    use_case = "Transformations outside every structured directive."
+    schema = {"edit": "str"}
+    example = {"before": "any", "after": "any (validated)"}
+
+    def targets(self, pipeline):
+        return [Target(0, len(pipeline["operators"]))]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"edit": ctx.propose_freeform_edit(pipeline)}]
+
+    def apply(self, pipeline, target, params):
+        # the context encodes the edit as a micro-op understood here
+        import json
+        edit = json.loads(params["edit"])
+        p = clone_pipeline(pipeline)
+        ops = p["operators"]
+        kind = edit["kind"]
+        if kind == "swap_model":
+            ops[edit["index"] % len(ops)]["model"] = edit["model"]
+        elif kind == "lean_output":
+            ops[edit["index"] % len(ops)]["lean_output"] = True
+        elif kind == "add_gleaning":
+            op = ops[edit["index"] % len(ops)]
+            feats = dict(op.get("prompt_features", {}))
+            feats["gleaning"] = min(feats.get("gleaning", 0) + 1, 2)
+            op["prompt_features"] = feats
+        elif kind == "drop_op":
+            if len(ops) > 1:
+                ops.pop(edit["index"] % len(ops))
+        validate_pipeline(p)
+        return p
+
+
+# ===========================================================================
+# DocETL-V1 directives (the original 13)
+# ===========================================================================
+
+
+class DocChunking(Directive):
+    """V1's flagship: map => split -> gather -> map' -> reduce."""
+    name = "doc_chunking"
+    category = "data_decomposition"
+    kind = "chaining"
+    new_in_moar = False
+    description = "Split long documents into chunks with gathered context, " \
+                  "map per chunk, and merge chunk results per document."
+    use_case = "Documents longer than the model handles accurately."
+    schema = {"chunk_size": "int"}
+    example = {"before": "map(doc)", "after": "split->gather->map->reduce"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if _is_extract_map(op)]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"chunk_size": 200}, {"chunk_size": 400}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        out_field = next(iter(op.get("output_schema", {})), "extractions")
+        size = params["chunk_size"]
+        mapped = copy.deepcopy(op)
+        mapped["name"] = f"{op['name']}_chunked"
+        mapped["prompt"] = f"(per-chunk) {op.get('prompt','')}"
+        new_ops = [
+            {"name": f"split_{op['name']}_{size}", "type": "split",
+             "chunk_size": size},
+            {"name": f"gather_{op['name']}", "type": "gather",
+             "prev": 1, "next": 0},
+            mapped,
+            {"name": f"merge_{op['name']}", "type": "reduce",
+             "reduce_key": "_parent_id", "restore_id": True,
+             "aggregate_field": out_field,
+             "prompt": "Merge and deduplicate chunk-level results.",
+             "output_schema": {out_field: "list"},
+             "model": op["model"]},
+        ]
+        return _replace(pipeline, target, new_ops)
+
+
+class GatherWidening(Directive):
+    name = "gather_widening"
+    category = "data_decomposition"
+    kind = "tuning"
+    new_in_moar = False
+    description = "Widen the peripheral context attached to each chunk."
+    use_case = "Chunk-level results missing cross-chunk context."
+    schema = {"prev": "int", "next": "int"}
+    example = {"before": "gather(1,0)", "after": "gather(2,1)"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] == "gather" and op.get("prev", 1) < 3]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        return [{"prev": op.get("prev", 1) + 1, "next": op.get("next", 0) + 1}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        op.update(prev=params["prev"], next=params["next"])
+        return _replace(pipeline, target, [op])
+
+
+class MultiLevelReduce(Directive):
+    name = "multilevel_reduce"
+    category = "data_decomposition"
+    kind = "chaining"
+    new_in_moar = False
+    description = "Aggregate in two stages: sub-batches per group, then " \
+                  "across sub-batches."
+    use_case = "Reduces over groups too large for one aggregation call."
+    schema = {"buckets": "int"}
+    example = {"before": "reduce(k)", "after": "bucket->reduce(k,b)->reduce(k)"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] == "reduce" and op.get("reduce_key") != "_parent_id"
+                and not op.get("aggregate_field")]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"buckets": 4}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        key = op["reduce_key"]
+        out_field = next(iter(op.get("output_schema", {})), "aggregated")
+        fine = copy.deepcopy(op)
+        fine["name"] = f"{op['name']}_fine"
+        fine["reduce_key"] = "_bucket_key"
+        coarse = copy.deepcopy(op)
+        coarse["name"] = f"{op['name']}_coarse"
+        coarse["aggregate_field"] = out_field
+        new_ops = [
+            {"name": f"bucket_{op['name']}", "type": "code_map",
+             "code": {"kind": "assign_bucket", "buckets": params["buckets"],
+                      "group_field": key, "output_key": "_bucket_key"}},
+            fine,
+            {"name": f"rekey_{op['name']}", "type": "code_map",
+             "code": {"kind": "split_bucket_key", "output_key": key}},
+            coarse,
+        ]
+        return _replace(pipeline, target, new_ops)
+
+
+class TaskDecomposition(Directive):
+    name = "task_decomposition"
+    category = "projection_synthesis"
+    kind = "chaining"
+    new_in_moar = False
+    description = "Split a broad map into parallel maps over subsets of " \
+                  "task units, then merge outputs."
+    use_case = "Prompts asking for many categories at once (accuracy " \
+               "drops with breadth)."
+    schema = {"groups": "int"}
+    example = {"before": "map(41 types)", "after": "parallel_map(4x ~10) -> merge"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if _is_extract_map(op) and len(op.get("task_tags", [])) >= 6]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"groups": 4}, {"groups": 8}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        tags = op.get("task_tags", [])
+        g = max(2, min(params["groups"], len(tags)))
+        out_field = next(iter(op.get("output_schema", {})), "extractions")
+        size = -(-len(tags) // g)
+        prompts = []
+        part_fields = []
+        for i in range(g):
+            sub = tags[i * size:(i + 1) * size]
+            if not sub:
+                continue
+            fld = f"{out_field}_part{i}"
+            part_fields.append(fld)
+            prompts.append({
+                "prompt": f"{op.get('prompt','')} (only: {', '.join(sub)})",
+                "task_tags": sub,
+                "output_schema": {fld: "list"},
+            })
+        pmap = copy.deepcopy(op)
+        pmap["name"] = f"{op['name']}_parallel"
+        pmap["type"] = "parallel_map"
+        pmap["prompts"] = prompts
+        pmap.pop("task_tags", None)
+        merge = {
+            "name": f"merge_{op['name']}",
+            "type": "code_map",
+            "code": {"kind": "merge_lists", "fields": part_fields,
+                     "output_field": out_field},
+            "output_schema": {out_field: "list"},
+        }
+        return _replace(pipeline, target, [pmap, merge])
+
+
+class ProjectionChain(Directive):
+    name = "projection_chain"
+    category = "projection_synthesis"
+    kind = "chaining"
+    new_in_moar = False
+    description = "Chain an isolation step before the main op: first " \
+                  "narrow the input, then apply the task."
+    use_case = "Accuracy-oriented V1 projection synthesis."
+    schema = {"isolate_model": "str"}
+    example = {"before": "map(doc)", "after": "extract(same model) -> map"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i in _text_source_ops(pipeline)]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        return [{"isolate_model": op.get("model", ctx.default_model())}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        ext = {
+            "name": f"isolate_{op['name']}",
+            "type": "extract",
+            "prompt": "Keep only task-relevant passages.",
+            "task_tags": op.get("task_tags", []),
+            "model": params["isolate_model"],
+        }
+        return _replace(pipeline, target, [ext, copy.deepcopy(op)])
+
+
+class Gleaning(Directive):
+    name = "gleaning"
+    category = "llm_centric"
+    kind = "prompt"
+    new_in_moar = False
+    description = "Add a validator-feedback refinement round to an " \
+                  "operator (V1 gleaning)."
+    use_case = "Quality lift worth ~1.6x the operator's cost."
+    schema = {"rounds": "int"}
+    example = {"before": "map", "after": "map + validate/refine round"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] in LLM_TYPES and
+                op.get("prompt_features", {}).get("gleaning", 0) < 2]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"rounds": 1}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        feats = dict(op.get("prompt_features", {}))
+        feats["gleaning"] = feats.get("gleaning", 0) + params["rounds"]
+        op["prompt_features"] = feats
+        return _replace(pipeline, target, [op])
+
+
+class ResolveInsertion(Directive):
+    name = "resolve_insertion"
+    category = "data_decomposition"
+    kind = "tuning"
+    new_in_moar = False
+    description = "Canonicalize fuzzy key values (resolve) before a " \
+                  "grouping reduce."
+    use_case = "Group keys produced upstream may have near-duplicate " \
+               "variants splitting groups."
+    schema = {"resolve_field": "str"}
+    example = {"before": "map(k) -> reduce(k)", "after": "map -> resolve(k) -> reduce"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i in range(1, len(ops)):
+            if ops[i]["type"] == "reduce" and \
+                    ops[i].get("reduce_key") not in ("_all", "_parent_id") and \
+                    (i == 0 or ops[i - 1]["type"] != "resolve"):
+                out.append(Target(i, i + 1))
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        return [{"resolve_field": op["reduce_key"]}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        res = {
+            "name": f"resolve_{op['name']}",
+            "type": "resolve",
+            "prompt": f"Canonicalize near-duplicate {params['resolve_field']} values.",
+            "resolve_field": params["resolve_field"],
+            "model": op["model"],
+        }
+        return _replace(pipeline, target, [res, copy.deepcopy(op)])
+
+
+class SchemaPrune(Directive):
+    name = "schema_prune"
+    category = "llm_centric"
+    kind = "tuning"
+    new_in_moar = False
+    description = "Trim the output schema to only downstream-needed " \
+                  "fields (fewer output tokens)."
+    use_case = "Verbose outputs (evidence strings etc.) nobody consumes."
+    schema = {"lean": "bool"}
+    example = {"before": "map(verbose)", "after": "map(lean)"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] in LLM_TYPES and not op.get("lean_output")]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"lean": True}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        op["lean_output"] = True
+        op["include_evidence"] = False
+        return _replace(pipeline, target, [op])
+
+
+class ChunkResize(Directive):
+    name = "chunk_resize"
+    category = "data_decomposition"
+    kind = "tuning"
+    new_in_moar = False
+    description = "Retune an existing split's chunk size."
+    use_case = "Chunk size chosen initially may not be optimal."
+    schema = {"chunk_size": "int"}
+    example = {"before": "split(200)", "after": "split(400)"}
+    param_sensitive = True
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] == "split"]
+
+    def instantiate(self, ctx, pipeline, target):
+        cur = target.ops(pipeline)[0].get("chunk_size", 200)
+        return [{"chunk_size": max(50, cur // 2)},
+                {"chunk_size": cur * 2}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        op["chunk_size"] = params["chunk_size"]
+        return _replace(pipeline, target, [op])
+
+
+class ReducePrestage(Directive):
+    name = "reduce_prestage"
+    category = "projection_synthesis"
+    kind = "chaining"
+    new_in_moar = False
+    description = "Insert a per-document map extracting what the reduce " \
+                  "needs, so the reduce combines lists instead of re-" \
+                  "reading raw documents."
+    use_case = "Reduces that re-analyze full documents (slow, inaccurate " \
+               "at scale) — the BlackVault pattern."
+    schema = {"staging_field": "str"}
+    example = {"before": "reduce(raw docs)", "after": "map(extract) -> reduce(lists)"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] == "reduce" and not op.get("aggregate_field")
+                and op.get("task_tags")]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"staging_field": "staged_items"}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        fld = params["staging_field"]
+        stage = {
+            "name": f"stage_{op['name']}",
+            "type": "map",
+            "prompt": f"Per document: {op.get('prompt','')}",
+            "task_tags": op.get("task_tags", []),
+            "output_schema": {fld: "list"},
+            "model": op["model"],
+        }
+        red = copy.deepcopy(op)
+        red["aggregate_field"] = fld
+        return _replace(pipeline, target, [stage, red])
+
+
+class FilterEarly(Directive):
+    name = "filter_early"
+    category = "fusion_reordering"
+    kind = "reorder"
+    new_in_moar = False
+    description = "Move a filter as early as dependencies allow."
+    use_case = "Filters late in the pipeline waste upstream work on " \
+               "documents that get dropped."
+    schema = {"to_index": "int"}
+    example = {"before": "map -> map -> filter", "after": "filter -> map -> map"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        out = []
+        for i, op in enumerate(ops):
+            if op["type"] in ("filter", "code_filter") and i > 0:
+                j = i
+                while j > 0 and not Reordering._depends(op, ops[j - 1]):
+                    j -= 1
+                if j < i:
+                    out.append(Target(j, i + 1))
+        return out
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"to_index": target.start}]
+
+    def apply(self, pipeline, target, params):
+        ops = target.ops(pipeline)
+        moved = [copy.deepcopy(ops[-1])] + [copy.deepcopy(o) for o in ops[:-1]]
+        return _replace(pipeline, target, moved)
+
+
+class PromptRetuning(Directive):
+    name = "prompt_retuning"
+    category = "llm_centric"
+    kind = "prompt"
+    new_in_moar = False
+    description = "Light prompt specificity pass (V1-era prompt " \
+                  "improvement, single variant)."
+    use_case = "First-line accuracy nudge before heavier rewrites."
+    schema = {"tuned_prompt": "str"}
+    example = {"before": "map(p)", "after": "map(p')"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i, op in enumerate(pipeline["operators"])
+                if op["type"] in LLM_TYPES and op.get("prompt")
+                and not op.get("prompt_features", {}).get("clarified")]
+
+    def instantiate(self, ctx, pipeline, target):
+        op = target.ops(pipeline)[0]
+        return [{"tuned_prompt": op.get("prompt", "") + " [tuned]"}]
+
+    def apply(self, pipeline, target, params):
+        op = copy.deepcopy(target.ops(pipeline)[0])
+        feats = dict(op.get("prompt_features", {}))
+        feats["clarified"] = 1
+        op["prompt_features"] = feats
+        op["prompt"] = params["tuned_prompt"]
+        return _replace(pipeline, target, [op])
+
+
+class ContextIsolation(Directive):
+    name = "context_isolation"
+    category = "projection_synthesis"
+    kind = "compression"
+    new_in_moar = False
+    description = "V1 isolation: a cheap-model extract narrows the input " \
+                  "before the main operator."
+    use_case = "Accuracy lift from removing distractors, at small cost."
+    schema = {"isolate_model": "str"}
+    example = {"before": "map(doc)", "after": "extract(cheap) -> map"}
+
+    def targets(self, pipeline):
+        return [Target(i, i + 1) for i in _text_source_ops(pipeline)]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"isolate_model": ctx.cheapest_model()}]
+
+    def apply(self, pipeline, target, params):
+        op = target.ops(pipeline)[0]
+        ext = {
+            "name": f"isolate_cheap_{op['name']}",
+            "type": "extract",
+            "prompt": "Keep only passages relevant to the task.",
+            "task_tags": op.get("task_tags", []),
+            "model": params["isolate_model"],
+        }
+        return _replace(pipeline, target, [ext, copy.deepcopy(op)])
+
+
+class GatherInsertion(Directive):
+    name = "gather_insertion"
+    category = "data_decomposition"
+    kind = "tuning"
+    new_in_moar = False
+    description = "Insert a gather after a bare split (chunks get " \
+                  "peripheral context)."
+    use_case = "Chunked pipelines missing cross-chunk context."
+    schema = {"prev": "int"}
+    example = {"before": "split -> map", "after": "split -> gather -> map"}
+
+    def targets(self, pipeline):
+        ops = pipeline["operators"]
+        return [Target(i + 1, i + 1) for i in range(len(ops) - 1)
+                if ops[i]["type"] == "split" and ops[i + 1]["type"] != "gather"]
+
+    def instantiate(self, ctx, pipeline, target):
+        return [{"prev": 1}]
+
+    def apply(self, pipeline, target, params):
+        p = clone_pipeline(pipeline)
+        p["operators"].insert(target.start, {
+            "name": f"gather_at_{target.start}",
+            "type": "gather", "prev": params["prev"], "next": 0})
+        return p
+
+
+# ===========================================================================
+# registry
+# ===========================================================================
+
+DIRECTIVES: List[Directive] = [
+    # new in MOAR (18)
+    SameTypeFusion(), MapReduceFusion(), MapFilterFusion(), FilterMapFusion(),
+    Reordering(),
+    CodeSubstitution(), CodeSubReduce(), DocCompressionCode(),
+    HeadTailCompression(),
+    ChunkSampling(), DocSampling(), CascadeFiltering(),
+    DocSummarization(), DocCompressionLLM(),
+    ModelSubstitution(), ClarifyInstructions(), FewShotExamples(),
+    ArbitraryRewrite(),
+    # DocETL-V1 (13)
+    DocChunking(), GatherWidening(), MultiLevelReduce(), TaskDecomposition(),
+    ProjectionChain(), Gleaning(), ResolveInsertion(), SchemaPrune(),
+    ChunkResize(), ReducePrestage(), FilterEarly(), PromptRetuning(),
+    ContextIsolation(), GatherInsertion(),
+]
+
+BY_NAME: Dict[str, Directive] = {d.name: d for d in DIRECTIVES}
+
+ACCURACY_DIRECTIVES = [d.name for d in DIRECTIVES if d.category in
+                       ("projection_synthesis", "llm_centric",
+                        "data_decomposition")
+                       and d.kind not in ("sampling",)]
+COST_DIRECTIVES = [d.name for d in DIRECTIVES if d.kind in
+                   ("fusion", "code", "compression", "sampling", "cascade",
+                    "model", "tuning", "reorder")]
+
+
+def applicable(pipeline: PipelineConfig) -> List[Tuple[Directive, List[Target]]]:
+    out = []
+    for d in DIRECTIVES:
+        t = d.targets(pipeline)
+        if t:
+            out.append((d, t))
+    return out

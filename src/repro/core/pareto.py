@@ -1,0 +1,64 @@
+"""Pareto frontier machinery + MOAR's marginal-accuracy reward (§4.2).
+
+Points are any objects with ``.cost`` and ``.acc`` attributes.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def dominates(a, b) -> bool:
+    """a dominates b: at least as good on both axes, strictly better acc
+    at no higher cost (Def. 2.1 operationalized)."""
+    return a.acc > b.acc and a.cost <= b.cost
+
+
+def pareto_set(points: Sequence[T]) -> List[T]:
+    """{P : no P' with a(P') > a(P) and c(P') <= c(P)} (Def. 2.1)."""
+    out = []
+    for p in points:
+        if not any(q is not p and q.acc > p.acc and q.cost <= p.cost
+                   for q in points):
+            out.append(p)
+    return out
+
+
+def best_acc_at_cost(points: Iterable, cost: float,
+                     exclude=None) -> float:
+    """A_t(P): max accuracy among points with cost <= ``cost``, excluding
+    ``exclude`` (paper §4.2). 0.0 if none qualify."""
+    best = 0.0
+    for p in points:
+        if p is exclude:
+            continue
+        if p.cost <= cost and p.acc > best:
+            best = p.acc
+    return best
+
+
+def contribution(p, points: Iterable) -> float:
+    """delta_t(P) = a(P) - A_t(P): vertical distance above the frontier at
+    comparable cost. Positive iff P extends the frontier."""
+    return p.acc - best_acc_at_cost(points, p.cost, exclude=p)
+
+
+def frontier_summary(points: Sequence) -> str:
+    front = sorted(pareto_set(points), key=lambda p: p.cost)
+    return " | ".join(f"(${p.cost:.4f}, {p.acc:.3f})" for p in front)
+
+
+def hypervolume(points: Sequence, cost_ref: float) -> float:
+    """Classic hypervolume wrt (cost_ref, 0) reference — reported for
+    comparison against MOAR's contribution metric, not used for search."""
+    front = sorted(pareto_set(points), key=lambda p: p.cost)
+    hv = 0.0
+    prev_cost = cost_ref
+    for p in reversed(front):
+        if p.cost >= cost_ref:
+            continue
+        hv += (prev_cost - p.cost) * p.acc
+        prev_cost = p.cost
+    return hv

@@ -1,0 +1,392 @@
+"""MOAR global search (paper §4, Algorithms 1-3).
+
+Search-space = a tree of complete pipelines rooted at the user pipeline.
+Selection walks the tree with UCT whose reward is the *marginal accuracy
+contribution* delta_t (pareto.contribution), under progressive widening
+W(n) = max(2, 1 + sqrt(n)). Rewriting delegates to the AgentPolicy with
+progressive disclosure and the paper's pruning rules (cycle + no-op).
+Parameter-sensitive directives evaluate k candidates and keep the most
+accurate (all k count toward the evaluation budget B).
+
+Error handling (§4.3.3): instantiation failures retry inside the policy
+and then discard; transient execution failures discard without retry; both
+decrement the selected node's visit counts so failures don't inflate them.
+Identical pipelines reuse cached measurements.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import pareto
+from repro.core.agent import (AgentContext, AgentPolicy, DirectiveStats,
+                              ModelStats)
+from repro.core.directives import BY_NAME, DIRECTIVES, Directive, Target, \
+    applicable
+from repro.core.models_catalog import model_names
+from repro.engine.executor import Executor, TransientLLMError
+from repro.engine.operators import (PipelineConfig, clone_pipeline,
+                                    pipeline_hash, validate_pipeline)
+from repro.engine.workloads import Workload
+
+
+@dataclass(eq=False)  # identity equality: nodes form a tree (deep __eq__
+class Node:           # would recurse through parent/children/pipelines)
+    pipeline: PipelineConfig
+    acc: float = 0.0
+    cost: float = 0.0
+    parent: Optional["Node"] = None
+    children: List["Node"] = field(default_factory=list)
+    last_action: str = "ROOT"
+    last_kind: str = ""
+    depth: int = 0
+    visits: int = 1
+    disabled: bool = False
+    directive_usage: Dict[str, int] = field(default_factory=dict)
+    eval_index: int = 0  # iteration at which this node was evaluated
+
+    def descendants(self) -> List["Node"]:
+        out = []
+        stack = list(self.children)
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children)
+        return out
+
+    def path_actions(self) -> List[str]:
+        acts, n = [], self
+        while n is not None and n.last_action != "ROOT":
+            acts.append(n.last_action)
+            n = n.parent
+        return list(reversed(acts))
+
+
+def widening_cap(visits: int) -> int:
+    """W(n) = max(2, 1 + sqrt(n)) (paper §4.2)."""
+    return max(2, int(1 + math.sqrt(visits)))
+
+
+@dataclass
+class SearchResult:
+    root: Node
+    evaluated: List[Node]
+    frontier: List[Node]
+    budget_used: int
+    errors: int
+    wall_s: float
+    history: List[Dict[str, Any]] = field(default_factory=list)
+
+    def best(self) -> Node:
+        return max(self.evaluated, key=lambda n: n.acc)
+
+
+class MOARSearch:
+    def __init__(
+        self,
+        workload: Workload,
+        backend,
+        *,
+        budget: int = 40,
+        seed: int = 0,
+        models: Optional[List[str]] = None,
+        max_models: int = 12,  # C_m (paper footnote 2)
+        workers: int = 1,
+        fail_prob: float = 0.0,
+        reward: str = "contribution",   # | "hypervolume" (ablation, §4.2)
+        progressive_widening: bool = True,  # ablation: uncapped branching
+    ):
+        self.workload = workload
+        self.backend = backend
+        self.budget = budget
+        self.seed = seed
+        self.models = (models or model_names())[:max_models]
+        self.workers = workers
+        self.executor = Executor(backend, fail_prob=fail_prob, seed=seed)
+        self.policy = AgentPolicy(seed=seed)
+        self.model_stats = ModelStats()
+        self.dstats = DirectiveStats()
+        self.cache: Dict[str, Tuple[float, float]] = {}
+        self.evaluated: List[Node] = []
+        self.t = 0
+        self.errors = 0
+        self.reward = reward
+        self.progressive_widening = progressive_widening
+
+    # -- evaluation ------------------------------------------------------------
+
+    def _evaluate(self, pipeline: PipelineConfig) -> Tuple[float, float, bool]:
+        """Returns (acc, cost, cached). Raises TransientLLMError upward."""
+        h = pipeline_hash(pipeline)
+        if h in self.cache:
+            acc, cost = self.cache[h]
+            return acc, cost, True
+        out, stats = self.executor.run(pipeline, self.workload.sample)
+        acc = self.workload.score(out, self.workload.sample)
+        self.cache[h] = (acc, stats.cost)
+        return acc, stats.cost, False
+
+    def _add_node(self, pipeline, parent, action, kind) -> Optional[Node]:
+        try:
+            acc, cost, cached = self._evaluate(pipeline)
+        except TransientLLMError:
+            self.errors += 1
+            return None
+        node = Node(pipeline=pipeline, acc=acc, cost=cost, parent=parent,
+                    last_action=action, last_kind=kind,
+                    depth=(parent.depth + 1 if parent else 0),
+                    eval_index=self.t)
+        if parent is not None:
+            parent.children.append(node)
+        if not cached:
+            self.t += 1
+        self.evaluated.append(node)
+        return node
+
+    # -- initialization (paper §4.1) --------------------------------------------
+
+    def _initialize(self) -> Node:
+        p0 = clone_pipeline(self.workload.initial_pipeline)
+        validate_pipeline(p0)
+        root = None
+        for _ in range(4):  # transient API failures: retry the root
+            root = self._add_node(p0, None, "ROOT", "")
+            if root is not None:
+                break
+        assert root is not None, "initial pipeline failed to evaluate"
+        # model variants of P0 as children
+        for m in self.models:
+            variant = clone_pipeline(p0)
+            changed = False
+            for op in variant["operators"]:
+                if op.get("model"):
+                    op["model"] = m
+                    changed = True
+            if not changed:
+                continue
+            node = self._add_node(variant, root, f"model_sub({m})", "model")
+            if node is not None:
+                self.model_stats.acc[m] = node.acc
+                self.model_stats.cost[m] = node.cost
+            if self.t >= self.budget:
+                break
+        # frontier members spawn one accuracy- and one cost-targeted rewrite
+        frontier = pareto.pareto_set([root] + root.children)
+        for node in list(frontier):
+            for objective in ("improve accuracy",
+                              "reduce cost while preserving accuracy"):
+                if self.t >= self.budget:
+                    break
+                self._rewrite_and_evaluate(node, objective_override=objective)
+        # disable non-frontier model variants from future selection
+        for child in root.children:
+            if child not in frontier:
+                child.disabled = True
+        self._bump_visits(root)
+        return root
+
+    # -- selection (Algorithm 2) --------------------------------------------------
+
+    def _delta(self, node: Node) -> float:
+        if self.reward == "hypervolume":
+            # ablation — classic hypervolume contribution: every frontier
+            # point counts, including low-accuracy ones (the paper argues
+            # this wastes budget in low-accuracy regions)
+            ref = max((n.cost for n in self.evaluated), default=1.0) * 1.1
+            with_p = pareto.hypervolume(self.evaluated, ref)
+            without = pareto.hypervolume(
+                [n for n in self.evaluated if n is not node], ref)
+            return (with_p - without) / max(ref, 1e-9)
+        return pareto.contribution(node, self.evaluated)
+
+    def _utility(self, node: Node) -> float:
+        d = self._delta(node) + sum(self._delta(x) for x in node.descendants())
+        exploit = d / node.visits
+        parent_visits = node.parent.visits if node.parent else node.visits
+        explore = math.sqrt(2.0 * math.log(max(parent_visits, 2))
+                            / node.visits)
+        return exploit + explore
+
+    def _select(self, root: Node) -> Node:
+        node = root
+        while True:
+            kids = [c for c in node.children if not c.disabled]
+            cap = widening_cap(node.visits) if self.progressive_widening \
+                else 10 ** 9
+            if len(node.children) < cap or not kids:
+                break
+            node = max(kids, key=self._utility)
+        # visit increments along the path (Alg 2 lines 8-11)
+        n = node
+        while n is not None:
+            n.visits += 1
+            n = n.parent
+        return node
+
+    def _bump_visits(self, node: Node):
+        node.visits = 1 + len(node.descendants())
+
+    def _unbump(self, node: Node):
+        """Failed attempt: roll the selection's visit increment back."""
+        n = node
+        while n is not None:
+            n.visits = max(1, n.visits - 1)
+            n = n.parent
+
+    # -- pruning (paper §4.3.2) ----------------------------------------------------
+
+    def _prune(self, node: Node,
+               allowed: List[Tuple[Directive, List[Target]]]):
+        has_split = any(op["type"] == "split"
+                        for op in node.pipeline["operators"])
+        out = []
+        for d, targets in allowed:
+            # cycle: chaining immediately followed by fusion reverses it
+            if node.last_kind == "chaining" and d.kind == "fusion":
+                continue
+            # cycle: model substitution at a first-layer node only revisits
+            # models the initialization already covered
+            if d.name == "model_substitution" and node.depth <= 1:
+                continue
+            # no-op: chunking a pipeline that already chunks
+            if d.name in ("doc_chunking",) and has_split:
+                continue
+            # no-op: consecutive compression/summarization
+            if d.kind == "compression" and node.last_kind == "compression":
+                continue
+            out.append((d, targets))
+        return out
+
+    # -- rewriting & evaluation (Algorithm 3) -----------------------------------------
+
+    def _objective_for(self, node: Node) -> str:
+        ranked = sorted(self.evaluated, key=lambda n: -n.acc)
+        rank = ranked.index(node) + 1 if node in ranked else len(ranked)
+        if rank <= len(self.evaluated) / 2:
+            return "reduce cost while preserving accuracy"
+        return "improve accuracy"
+
+    def _rewrite_and_evaluate(self, node: Node,
+                              objective_override: Optional[str] = None
+                              ) -> Optional[Node]:
+        objective = objective_override or self._objective_for(node)
+        ctx = AgentContext(self.workload.sample, self.workload.tags,
+                           seed=self.seed + 31 * self.t,
+                           model_stats=self.model_stats,
+                           objective=objective)
+        allowed = self._prune(node, applicable(node.pipeline))
+        choice = self.policy.choose_directive(
+            node.pipeline, allowed, ctx, self.dstats,
+            node.directive_usage, node.depth)
+        if choice is None:
+            self._unbump(node)
+            return None
+        directive, target = choice
+        node.directive_usage[directive.name] = \
+            node.directive_usage.get(directive.name, 0) + 1
+        try:
+            param_sets = self.policy.instantiate(directive, node.pipeline,
+                                                 target, ctx)
+        except RuntimeError:
+            self.errors += 1
+            self._unbump(node)
+            return None
+        if not directive.param_sensitive:
+            param_sets = param_sets[:1]
+
+        best: Optional[Node] = None
+        candidates: List[Node] = []
+        for params in param_sets:
+            if self.t >= self.budget and candidates:
+                break
+            try:
+                new_pipeline = directive.apply(node.pipeline, target, params)
+                validate_pipeline(new_pipeline)
+            except Exception:  # noqa: BLE001 — bad rewrite, retry next params
+                self.errors += 1
+                continue
+            child = self._add_node(new_pipeline, node,
+                                   f"{directive.name}", directive.kind)
+            if child is not None:
+                candidates.append(child)
+        if not candidates:
+            self._unbump(node)
+            return None
+        best = max(candidates, key=lambda n: n.acc)
+        # non-best candidates stay evaluated (count toward B, contribute to
+        # the frontier) but are not extended further
+        for c in candidates:
+            if c is not best:
+                c.disabled = True
+        self.dstats.update(directive.name, best.acc - node.acc,
+                           best.cost - node.cost)
+        return best
+
+    # -- main loop (Algorithm 1) ---------------------------------------------------------
+
+    def run(self) -> SearchResult:
+        t0 = time.time()
+        root = self._initialize()
+        history = []
+        guard = 0
+        while self.t < self.budget and guard < self.budget * 6:
+            guard += 1
+            if self.workers > 1:
+                selected = []
+                for _ in range(min(self.workers, self.budget - self.t)):
+                    selected.append(self._select(root))
+                with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                    list(pool.map(self._rewrite_and_evaluate, selected))
+            else:
+                node = self._select(root)
+                self._rewrite_and_evaluate(node)
+            front = pareto.pareto_set(self.evaluated)
+            history.append({
+                "t": self.t,
+                "frontier_size": len(front),
+                "best_acc": max(n.acc for n in self.evaluated),
+            })
+        frontier = pareto.pareto_set(self.evaluated)
+        # the user-authored plan is always surfaced as a fallback option
+        # (Fig 4 plots it alongside the frontier)
+        if root not in frontier:
+            frontier.append(root)
+        # dedup identical (cost, acc) points for a readable frontier
+        seen, dedup = set(), []
+        for n in sorted(frontier, key=lambda n: (n.cost, -n.acc, n.eval_index)):
+            key = (round(n.cost, 9), round(n.acc, 9))
+            if key in seen:
+                continue
+            seen.add(key)
+            dedup.append(n)
+        frontier = dedup
+        return SearchResult(
+            root=root,
+            evaluated=list(self.evaluated),
+            frontier=frontier,
+            budget_used=self.t,
+            errors=self.errors,
+            wall_s=time.time() - t0,
+            history=history,
+        )
+
+    # -- held-out evaluation ----------------------------------------------------------
+
+    def evaluate_on_test(self, nodes: List[Node]) -> List[Dict[str, Any]]:
+        out = []
+        for n in nodes:
+            docs, stats = self.executor.run(n.pipeline, self.workload.test)
+            out.append({
+                "pipeline": n.pipeline,
+                "path": n.path_actions(),
+                "sample_acc": n.acc,
+                "test_acc": self.workload.score(docs, self.workload.test),
+                "test_cost": stats.cost,
+                "latency_s": stats.latency_s,
+                "n_ops": len(n.pipeline["operators"]),
+            })
+        return out

@@ -1,0 +1,52 @@
+"""Document model for the semantic-operator engine (paper §2.1).
+
+A *document* is a dict of key -> value (metadata or free-form text); a
+*dataset* is a list of documents. Matches DocETL's JSON-object semantics.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import hashlib
+from typing import Any, Dict, List
+
+Document = Dict[str, Any]
+Dataset = List[Document]
+
+
+def doc_text(doc: Document, key: str = "") -> str:
+    """The document's main text: explicit key, else its longest str field."""
+    if key:
+        return str(doc.get(key, ""))
+    best = ""
+    for v in doc.values():
+        if isinstance(v, str) and len(v) > len(best):
+            best = v
+    return best
+
+
+def main_text_key(doc: Document) -> str:
+    best_k, best_len = "", -1
+    for k, v in doc.items():
+        if isinstance(v, str) and len(v) > best_len:
+            best_k, best_len = k, len(v)
+    return best_k
+
+
+def clone(docs: Dataset) -> Dataset:
+    return copy.deepcopy(docs)
+
+
+def word_count(text: str) -> int:
+    return len(text.split())
+
+
+def dataset_words(docs: Dataset) -> int:
+    return sum(word_count(doc_text(d)) for d in docs)
+
+
+def content_hash(obj: Any) -> str:
+    """Stable hash of any JSON-serializable object (pipeline caching)."""
+    blob = json.dumps(obj, sort_keys=True, default=str).encode()
+    return hashlib.blake2s(blob).hexdigest()[:16]

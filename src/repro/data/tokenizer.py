@@ -1,0 +1,71 @@
+"""Tokenizers used by the serving stack and the semantic-operator engine.
+
+Offline container -> no pretrained BPE vocab; two deterministic tokenizers:
+
+- ``ByteTokenizer``: UTF-8 bytes + specials. Exact round-trip; used when
+  faithful text reconstruction matters (tests, decode demos).
+- ``HashWordTokenizer``: whitespace words hashed into an arbitrary vocab
+  size (matches each architecture's assigned vocab). Not invertible, but
+  gives realistic token *counts* and id distributions, which is what the
+  cost model and serving benchmarks consume.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import List
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+N_SPECIAL = 3
+
+
+class ByteTokenizer:
+    """Byte-level tokenizer: ids 0..2 special, 3..258 = bytes."""
+
+    vocab_size = 256 + N_SPECIAL
+
+    def encode(self, text: str, add_bos: bool = True) -> List[int]:
+        ids = [b + N_SPECIAL for b in text.encode("utf-8")]
+        return ([BOS_ID] + ids) if add_bos else ids
+
+    def decode(self, ids) -> str:
+        data = bytes(i - N_SPECIAL for i in ids if i >= N_SPECIAL)
+        return data.decode("utf-8", errors="replace")
+
+
+_WORD_RE = re.compile(r"\S+|\n")
+
+
+class HashWordTokenizer:
+    """Deterministic word -> id hashing into a fixed vocab."""
+
+    def __init__(self, vocab_size: int):
+        assert vocab_size > N_SPECIAL + 1
+        self.vocab_size = vocab_size
+
+    def _hash(self, word: str) -> int:
+        h = int.from_bytes(hashlib.blake2s(word.encode()).digest()[:4], "little")
+        return N_SPECIAL + h % (self.vocab_size - N_SPECIAL)
+
+    def encode(self, text: str, add_bos: bool = True) -> List[int]:
+        ids = [self._hash(w) for w in _WORD_RE.findall(text)]
+        return ([BOS_ID] + ids) if add_bos else ids
+
+    def count(self, text: str) -> int:
+        """Token count without building the id list (cost-model fast path)."""
+        return len(_WORD_RE.findall(text)) + 1
+
+    def decode(self, ids) -> str:  # not invertible
+        return " ".join(f"<{i}>" for i in ids)
+
+
+def pad_or_trim(ids: List[int], length: int) -> np.ndarray:
+    out = np.full((length,), PAD_ID, dtype=np.int32)
+    ids = ids[:length]
+    out[: len(ids)] = ids
+    return out

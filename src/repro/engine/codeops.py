@@ -1,0 +1,130 @@
+"""Deterministic evaluator for code-powered operators (code_map /
+code_filter / code_reduce).
+
+The paper's agent synthesizes arbitrary Python; in this offline framework a
+code-powered operator carries a *CodeSpec* — a restricted, declarative
+program (regex/keyword/head-tail/aggregation primitives) that the
+deterministic evaluator executes. This keeps the paper's two key
+properties: code ops cost $0 (no LLM), and their quality depends on how
+well surface patterns capture the task (regexes match literal mentions but
+miss paraphrases — which is exactly the precision/recall trade the MOAR
+agent explores via parameter-sensitive directives).
+
+CodeSpec kinds:
+  keyword_filter    {keywords, min_hits}          doc -> bool
+  regex_extract     {pattern, window}             doc -> matching sentences (+context)
+  keyword_extract   {keywords, window}            doc -> sentences containing keywords
+  head_tail         {head, tail}                  doc -> first/last words
+  drop_if_false     {field}                       doc -> bool(doc[field])
+  count_group       {field}                       docs -> counts + concatenated context
+  concat_group      {field, limit}                docs -> concatenation of a field
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List
+
+from repro.data.documents import Dataset, Document, doc_text, main_text_key
+
+CodeSpec = Dict[str, Any]
+
+_SENT_SPLIT = re.compile(r"(?<=[.!?])\s+")
+
+
+def sentences(text: str) -> List[str]:
+    return [s for s in _SENT_SPLIT.split(text) if s.strip()]
+
+
+def run_code_filter(spec: CodeSpec, doc: Document) -> bool:
+    kind = spec["kind"]
+    if kind == "keyword_filter":
+        text = doc_text(doc).lower()
+        hits = sum(1 for kw in spec["keywords"] if kw.lower() in text)
+        return hits >= spec.get("min_hits", 1)
+    if kind == "drop_if_false":
+        return bool(doc.get(spec["field"], False))
+    if kind == "regex_filter":
+        return re.search(spec["pattern"], doc_text(doc), re.I) is not None
+    raise ValueError(f"unknown code_filter kind {kind!r}")
+
+
+def run_code_map(spec: CodeSpec, doc: Document) -> Dict[str, Any]:
+    kind = spec["kind"]
+    key = spec.get("text_key") or main_text_key(doc)
+    text = str(doc.get(key, ""))
+    out_key = spec.get("output_key", key)
+    if kind == "head_tail":
+        words = text.split()
+        h, t = spec.get("head", 100), spec.get("tail", 50)
+        if len(words) <= h + t:
+            return {out_key: text}
+        return {out_key: " ".join(words[:h]) + "\n...\n" + " ".join(words[-t:])}
+    if kind == "keyword_facts":
+        # structured extraction via regex over canonical fact sentences:
+        # matches '[tag] matter involving <value>' — precise, but blind to
+        # paraphrased facts (the LLM/code quality trade the paper studies)
+        items = []
+        for tag in spec["tags"]:
+            pat = re.compile(r"\[" + re.escape(tag) +
+                             r"\] matter involving (v[0-9a-f]{8})", re.I)
+            for m in pat.finditer(text):
+                items.append({"tag": tag, "value": m.group(1)})
+        return {spec["output_field"]: items}
+    if kind == "merge_lists":
+        merged = []
+        for f in spec["fields"]:
+            v = doc.get(f) or []
+            merged.extend(v if isinstance(v, list) else [v])
+        return {spec["output_field"]: merged}
+    if kind == "combine_keys":
+        parts = [str(doc.get(f, "")) for f in spec["fields"]]
+        return {spec["output_field"]: "|".join(parts)}
+    if kind == "assign_bucket":
+        import hashlib as _h
+        b = int(_h.blake2s(str(doc.get("id")).encode()).hexdigest()[:4], 16) \
+            % spec["buckets"]
+        gval = str(doc.get(spec["group_field"], ""))
+        return {spec["output_key"]: f"{gval}|{b}", "_group_val": gval}
+    if kind == "split_bucket_key":
+        combined = str(doc.get("_bucket_key", doc.get("id", "")))
+        return {spec["output_key"]: combined.split("|")[0]}
+    if kind in ("regex_extract", "keyword_extract"):
+        sents = sentences(text)
+        window = spec.get("window", 0)
+        keep = set()
+        if kind == "regex_extract":
+            pat = re.compile(spec["pattern"], re.I)
+            match = lambda s: pat.search(s) is not None
+        else:
+            kws = [k.lower() for k in spec["keywords"]]
+            match = lambda s: any(k in s.lower() for k in kws)
+        for i, s in enumerate(sents):
+            if match(s):
+                for j in range(max(0, i - window), min(len(sents), i + window + 1)):
+                    keep.add(j)
+        kept = [sents[i] for i in sorted(keep)]
+        return {out_key: " ".join(kept)}
+    raise ValueError(f"unknown code_map kind {kind!r}")
+
+
+def run_code_reduce(spec: CodeSpec, docs: Dataset) -> Dict[str, Any]:
+    kind = spec["kind"]
+    if kind == "count_group":
+        field = spec["field"]
+        counts: Dict[str, int] = {}
+        for d in docs:
+            vals = d.get(field, [])
+            vals = vals if isinstance(vals, list) else [vals]
+            for v in vals:
+                counts[str(v)] = counts.get(str(v), 0) + 1
+        return {f"{field}_counts": counts}
+    if kind == "concat_group":
+        field = spec["field"]
+        limit = spec.get("limit", 50)
+        vals: List[str] = []
+        for d in docs[:limit]:
+            v = d.get(field, "")
+            vals.extend(v if isinstance(v, list) else [str(v)])
+        return {f"{field}_all": vals}
+    raise ValueError(f"unknown code_reduce kind {kind!r}")

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_ref(q, k, v, valid_len, *, softcap: float = 0.0):
+    """q: (B,K,G,Hd); k/v: (B,S,K,Hd); valid_len: scalar int.
+    Returns (B,K,G,Hd)."""
+    b, kh, g, hd = q.shape
+    s = k.shape[1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = jnp.arange(s) < valid_len
+    scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

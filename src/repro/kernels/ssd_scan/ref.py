@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD scan kernel — sequential state recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,    # (B, H, S, P)
+    dt: jax.Array,   # (B, H, S)
+    A: jax.Array,    # (H,)
+    Bm: jax.Array,   # (B, G, S, N)
+    Cm: jax.Array,   # (B, G, S, N)
+    D: jax.Array,    # (H,)
+    h0: jax.Array,   # (B, H, P, N)
+):
+    """Token-by-token recurrence: h_t = h_{t-1} e^{dt_t A} + dt_t x_t B_t^T,
+    y_t = C_t . h_t + D x_t. Returns (y (B,H,S,P), final_state)."""
+    b, h, s, p = x.shape
+    g = Bm.shape[1]
+    hpg = h // g
+    bexp = jnp.repeat(Bm, hpg, axis=1)  # (B,H,S,N)
+    cexp = jnp.repeat(Cm, hpg, axis=1)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * A[None, :])  # (B,H)
+        state = (state * decay[:, :, None, None]
+                 + jnp.einsum("bhp,bhn,bh->bhpn", xt, bt, dtt))
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state) + xt * D[None, :, None]
+        return state, y
+
+    xs = (x.transpose(2, 0, 1, 3), dt.transpose(2, 0, 1),
+          bexp.transpose(2, 0, 1, 3), cexp.transpose(2, 0, 1, 3))
+    final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype), final

@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture x input shape) cell on the production
+meshes — 16x16 single-pod and 2x16x16 multi-pod — using 512 placeholder CPU
+devices. Prints ``memory_analysis()`` (proves the cell fits) and derives the
+roofline terms (§Roofline) from the compiled HLO; JSON artifacts land in
+``artifacts/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all                 # single-pod, all cells
+  python -m repro.launch.dryrun --all --multi-pod
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import SHAPE_NAMES, skip_reason
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import format_report, report_from_compiled
+
+
+def run_cell(mesh, mesh_label, arch, shape, out_dir, *, verbose=True,
+             profile_overrides=None, policy_overrides=None,
+             config_overrides=None, optimized=False):
+    if optimized:
+        from repro.launch.cells import (OPTIMIZED_CONFIG, OPTIMIZED_POLICY,
+                                        set_optimized_flags)
+        set_optimized_flags(True)
+        policy_overrides = {**OPTIMIZED_POLICY.get(arch, {}),
+                            **(policy_overrides or {})}
+        config_overrides = {**OPTIMIZED_CONFIG.get(arch, {}),
+                            **(config_overrides or {})}
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        if verbose:
+            print(f"-- SKIP {arch} x {shape}: {reason}")
+        return {"arch": arch, "shape": shape, "mesh": mesh_label,
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    cell = build_cell(mesh, arch, shape,
+                      profile_overrides=profile_overrides,
+                      policy_overrides=policy_overrides,
+                      config_overrides=config_overrides)
+    lowered = cell.lower(mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    print(mem)
+    ca = compiled.cost_analysis()
+    run_cfg = get_config(arch)
+    if cell.kind == "train":
+        run_cfg = run_cfg.replace(remat=cell.meta["profile"].get(
+            "remat", "none"))
+    rep = report_from_compiled(compiled, cell, mesh_label, run_cfg)
+    rep.extra["lower_s"] = round(t_lower, 2)
+    rep.extra["compile_s"] = round(t_compile, 2)
+    rep.extra["xla_cost_analysis_flops_per_iter"] = \
+        float(ca.get("flops", 0.0)) if ca else 0.0
+    if verbose:
+        print(format_report(rep))
+        print(f"  (lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+    if out_dir:
+        d = os.path.join(out_dir, mesh_label)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{arch}__{shape}.json"), "w") as f:
+            json.dump({"status": "ok", **rep.to_json()}, f, indent=1)
+    return {"status": "ok", "report": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the confirmed §Perf optimizations "
+                         "(artifacts go to <out>_opt)")
+    args = ap.parse_args()
+    if args.optimized and args.out == "artifacts/dryrun":
+        args.out = "artifacts/dryrun_opt"
+
+    mesh_flags = [True, False] if args.both_meshes else [args.multi_pod]
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = SHAPE_NAMES if args.all or not args.shape else [args.shape]
+
+    n_ok = n_skip = n_fail = 0
+    failures = []
+    for multi_pod in mesh_flags:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_label = "pod2x16x16" if multi_pod else "pod16x16"
+        print(f"\n#### mesh {mesh_label}: {mesh.devices.size} devices, "
+              f"axes {mesh.axis_names} ####")
+        for arch in archs:
+            for shape in shapes:
+                tag = os.path.join(args.out, mesh_label, f"{arch}__{shape}.json")
+                if args.skip_existing and os.path.exists(tag):
+                    with open(tag) as f:
+                        if json.load(f).get("status") == "ok":
+                            print(f"-- cached {arch} x {shape}")
+                            n_ok += 1
+                            continue
+                try:
+                    res = run_cell(mesh, mesh_label, arch, shape, args.out,
+                                   optimized=args.optimized)
+                    if res["status"] == "ok":
+                        n_ok += 1
+                    else:
+                        n_skip += 1
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    n_fail += 1
+                    failures.append((mesh_label, arch, shape, repr(e)))
+                    print(f"!! FAIL {arch} x {shape}: {e}")
+                    traceback.print_exc()
+    print(f"\n==== dry-run summary: ok={n_ok} skipped={n_skip} "
+          f"failed={n_fail} ====")
+    for f in failures:
+        print("  FAILED:", f)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

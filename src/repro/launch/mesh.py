@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+
+Production target: TPU v5e pods.
+  single-pod:  (16, 16)      axes ("data", "model")          = 256 chips
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")   = 512 chips
+
+At 1000+ nodes the same axis scheme extends by growing the "pod" axis (DCN
+data parallelism across pods) while "data"/"model" stay within-pod (ICI).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """A small mesh over however many devices the host actually has
+    (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch/FSDP dimension ('pod' joins 'data')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a == "model")

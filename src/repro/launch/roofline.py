@@ -1,0 +1,149 @@
+"""Roofline model: TPU v5e hardware constants + term derivation (§Roofline).
+
+Terms (seconds, per step, computed from PER-DEVICE quantities of the
+compiled SPMD module — equivalent to the global/(chips*peak) form):
+
+    compute    = device_FLOPs / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = device_bytes / HBM_bw            (819 GB/s)
+    collective = device_collective_bytes / ICI_bw (~50 GB/s/link, 1 link
+                 worst-case serialization assumed)
+
+``useful_ratio`` = MODEL_FLOPS / compiled_FLOPs catches remat/redundancy
+waste (remat="full" legitimately sits near ~0.7 for train cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.launch.hlo_analysis import HLOCosts, analyze
+from repro.models.config import ModelConfig
+
+HW = dict(
+    name="tpu-v5e",
+    peak_flops=197e12,   # bf16
+    hbm_bw=819e9,        # bytes/s
+    ici_bw=50e9,         # bytes/s per link
+    hbm_bytes=16 * 2**30,
+)
+
+
+def model_flops(cfg: ModelConfig, kind: str, tokens: int) -> float:
+    """Paper-standard useful FLOPs: 6*N*D train, 2*N*D inference
+    (N = active params for MoE)."""
+    n = cfg.active_params()
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    kind: str
+    tokens_per_step: int
+    # per-device quantities
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    # terms (seconds)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    # usefulness
+    model_flops_global: float = 0.0
+    useful_ratio: float = 0.0
+    # memory analysis (per device, bytes)
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    peak_fraction_of_hbm: float = 0.0
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.flops / HW["peak_flops"]
+        self.memory_s = self.bytes_accessed / HW["hbm_bw"]
+        self.collective_s = self.collective_bytes / HW["ici_bw"]
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.flops > 0:
+            self.useful_ratio = self.model_flops_global / (
+                self.flops * self.n_devices)
+        live = self.argument_bytes + self.output_bytes + self.temp_bytes
+        # donated args alias outputs; count args + temps as resident
+        self.peak_fraction_of_hbm = (self.argument_bytes + self.temp_bytes) \
+            / HW["hbm_bytes"]
+        return self
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        """Perfect-overlap roofline: the max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close compute is to being the (ideal) bottleneck: the score
+        we hillclimb. 1.0 = perfectly compute-bound at peak."""
+        t = self.step_time_lower_bound_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["step_time_lower_bound_s"] = self.step_time_lower_bound_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def report_from_compiled(compiled, cell, mesh_label: str,
+                         cfg: ModelConfig) -> RooflineReport:
+    costs: HLOCosts = analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    rep = RooflineReport(
+        arch=cell.meta["arch"],
+        shape=cell.meta["shape"],
+        mesh=mesh_label,
+        n_devices=cell.meta["n_devices"],
+        kind=cell.kind,
+        tokens_per_step=cell.meta.get("tokens_per_step", 0),
+        flops=costs.flops,
+        bytes_accessed=costs.bytes_accessed,
+        collective_bytes=costs.total_collective_bytes,
+        collective_breakdown=dict(costs.collective_bytes),
+        model_flops_global=model_flops(
+            cfg, cell.kind, cell.meta.get("tokens_per_step", 0)),
+        argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        output_bytes=getattr(mem, "output_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+    )
+    rep.extra["collective_counts"] = dict(costs.collective_counts)
+    return rep.finalize()
+
+
+def format_report(rep: RooflineReport) -> str:
+    lines = [
+        f"== {rep.arch} x {rep.shape} on {rep.mesh} ({rep.n_devices} chips) ==",
+        f"  kind={rep.kind} tokens/step={rep.tokens_per_step:,}",
+        f"  per-device: FLOPs={rep.flops:.3e}  bytes={rep.bytes_accessed:.3e}"
+        f"  coll_bytes={rep.collective_bytes:.3e}",
+        f"  terms(s): compute={rep.compute_s:.4e}  memory={rep.memory_s:.4e}"
+        f"  collective={rep.collective_s:.4e}  -> bottleneck={rep.bottleneck}",
+        f"  model_flops={rep.model_flops_global:.3e}"
+        f"  useful_ratio={rep.useful_ratio:.3f}"
+        f"  roofline_fraction={rep.roofline_fraction:.3f}",
+        f"  memory/device: args={rep.argument_bytes/2**30:.2f}GiB"
+        f"  temp={rep.temp_bytes/2**30:.2f}GiB"
+        f"  ({100*rep.peak_fraction_of_hbm:.1f}% of 16GiB HBM)",
+    ]
+    if rep.collective_breakdown:
+        parts = ", ".join(f"{k}={v:.2e}B" for k, v in
+                          sorted(rep.collective_breakdown.items()))
+        lines.append(f"  collectives: {parts}")
+    return "\n".join(lines)

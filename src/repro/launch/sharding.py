@@ -1,0 +1,273 @@
+"""Sharding rule tables: params / optimizer state / caches / batches.
+
+Scheme (v5e pod, mesh ("data", "model") [+ leading "pod"]):
+
+- 2D parameter sharding: each weight matrix shards its output-feature dim
+  over "model" (tensor parallelism) and its input dim over ("pod","data")
+  (FSDP — GSPMD inserts per-layer all-gathers at use and reduce-scatters on
+  gradients). MoE expert weights shard the expert dim over "model" (expert
+  parallelism) and d_model over data.
+- activations/batches shard batch over ("pod","data").
+- decode caches: batch over data when it divides; KV-sequence or kv-heads
+  over "model" (policy); long-context batch=1 cells shard the cache
+  sequence across BOTH axes.
+- every rule degrades gracefully: an axis is only applied to a dim it
+  divides evenly; otherwise that axis is dropped for that dim (uneven
+  GSPMD padding is avoided on purpose — it shows up as silent copy/pad
+  traffic in the roofline).
+
+A ``ShardingPolicy`` carries the hillclimb knobs (§Perf): FSDP on/off for
+inference, cache layout, sequence-parallel residual constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Axes = Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    data_axes: Axes
+    model_axes: Axes
+    axis_sizes: Dict[str, int]
+    shard_params_data: bool = True      # FSDP over data axes
+    cache_layout: str = "auto"          # "heads" | "seq" | "auto"
+    long_context: bool = False          # batch=1: shard cache seq over all axes
+    seq_parallel: bool = False          # residual-stream sequence sharding
+    tp_min_shard: int = 0               # min per-device dim for model-axis TP
+
+    def size(self, axes: Axes) -> int:
+        return int(np.prod([self.axis_sizes[a] for a in axes])) if axes else 1
+
+    def replace(self, **kw) -> "ShardingPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+def policy_for(mesh: Mesh, cfg: ModelConfig, *, kind: str,
+               batch: int = 0, **overrides) -> ShardingPolicy:
+    from repro.launch.mesh import data_axes_of, model_axes_of
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pol = ShardingPolicy(
+        data_axes=data_axes_of(mesh),
+        model_axes=model_axes_of(mesh),
+        axis_sizes=sizes,
+        long_context=(kind == "decode" and batch == 1),
+    )
+    return pol.replace(**overrides) if overrides else pol
+
+
+# --------------------------------------------------------------------------
+# divisibility-aware axis assignment
+# --------------------------------------------------------------------------
+
+
+def _fit_axes(dim: int, axes: Axes, sizes: Dict[str, int]) -> Optional[Axes]:
+    """Longest prefix of ``axes`` whose product divides ``dim``; None if
+    even the first axis does not divide."""
+    chosen = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * sizes[a]) == 0:
+            chosen.append(a)
+            prod *= sizes[a]
+        else:
+            break
+    return tuple(chosen) if chosen else None
+
+
+def _spec_entry(dim: int, axes: Axes, pol: ShardingPolicy,
+                min_shard: int = 0):
+    fit = _fit_axes(dim, axes, pol.axis_sizes)
+    if not fit:
+        return None
+    if min_shard:
+        prod = 1
+        for a in fit:
+            prod *= pol.axis_sizes[a]
+        if dim // prod < min_shard:
+            return None
+    return fit if len(fit) > 1 else fit[0]
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+_IN_OUT = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "in_proj",
+           "patch_proj"}
+_OUT_IN = {"wo", "w_down", "w_out", "out_proj"}
+_REPLICATED = {"scale", "router", "A_log", "D", "dt_bias", "conv_b"}
+
+
+def _param_spec(path, leaf, cfg: ModelConfig, pol: ShardingPolicy) -> P:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    stacked = any(k.startswith("slot") for k in keys) or \
+        ("enc_layers" in keys or "dec_layers" in keys)
+    in_moe = "moe" in keys
+    shape = leaf.shape
+    body = shape[1:] if stacked else shape
+    prefix = (None,) if stacked else ()
+
+    data = pol.data_axes if pol.shard_params_data else ()
+    model = pol.model_axes
+
+    def entry(dim, axes):
+        if not axes:
+            return None
+        # tp_min_shard guards only model-axis tensor parallelism: tiny
+        # per-device shards (e.g. a 128-wide kv projection over 16 chips)
+        # trigger GSPMD resharding storms downstream
+        min_shard = pol.tp_min_shard if axes == model else 0
+        return _spec_entry(dim, axes, pol, min_shard)
+
+    if name in _REPLICATED or leaf.ndim == 0:
+        return P()
+    if name in ("tokens", "unembed"):  # (V, D)
+        return P(entry(shape[0], model), entry(shape[1], data))
+    if in_moe and name in ("w_gate", "w_up") and len(body) == 3:  # (E,D,F)
+        e_axes = entry(body[0], model)
+        if e_axes is not None:  # expert parallelism
+            return P(*prefix, e_axes, entry(body[1], data), None)
+        # E doesn't divide the model axis (grok: 8 experts on 16 shards):
+        # fall back to tensor parallelism inside each expert (shard F)
+        return P(*prefix, None, entry(body[1], data), entry(body[2], model))
+    if in_moe and name == "w_down" and len(body) == 3:  # (E,F,D)
+        e_axes = entry(body[0], model)
+        if e_axes is not None:
+            return P(*prefix, e_axes, None, entry(body[2], data))
+        return P(*prefix, None, entry(body[1], model), entry(body[2], data))
+    if name in _IN_OUT and len(body) == 2:  # (D_in, D_out)
+        return P(*prefix, entry(body[0], data), entry(body[1], model))
+    if name in _OUT_IN and len(body) == 2:  # (D_hidden, D_out)
+        return P(*prefix, entry(body[0], model), entry(body[1], data))
+    if name == "conv_w" and len(body) == 2:  # (W, conv_dim)
+        return P(*prefix, None, entry(body[1], model))
+    # default: replicate (norm scales etc. reach here via stacked paths)
+    return P(*([None] * leaf.ndim))
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, pol: ShardingPolicy):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(path, leaf, cfg, pol), params_shape)
+
+
+def opt_pspecs(cfg: ModelConfig, opt_shape, param_specs):
+    """Optimizer-state shardings follow their parameter's spec.
+
+    AdamW: m/v are param-shaped. Adafactor: vr drops the param's last dim
+    entry, vc drops the second-to-last (unfactored <2D leaves keep the
+    param spec; 0-size vc placeholders replicate)."""
+    from repro.training.adafactor import AdafactorState
+    from repro.training.adamw import AdamWState
+    if isinstance(opt_shape, AdamWState):
+        return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+    def vr_spec(pspec, leaf_p, leaf_vr):
+        if leaf_vr.ndim == leaf_p.ndim - 1:  # factored: drop last entry
+            return P(*tuple(pspec)[:-1])
+        return pspec
+
+    def vc_spec(pspec, leaf_p, leaf_vc):
+        if leaf_vc.ndim == 0 or leaf_vc.shape == (0,):
+            return P(None) if leaf_vc.ndim else P()
+        if leaf_vc.ndim == leaf_p.ndim - 1:  # drop second-to-last entry
+            t = tuple(pspec)
+            return P(*(t[:-2] + t[-1:]))
+        return pspec
+
+    # param_specs is a pytree of P congruent with params; map against the
+    # opt_shape leaves (ShapeDtypeStructs)
+    import jax as _jax
+    is_p = lambda x: isinstance(x, P)
+    vr = _jax.tree.map(vr_spec, param_specs, opt_shape.m, opt_shape.vr,
+                       is_leaf=is_p)
+    vc = _jax.tree.map(vc_spec, param_specs, opt_shape.m, opt_shape.vc,
+                       is_leaf=is_p)
+    return AdafactorState(step=P(), m=param_specs, vr=vr, vc=vc)
+
+
+# --------------------------------------------------------------------------
+# cache specs
+# --------------------------------------------------------------------------
+
+
+def _cache_leaf_spec(path, leaf, cfg: ModelConfig, pol: ShardingPolicy) -> P:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    if leaf.ndim == 0 or name == "len":
+        return P()
+    stacked = any(k.startswith("slot") for k in keys) or \
+        ("shared" in keys) or ("self" in keys) or ("cross" in keys)
+    prefix = (None,) if stacked else ()
+    body = leaf.shape[1:] if stacked else leaf.shape
+
+    def entry(dim, axes):
+        return _spec_entry(dim, axes, pol) if axes else None
+
+    if name in ("k", "v", "k_scale", "v_scale"):  # (B,S,K[,Hd])
+        scales = name.endswith("_scale")
+        b, s, kh = body[0], body[1], body[2]
+        tail = () if scales else (None,)
+        if pol.long_context:
+            seq = entry(s, pol.data_axes + pol.model_axes)
+            return P(*prefix, None, seq, None, *tail)
+        batch = entry(b, pol.data_axes)
+        layout = pol.cache_layout
+        if layout == "auto":
+            layout = "heads" if kh % pol.size(pol.model_axes) == 0 else "seq"
+        if layout == "heads":
+            return P(*prefix, batch, None, entry(kh, pol.model_axes), *tail)
+        return P(*prefix, batch, entry(s, pol.model_axes), None, *tail)
+    if name == "ssm":  # (B, H, P, N)
+        b, h, hp, n = body
+        return P(*prefix, entry(b, pol.data_axes), entry(h, pol.model_axes),
+                 None, None)
+    if name == "conv":  # (B, W-1, conv_dim)
+        b, w, c = body
+        return P(*prefix, entry(b, pol.data_axes), None,
+                 entry(c, pol.model_axes))
+    return P(*([None] * leaf.ndim))
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, pol: ShardingPolicy):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(path, leaf, cfg, pol), cache_shape)
+
+
+# --------------------------------------------------------------------------
+# batch / token specs
+# --------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, batch_shape, pol: ShardingPolicy):
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        batch_entry = _spec_entry(b, pol.data_axes, pol)
+        return P(batch_entry, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+# --------------------------------------------------------------------------
+# convenience: NamedSharding trees
+# --------------------------------------------------------------------------
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,63 @@
+"""Family-dispatching facade over the model zoo.
+
+Gives training/serving/launch a uniform functional interface:
+
+    init_params(key, cfg)                      -> params
+    forward(params, cfg, **inputs)             -> (logits|hidden, aux)
+    prefill(params, cfg, max_len, **inputs)    -> (last logits, cache)
+    decode_step(params, cfg, token, cache)     -> (logits, cache)
+    init_cache(cfg, batch, max_len)            -> cache
+    input_names(cfg)                           -> which inputs the family takes
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models import encdec, transformer
+
+
+def input_names(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return ("frames", "tokens")
+    if cfg.family == "vlm":
+        return ("patch_embeds", "tokens")
+    return ("tokens",)
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.init_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
+            patch_embeds=None, return_hidden: bool = False):
+    if cfg.is_encoder_decoder:
+        return encdec.forward(params, cfg, frames, tokens,
+                              return_hidden=return_hidden)
+    return transformer.forward(params, cfg, tokens, patch_embeds=patch_embeds,
+                               return_hidden=return_hidden)
+
+
+def prefill(params, cfg: ModelConfig, max_len: int, *, tokens=None,
+            frames=None, patch_embeds=None):
+    if cfg.is_encoder_decoder:
+        return encdec.prefill(params, cfg, frames, tokens, max_len)
+    return transformer.prefill(params, cfg, tokens, max_len,
+                               patch_embeds=patch_embeds)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(params, cfg, token, cache)
+    return transformer.decode_step(params, cfg, token, cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    if cfg.is_encoder_decoder:
+        return encdec.init_cache(cfg, batch, max_len)
+    return transformer.init_cache(cfg, batch, max_len)

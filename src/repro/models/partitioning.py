@@ -1,0 +1,77 @@
+"""Activation-sharding context.
+
+GSPMD propagates weight shardings outward, but for FSDP-style layouts it
+can legally resolve an einsum by *replicating the activations across the
+data axis* (gathering the batch) instead of gathering the weights — which
+silently multiplies per-device FLOPs and memory by the data-parallel
+degree. The fix is the standard one: pin the residual stream with explicit
+``with_sharding_constraint`` at layer boundaries.
+
+Models are mesh-agnostic: they call :func:`shard_activation` everywhere it
+matters, which is a no-op unless the launcher has entered
+:func:`activation_sharding` (and a mesh context) around tracing.
+
+The ``seq`` axes enable sequence parallelism: the residual stream's token
+dim is sharded over the model axis between blocks (norms/elementwise run
+S-sharded; GSPMD inserts all-gather at QKV and reduce-scatter after the
+out-projection).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE = {"batch": None, "seq": None, "sizes": None}
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Tuple[str, ...],
+                        seq_axes: Optional[Tuple[str, ...]] = None,
+                        axis_sizes: Optional[dict] = None):
+    old = dict(_ACTIVE)
+    _ACTIVE.update(batch=tuple(batch_axes) if batch_axes else None,
+                   seq=tuple(seq_axes) if seq_axes else None,
+                   sizes=dict(axis_sizes or {}))
+    try:
+        yield
+    finally:
+        _ACTIVE.clear()
+        _ACTIVE.update(old)
+
+
+def _entry(dim: int, axes: Optional[Tuple[str, ...]]):
+    if not axes:
+        return None
+    sizes = _ACTIVE["sizes"] or {}
+    chosen = []
+    prod = 1
+    for a in axes:
+        size = sizes.get(a, 0)
+        if size and dim % (prod * size) == 0:
+            chosen.append(a)
+            prod *= size
+        else:
+            break
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def shard_activation(x: jax.Array, *, seq_dim: Optional[int] = 1) -> jax.Array:
+    """Constrain (B, S, ...) activations: batch -> data axes, optionally
+    seq -> seq axes. No-op outside an activation_sharding context."""
+    if _ACTIVE["batch"] is None or x.ndim < 2:
+        return x
+    entries = [None] * x.ndim
+    entries[0] = _entry(x.shape[0], _ACTIVE["batch"])
+    if seq_dim is not None and _ACTIVE["seq"] and x.ndim > seq_dim:
+        entries[seq_dim] = _entry(x.shape[seq_dim], _ACTIVE["seq"])
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def active() -> bool:
+    return _ACTIVE["batch"] is not None

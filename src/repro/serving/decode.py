@@ -1,0 +1,71 @@
+"""Serving step functions and host-side generation loops.
+
+``make_serve_step`` produces the function the dry-run lowers for decode
+shapes: one token in, (sampled token, updated cache) out. Sampling is
+greedy by default; temperature sampling threads a PRNG key.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    def serve_step(params, token, cache, key=None):
+        logits, cache = api.decode_step(params, cfg, token, cache)
+        logits = logits[:, -1, :]
+        if temperature > 0.0 and key is not None:
+            next_tok = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok[:, None].astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill_fn(params, **inputs):
+        return api.prefill(params, cfg, max_len, **inputs)
+    return prefill_fn
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # (B, S) int32
+    steps: int,
+    *,
+    max_len: Optional[int] = None,
+    temperature: float = 0.0,
+    seed: int = 0,
+    extra_inputs: Optional[Dict[str, Any]] = None,
+) -> np.ndarray:
+    """Host-side autoregressive generation (examples / JaxBackend)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps + 8)
+    inputs = dict(extra_inputs or {})
+    inputs["tokens"] = prompt
+    logits, cache = api.prefill(params, cfg, max_len, **inputs)
+    serve_step = jax.jit(make_serve_step(cfg, temperature))
+    if temperature > 0.0:
+        tok = jax.random.categorical(
+            jax.random.PRNGKey(seed), logits[:, -1, :] / temperature, axis=-1
+        )[:, None].astype(jnp.int32)
+    else:
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    out = [np.asarray(tok)]
+    key = jax.random.PRNGKey(seed + 1)
+    for i in range(steps - 1):
+        key, sub = jax.random.split(key)
+        tok, cache = serve_step(params, tok, cache,
+                                sub if temperature > 0 else None)
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)

@@ -1,0 +1,129 @@
+"""Continuous-batching request scheduler (serving example + JaxBackend).
+
+Fixed-slot design: a decode batch of ``num_slots`` sequences steps together;
+finished/empty slots are refilled from the queue between steps (prefill for
+the incoming request, cache splice into the slot). This is the standard
+TPU-serving shape: the decode step has a static (slots, 1) signature so it
+compiles once, and admission happens on the host between steps.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.serving.decode import make_serve_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 32
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ContinuousBatcher:
+    """Single-host scheduler over a fixed decode batch."""
+
+    def __init__(self, params, cfg: ModelConfig, num_slots: int = 4,
+                 max_len: int = 512, eos_id: int = 2):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.cache = api.init_cache(cfg, num_slots, max_len)
+        self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
+        self._step = jax.jit(make_serve_step(cfg))
+        self._uid = 0
+        self.finished: List[Request] = []
+        # per-slot position bookkeeping (host side)
+        self._slot_len = [0] * num_slots
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, submitted_at=time.time()))
+        return self._uid
+
+    # -- internals ---------------------------------------------------------
+
+    def _admit(self):
+        """Fill empty slots: prefill each incoming prompt and splice its
+        cache into the batch cache at the slot index."""
+        for slot in range(self.num_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt[None, :])
+            logits, cache1 = api.prefill(self.params, self.cfg,
+                                         self.max_len, tokens=prompt)
+            # splice single-sequence cache into the batch cache
+            def splice(batch_leaf, one_leaf):
+                if batch_leaf.ndim == 0 or one_leaf.shape == batch_leaf.shape:
+                    return batch_leaf
+                # find the batch axis: the axis where shapes differ
+                for ax in range(batch_leaf.ndim):
+                    if batch_leaf.shape[ax] == self.num_slots and \
+                            one_leaf.shape[ax] == 1:
+                        return jax.lax.dynamic_update_slice_in_dim(
+                            batch_leaf, one_leaf.astype(batch_leaf.dtype),
+                            slot, axis=ax)
+                return batch_leaf
+            new_cache = jax.tree.map(splice, dict(self.cache), dict(cache1))
+            new_cache["len"] = self.cache["len"]  # batch len handled below
+            self.cache = new_cache
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(tok)
+            self.tokens = self.tokens.at[slot, 0].set(tok)
+            self.slots[slot] = req
+            self._slot_len[slot] = len(req.prompt)
+
+    def _uniform_len(self) -> int:
+        """The batch cache tracks one length; slots prefix-pad to align.
+        We conservatively use the max active length."""
+        return max([l for l in self._slot_len], default=0)
+
+    def step(self) -> int:
+        """One scheduler tick: admit, decode one token for every active
+        slot, retire finished requests. Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        self.cache = {**self.cache,
+                      "len": jnp.asarray(self._uniform_len(), jnp.int32)}
+        tok, self.cache = self._step(self.params, self.tokens, self.cache)
+        self.tokens = tok
+        for i in active:
+            self._slot_len[i] += 1
+            req = self.slots[i]
+            t = int(tok[i, 0])
+            req.generated.append(t)
+            if t == self.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                req.finished_at = time.time()
+                self.finished.append(req)
+                self.slots[i] = None
+                self._slot_len[i] = 0
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

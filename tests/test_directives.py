@@ -1,0 +1,206 @@
+"""Directive library: every directive applies cleanly where its LHS
+matches, produces a valid executable pipeline, and preserves final-output
+scoreability."""
+
+import pytest
+
+from repro.core.agent import AgentContext
+from repro.core.directives import DIRECTIVES, applicable
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.operators import (describe, output_fields,
+                                    validate_pipeline)
+from repro.engine.workloads import WORKLOADS
+
+WLS = {name: ctor() for name, ctor in WORKLOADS.items()}
+
+
+def _ctx(w, seed=0):
+    return AgentContext(w.sample, w.tags, seed=seed)
+
+
+def test_directive_count_meets_paper():
+    assert len(DIRECTIVES) >= 31, "paper: over 30 directives"
+    new = [d for d in DIRECTIVES if d.new_in_moar]
+    assert len(new) >= 18, "paper: 18 new directives in MOAR"
+    cats = {d.category for d in DIRECTIVES}
+    assert {"fusion_reordering", "code_synthesis", "data_decomposition",
+            "projection_synthesis", "llm_centric"} <= cats
+
+
+def test_every_directive_has_docs_and_schema():
+    for d in DIRECTIVES:
+        assert d.name and d.description and d.use_case, d.name
+        assert isinstance(d.schema, dict) and d.schema, d.name
+        assert d.example, d.name
+        assert "[" in d.stage1_doc() and d.name in d.stage2_doc()
+
+
+@pytest.mark.parametrize("directive", DIRECTIVES, ids=lambda d: d.name)
+def test_directive_applies_and_executes(directive):
+    """Find any workload pipeline where the LHS matches; instantiate,
+    apply, validate, and execute the rewritten pipeline."""
+    applied = 0
+    for name, w in WLS.items():
+        targets = directive.targets(w.initial_pipeline)
+        if not targets:
+            continue
+        ctx = _ctx(w)
+        params_list = directive.instantiate(ctx, w.initial_pipeline,
+                                            targets[0])
+        assert params_list, f"{directive.name}: no params"
+        for params in params_list:
+            assert directive.validate_params(params) is None
+            new_pipeline = directive.apply(w.initial_pipeline, targets[0],
+                                           params)
+            validate_pipeline(new_pipeline)
+            backend = SimBackend(seed=0, domain=w.domain)
+            out, stats = Executor(backend).run(new_pipeline, w.sample[:6])
+            acc = w.score(out, w.sample[:6])
+            assert 0.0 <= acc <= 1.0
+            applied += 1
+        if applied:
+            break
+    # some directives need structurally grown pipelines
+    if applied == 0:
+        w = WLS["cuad"]
+        found = False
+        for candidate in _structured_pipelines():
+            targets = directive.targets(candidate)
+            if not targets:
+                continue
+            params_list = directive.instantiate(_ctx(w), candidate,
+                                                targets[0])
+            new_pipeline = directive.apply(candidate, targets[0],
+                                           params_list[0])
+            validate_pipeline(new_pipeline)
+            found = True
+            break
+        assert found, f"{directive.name}: no LHS match anywhere"
+
+
+def _structured_pipelines():
+    """Pipelines exposing every structural LHS pattern."""
+    import copy
+
+    from repro.core.directives import BY_NAME
+    w = WLS["cuad"]
+    out = []
+    grown = _grown_pipeline()
+    out.append(grown)
+    # pure chunked pipeline: split -> gather -> map -> reduce
+    pure = w.initial_pipeline
+    d = BY_NAME["doc_chunking"]
+    pure = d.apply(pure, d.targets(pure)[0], {"chunk_size": 200})
+    out.append(pure)
+    # map -> filter adjacency (fusion / reordering)
+    mf = copy.deepcopy(w.initial_pipeline)
+    mf["operators"].append({
+        "name": "flt", "type": "filter",
+        "prompt": "keep docs mentioning clause_00",
+        "filter_tag": "clause_00",
+        "output_schema": {"keep": "bool"},
+        "model": "llama3.2-1b"})
+    out.append(mf)
+    # filter -> map adjacency
+    fm = copy.deepcopy(mf)
+    fm["operators"] = [fm["operators"][1], fm["operators"][0]]
+    out.append(fm)
+    # bare split (gather_insertion)
+    bare = copy.deepcopy(pure)
+    bare["operators"] = [op for op in bare["operators"]
+                         if op["type"] != "gather"]
+    out.append(bare)
+    return out
+
+
+def _grown_pipeline():
+    """A chunked pipeline exposing split/gather/map-map/filter patterns."""
+    import copy
+
+    from repro.core.directives import BY_NAME
+    w = WLS["cuad"]
+    p = w.initial_pipeline
+    d = BY_NAME["doc_chunking"]
+    t = d.targets(p)[0]
+    p = d.apply(p, t, {"chunk_size": 200})
+    # adjacent second extraction map (same-type fusion / map-filter fusion)
+    map_idx = next(i for i, op in enumerate(p["operators"])
+                   if op["type"] == "map")
+    second = copy.deepcopy(p["operators"][map_idx])
+    second["name"] = "second_map"
+    second["task_tags"] = w.tags[:3]
+    second["output_schema"] = {"extra_clauses": "list"}
+    p["operators"].insert(map_idx + 1, second)
+    # add a filter for cascade/fusion/reorder matchers
+    p["operators"].append({
+        "name": "final_filter", "type": "filter",
+        "prompt": "keep docs mentioning clause_00",
+        "filter_tag": "clause_00",
+        "output_schema": {"keep": "bool"},
+        "model": "llama3.2-1b",
+    })
+    validate_pipeline(p)
+    return p
+
+
+def test_fusion_preserves_output_schema():
+    from repro.core.directives import BY_NAME
+    w = WLS["cuad"]
+    p = w.initial_pipeline
+    # construct map -> map
+    import copy
+    p2 = copy.deepcopy(p)
+    second = copy.deepcopy(p2["operators"][0])
+    second["name"] = "second_map"
+    second["output_schema"] = {"extra": "list"}
+    second["task_tags"] = w.tags[:3]
+    p2["operators"].append(second)
+    d = BY_NAME["same_type_fusion"]
+    t = d.targets(p2)
+    assert t
+    fused = d.apply(p2, t[0], d.instantiate(_ctx(w), p2, t[0])[0])
+    validate_pipeline(fused)
+    assert output_fields(fused) >= output_fields(p2)
+    assert len(fused["operators"]) == len(p2["operators"]) - 1
+
+
+def test_map_filter_fusion_emits_code_filter():
+    import copy
+
+    from repro.core.directives import BY_NAME
+    w = WLS["cuad"]
+    p = copy.deepcopy(w.initial_pipeline)
+    p["operators"].append({
+        "name": "flt", "type": "filter",
+        "prompt": "keep docs mentioning clause_00",
+        "filter_tag": "clause_00",
+        "output_schema": {"keep": "bool"},
+        "model": "llama3.2-1b",
+    })
+    d = BY_NAME["map_filter_fusion"]
+    t = d.targets(p)
+    assert t, "map->filter must match"
+    out = d.apply(p, t[0], {"flag_field": "keep_flag"})
+    types = [o["type"] for o in out["operators"]]
+    assert "code_filter" in types
+    assert len(out["operators"]) == len(p["operators"])  # 2 -> 2 (map+code)
+    validate_pipeline(out)
+    be = SimBackend(seed=0, domain=w.domain)
+    docs, stats = Executor(be).run(out, w.sample[:6])
+    assert all("keep_flag" in dd for dd in docs)
+
+
+def test_pruning_rules_via_search():
+    """Chunking is never applied twice; compression never twice in a row."""
+    from repro.core.search import MOARSearch
+    w = WLS["cuad"]
+    res = MOARSearch(w, SimBackend(seed=1, domain=w.domain), budget=30,
+                     seed=1).run()
+    for n in res.evaluated:
+        path = n.path_actions()
+        splits = sum(1 for op in n.pipeline["operators"]
+                     if op["type"] == "split")
+        assert splits <= 1, f"double chunking: {path}"
+        for a, b in zip(path, path[1:]):
+            assert not (a == "doc_chunking" and b == "same_type_fusion")

@@ -1,0 +1,132 @@
+"""Executor/backend semantics + determinism + cost accounting."""
+
+import pytest
+
+from repro.engine.backend import SimBackend, Usage
+from repro.engine.executor import Executor, TransientLLMError
+from repro.engine.operators import make_pipeline, validate_pipeline, \
+    PipelineValidationError
+from repro.engine.workloads import WORKLOADS
+
+CUAD = WORKLOADS["cuad"]()
+
+
+def _exec(seed=0):
+    return Executor(SimBackend(seed=seed, domain="legal"), seed=seed)
+
+
+def test_split_gather_roundtrip():
+    p = make_pipeline("t", [
+        {"name": "s", "type": "split", "chunk_size": 50},
+        {"name": "g", "type": "gather", "prev": 1, "next": 1},
+    ])
+    docs = CUAD.sample[:3]
+    out, _ = _exec().run(p, docs)
+    assert len(out) > len(docs)
+    assert all("_parent_id" in d for d in out)
+    parents = {d["_parent_id"] for d in out}
+    assert parents == {d["id"] for d in docs}
+
+
+def test_sample_bm25_prefers_marker_chunks():
+    p = make_pipeline("t", [
+        {"name": "s", "type": "split", "chunk_size": 40},
+        {"name": "smp", "type": "sample", "method": "bm25", "size": 2,
+         "group_key": "_parent_id", "query_keywords": CUAD.tags},
+    ])
+    out, _ = _exec().run(p, CUAD.sample[:4])
+    # each parent contributes at most 2 chunks
+    from collections import Counter
+    counts = Counter(d["_parent_id"] for d in out)
+    assert all(v <= 2 for v in counts.values())
+
+
+def test_sample_size_bounds():
+    p = make_pipeline("t", [
+        {"name": "smp", "type": "sample", "method": "random", "size": 5},
+    ])
+    out, _ = _exec().run(p, CUAD.sample[:12])
+    assert len(out) == 5
+
+
+def test_unnest_explodes_lists():
+    p = make_pipeline("t", [{"name": "u", "type": "unnest", "field": "xs"}])
+    docs = [{"id": "a", "xs": [{"v": 1}, {"v": 2}]}, {"id": "b", "xs": []}]
+    out, _ = _exec().run(p, docs)
+    assert len(out) == 2 and all(d["id"].startswith("a#") for d in out)
+
+
+def test_code_filter_and_map():
+    p = make_pipeline("t", [
+        {"name": "cf", "type": "code_filter",
+         "code": {"kind": "keyword_filter",
+                  "keywords": [f"[{CUAD.tags[0]}]"], "min_hits": 1}},
+    ])
+    out, stats = _exec().run(p, CUAD.sample)
+    assert 0 < len(out) < len(CUAD.sample)
+    assert stats.cost == 0.0, "code ops cost $0 (paper §2.3)"
+
+
+def test_cost_scales_with_model_price():
+    from repro.core.models_catalog import catalog
+    cards = catalog()
+    cheap = min(cards, key=lambda m: cards[m].price_in)
+    exp = max(cards, key=lambda m: cards[m].price_in)
+    base = CUAD.initial_pipeline
+
+    def with_model(m):
+        import copy
+        p = copy.deepcopy(base)
+        p["operators"][0]["model"] = m
+        return p
+
+    _, s_cheap = _exec().run(with_model(cheap), CUAD.sample[:6])
+    _, s_exp = _exec().run(with_model(exp), CUAD.sample[:6])
+    assert s_exp.cost > s_cheap.cost
+
+
+def test_determinism():
+    out1, s1 = _exec(seed=7).run(CUAD.initial_pipeline, CUAD.sample[:8])
+    out2, s2 = _exec(seed=7).run(CUAD.initial_pipeline, CUAD.sample[:8])
+    assert s1.cost == s2.cost
+    assert CUAD.score(out1, CUAD.sample[:8]) == CUAD.score(out2, CUAD.sample[:8])
+
+
+def test_failure_injection_raises():
+    ex = Executor(SimBackend(seed=0, domain="legal"), fail_prob=1.0, seed=0)
+    with pytest.raises(TransientLLMError):
+        ex.run(CUAD.initial_pipeline, CUAD.sample[:2])
+
+
+def test_validation_rejects_bad_pipelines():
+    with pytest.raises(PipelineValidationError):
+        validate_pipeline(make_pipeline("bad", []))
+    with pytest.raises(PipelineValidationError):
+        validate_pipeline(make_pipeline("bad", [
+            {"name": "m", "type": "map"}]))  # no prompt/model
+    with pytest.raises(PipelineValidationError):
+        validate_pipeline(make_pipeline("bad", [
+            {"name": "m", "type": "nosuch"}]))
+
+
+def test_workload_scorers_bounds():
+    for name, ctor in WORKLOADS.items():
+        w = ctor()
+        assert w.score([], w.sample) == 0.0
+        docs = w.sample
+        assert len(w.sample) == 40 and len(w.test) == 100
+
+
+def test_context_window_truncation_hurts():
+    """A model reading beyond its window loses facts (whisper ctx 8k)."""
+    import copy
+    w = WORKLOADS["game_reviews"]()  # 6000-word docs
+    be = SimBackend(seed=0, domain=w.domain)
+    ex = Executor(be)
+    p_small = copy.deepcopy(w.initial_pipeline)
+    p_small["operators"][0]["model"] = "whisper-medium"   # 8k ctx, weak
+    p_big = copy.deepcopy(w.initial_pipeline)
+    p_big["operators"][0]["model"] = "gemma3-27b"         # 262k ctx, strong
+    out_s, _ = ex.run(p_small, w.sample)
+    out_b, _ = ex.run(p_big, w.sample)
+    assert w.score(out_b, w.sample) > w.score(out_s, w.sample)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on executor/engine invariants."""
+
+import copy
+
+from hypothesis import given, settings, strategies as st
+
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.operators import make_pipeline
+from repro.engine.workloads import WORKLOADS
+
+CUAD = WORKLOADS["cuad"]()
+MODELS = ["llama3.2-1b", "mamba2-370m", "gemma2-9b"]
+
+
+def _exec(seed=0):
+    return Executor(SimBackend(seed=seed, domain="legal"), seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 20), st.integers(0, 10_000))
+def test_sample_output_is_subset_with_size_bound(size, seed):
+    p = make_pipeline("t", [
+        {"name": "s", "type": "sample", "method": "random", "size": size}])
+    docs = CUAD.sample[:12]
+    out, _ = Executor(SimBackend(seed=seed, domain="legal"), seed=seed).run(
+        p, docs)
+    ids = {d["id"] for d in docs}
+    assert len(out) == min(size, len(docs))
+    assert all(d["id"] in ids for d in out)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(20, 400))
+def test_split_preserves_every_fact_value(chunk):
+    p = make_pipeline("t", [
+        {"name": "s", "type": "split", "chunk_size": chunk}])
+    docs = CUAD.sample[:4]
+    out, _ = _exec().run(p, docs)
+    joined = {}
+    for c in out:
+        joined.setdefault(c["_parent_id"], []).append(
+            (c["_chunk_idx"], c["contract"]))
+    for d in docs:
+        text = " ".join(t for _, t in sorted(joined[d["id"]]))
+        for f in d["_facts"]:
+            assert f["value"] in text, "split lost a fact value"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(MODELS), st.integers(0, 1000))
+def test_filter_output_subset_and_cost_positive(model, seed):
+    p = make_pipeline("t", [{
+        "name": "f", "type": "filter",
+        "prompt": "mentions clause_00?", "filter_tag": "clause_00",
+        "output_schema": {"keep": "bool"}, "model": model}])
+    docs = CUAD.sample[:10]
+    out, stats = Executor(SimBackend(seed=seed, domain="legal"),
+                          seed=seed).run(p, docs)
+    ids = {d["id"] for d in docs}
+    assert all(d["id"] in ids for d in out)
+    assert len(out) <= len(docs)
+    assert stats.cost > 0 and stats.llm_calls == len(docs)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(MODELS))
+def test_pipeline_cost_is_sum_of_per_op(model):
+    p = copy.deepcopy(CUAD.initial_pipeline)
+    p["operators"][0]["model"] = model
+    p["operators"].append({
+        "name": "f", "type": "filter",
+        "prompt": "q", "filter_tag": "clause_01",
+        "output_schema": {"keep": "bool"}, "model": model})
+    out, stats = _exec().run(p, CUAD.sample[:6])
+    assert abs(stats.cost - sum(stats.per_op.values())) < 1e-12
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 500))
+def test_compression_never_increases_tokens(seed):
+    base = CUAD.initial_pipeline
+    comp = make_pipeline("c", [
+        {"name": "ht", "type": "code_map",
+         "code": {"kind": "head_tail", "head": 80, "tail": 40}},
+        copy.deepcopy(base["operators"][0]),
+    ])
+    _, s_base = Executor(SimBackend(seed=seed, domain="legal"),
+                         seed=seed).run(base, CUAD.sample[:6])
+    _, s_comp = Executor(SimBackend(seed=seed, domain="legal"),
+                         seed=seed).run(comp, CUAD.sample[:6])
+    assert s_comp.in_tokens <= s_base.in_tokens
+    assert s_comp.cost <= s_base.cost

@@ -1,0 +1,134 @@
+"""Per-kernel allclose vs pure-jnp oracle across shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_ffn.ops import expert_ffn
+from repro.kernels.moe_ffn.ref import expert_ffn_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+FLASH_CASES = [
+    # b, s, h, kv, hd, window, softcap, dtype
+    (2, 64, 4, 2, 32, 0, 0.0, jnp.float32),
+    (1, 128, 4, 4, 64, 16, 0.0, jnp.float32),
+    (2, 96, 8, 2, 80, 0, 50.0, jnp.float32),
+    (1, 200, 4, 1, 128, 64, 30.0, jnp.float32),
+    (1, 64, 2, 2, 48, 0, 0.0, jnp.bfloat16),
+    (3, 33, 6, 3, 16, 7, 0.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,window,cap,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(b, s, h, kv, hd, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = _rand(ks[0], (b, s, h, hd), dtype)
+    k = _rand(ks[1], (b, s, kv, hd), dtype)
+    v = _rand(ks[2], (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window or None,
+                          softcap=cap, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=True, window=window, softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+SSD_CASES = [
+    # b, s, h, p, g, n, chunk
+    (2, 64, 4, 16, 1, 32, 16),
+    (1, 128, 8, 32, 2, 16, 32),
+    (2, 48, 4, 8, 4, 8, 16),
+    (1, 96, 2, 64, 1, 64, 24),
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", SSD_CASES)
+def test_ssd_matches_sequential_ref(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jnp.ones((h,))
+    y, hf = ssd(x, dt, A, Bm, Cm, D, chunk)
+    yr, hfr = ssd_ref(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A,
+                      Bm.transpose(0, 2, 1, 3), Cm.transpose(0, 2, 1, 3),
+                      D, jnp.zeros((b, h, p, n)))
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(yr.transpose(0, 2, 1, 3)),
+                               atol=5e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr), atol=5e-4)
+
+
+def test_ssd_initial_state_carries():
+    """Splitting a sequence in two with state carry == one pass."""
+    b, s, h, p, g, n, chunk = 1, 64, 2, 8, 1, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jnp.ones((h,))
+    y_full, h_full = ssd(x, dt, A, Bm, Cm, D, chunk)
+    half = s // 2
+    y1, h1 = ssd(x[:, :half], dt[:, :half], A, Bm[:, :half], Cm[:, :half],
+                 D, chunk)
+    y2, h2 = ssd(x[:, half:], dt[:, half:], A, Bm[:, half:], Cm[:, half:],
+                 D, chunk, initial_state=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, half:]), np.asarray(y2),
+                               atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), atol=5e-4)
+
+
+MOE_CASES = [
+    (2, 4, 16, 64, 128, 8, 64),
+    (1, 8, 100, 32, 300, 16, 128),
+    (1, 2, 8, 16, 48, 8, 48),
+]
+
+
+@pytest.mark.parametrize("g,e,c,d,f,bc,bf", MOE_CASES)
+def test_moe_ffn_matches_ref(g, e, c, d, f, bc, bf):
+    ks = jax.random.split(jax.random.PRNGKey(g * e + c), 4)
+    x = jax.random.normal(ks[0], (g, e, c, d)) * 0.5
+    wg = jax.random.normal(ks[1], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (e, f, d)) * 0.1
+    out = expert_ffn(x, wg, wu, wd, block_c=bc, block_f=bf)
+    ref = expert_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+DECODE_CASES = [
+    # b, s, h, kv, hd, valid_len, softcap
+    (2, 256, 8, 2, 64, 200, 0.0),
+    (1, 512, 4, 4, 128, 512, 30.0),
+    (3, 96, 16, 1, 80, 77, 0.0),
+    (2, 64, 4, 2, 48, 1, 0.0),   # single valid entry
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,vlen,cap", DECODE_CASES)
+def test_flash_decode_matches_ref(b, s, h, kv, hd, vlen, cap):
+    from repro.kernels.flash_decode.ops import flash_decode
+    from repro.kernels.flash_decode.ref import decode_ref
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    out = flash_decode(q, k, v, vlen, softcap=cap, block_s=64)
+    g = h // kv
+    ref = decode_ref(q.reshape(b, kv, g, hd), k, v, vlen, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out.reshape(b, kv, g, hd)),
+                               np.asarray(ref), atol=2e-5)

@@ -1,0 +1,72 @@
+"""Property-based tests (hypothesis) for Pareto/search invariants."""
+
+from dataclasses import dataclass
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pareto
+from repro.core.search import widening_cap
+
+
+@dataclass
+class Pt:
+    cost: float
+    acc: float
+
+
+points_strategy = st.lists(
+    st.tuples(st.floats(0, 10, allow_nan=False),
+              st.floats(0, 1, allow_nan=False)).map(lambda t: Pt(*t)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points_strategy)
+def test_pareto_set_members_not_dominated(pts):
+    front = pareto.pareto_set(pts)
+    assert front, "frontier never empty for nonempty input"
+    for p in front:
+        assert not any(q.acc > p.acc and q.cost <= p.cost
+                       for q in pts if q is not p)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points_strategy)
+def test_every_point_dominated_or_on_frontier(pts):
+    front = pareto.pareto_set(pts)
+    for p in pts:
+        if p in front:
+            continue
+        assert any(q.acc > p.acc and q.cost <= p.cost for q in front
+                   if q is not p)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points_strategy)
+def test_contribution_positive_iff_extends_frontier(pts):
+    """delta(P) > 0 iff P strictly beats every point at <= its cost."""
+    for p in pts:
+        delta = pareto.contribution(p, pts)
+        best_other = pareto.best_acc_at_cost(pts, p.cost, exclude=p)
+        assert abs(delta - (p.acc - best_other)) < 1e-12
+        if delta > 0:
+            assert all(q.acc < p.acc for q in pts
+                       if q is not p and q.cost <= p.cost)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 10_000))
+def test_progressive_widening_monotone_sublinear(n):
+    w = widening_cap(n)
+    assert w >= 2
+    assert widening_cap(n + 1) >= w
+    assert w <= 1 + int(n ** 0.5) + 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(points_strategy, st.floats(0.1, 20, allow_nan=False))
+def test_hypervolume_nonnegative_and_monotone(pts, ref):
+    hv = pareto.hypervolume(pts, ref)
+    assert hv >= 0.0
+    better = pts + [Pt(cost=0.0, acc=1.0)]
+    assert pareto.hypervolume(better, ref) >= hv - 1e-9
