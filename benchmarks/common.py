@@ -10,15 +10,13 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Any, Dict, List
 
-from repro.baselines import OPTIMIZERS
-from repro.core.search import MOARSearch
 from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor
 from repro.engine.operators import LLM_TYPES, models_used, op_types
 from repro.engine.workloads import WORKLOADS
+from repro.pipeline import optimizer_names, run_optimizer
 
 BUDGET = 40
 ART_DIR = "artifacts/bench"
@@ -50,46 +48,28 @@ def run_workload(name: str, seed: int = 0, budget: int = BUDGET
                                       "op_types": op_types(w.initial_pipeline)}],
                            "opt_cost": 0.0, "opt_latency_s": 0.0}
 
-    # MOAR
-    t0 = time.time()
-    search = MOARSearch(w, backend, budget=budget, seed=seed)
-    res = search.run()
-    opt_cost = sum(n.cost for n in res.evaluated)
-    plans = []
-    for n in res.frontier:
-        e = _test_eval(executor, w, n.pipeline)
-        plans.append({**e,
-                      "sample_acc": n.acc, "sample_cost": n.cost,
-                      "path": n.path_actions(),
-                      "n_ops": len(n.pipeline["operators"]),
-                      "models": models_used(n.pipeline),
-                      "op_types": op_types(n.pipeline),
-                      "eval_index": n.eval_index})
-    results["moar"] = {
-        "plans": plans,
-        "opt_cost": opt_cost,
-        "opt_latency_s": res.wall_s,
-        "budget_used": res.budget_used,
-        "errors": res.errors,
-        "n_evaluated": len(res.evaluated),
-    }
-
-    # baselines
-    for oname, cls in OPTIMIZERS.items():
-        opt = cls(w, backend, budget=budget, seed=seed)
-        r = opt.optimize()
+    # MOAR + baselines: all five optimizers speak the shared
+    # Optimizer.optimize() protocol, so one loop covers the suite
+    for oname in optimizer_names():
+        r = run_optimizer(oname, w, backend, budget=budget, seed=seed)
         opt_cost = sum(p.cost for p in r.evaluated)
         plans = []
         for p in r.frontier:
             e = _test_eval(executor, w, p.pipeline)
-            plans.append({**e, "sample_acc": p.acc, "sample_cost": p.cost,
-                          "note": p.note,
-                          "n_ops": len(p.pipeline["operators"]),
-                          "models": models_used(p.pipeline),
-                          "op_types": op_types(p.pipeline)})
+            plan = {**e, "sample_acc": p.acc, "sample_cost": p.cost,
+                    "note": p.note,
+                    "n_ops": len(p.pipeline["operators"]),
+                    "models": models_used(p.pipeline),
+                    "op_types": op_types(p.pipeline)}
+            # optimizer-specific extras (MOAR: rewrite path, eval index)
+            plan.update({k: p.meta[k] for k in ("path", "eval_index")
+                         if k in p.meta})
+            plans.append(plan)
         results[oname] = {"plans": plans, "opt_cost": opt_cost,
                           "opt_latency_s": r.wall_s,
-                          "budget_used": r.budget_used}
+                          "budget_used": r.budget_used,
+                          "errors": r.errors,
+                          "n_evaluated": len(r.evaluated)}
     return results
 
 

@@ -1,15 +1,21 @@
 """Head-to-head: MOAR vs the four baseline optimizers on one workload.
 
+Every optimizer — MOAR's global search and all four baselines — is
+constructed and run through the shared ``repro.pipeline`` Optimizer
+protocol (``optimize(pipeline, workload, budget) -> SearchResult``), so
+this script has no per-optimizer glue: one loop over the registry.
+
   PYTHONPATH=src python examples/compare_optimizers.py [workload]
 """
 
 import sys
 
-from repro.baselines import OPTIMIZERS
-from repro.core.search import MOARSearch
 from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor
 from repro.engine.workloads import WORKLOADS
+from repro.pipeline import Optimizer, get_optimizer, optimizer_names
+
+BUDGET = 40
 
 
 def main():
@@ -22,20 +28,18 @@ def main():
         out, stats = executor.run(pipeline, w.test)
         return w.score(out, w.test), stats.cost
 
-    print(f"workload: {name} | budget: 40 evaluations each")
-    res = MOARSearch(w, backend, budget=40, seed=0).run()
-    acc, cost = test_acc(res.best().pipeline)
-    print(f"  {'MOAR':>12s}: best test acc {acc:.3f} (${cost:.4f}), "
-          f"frontier size {len(res.frontier)}")
-
-    for oname, cls in OPTIMIZERS.items():
-        r = cls(w, backend, budget=40, seed=0).optimize()
-        if not r.frontier:
+    print(f"workload: {name} | budget: {BUDGET} evaluations each")
+    for oname in optimizer_names():
+        opt = get_optimizer(oname)(w, backend, budget=BUDGET, seed=0)
+        assert isinstance(opt, Optimizer), oname  # protocol conformance
+        res = opt.optimize(w.initial_pipeline, w, BUDGET)
+        if not res.frontier:
             continue
-        best = max(r.frontier, key=lambda p: p.acc)
+        best = max(res.frontier, key=lambda p: p.acc)
         acc, cost = test_acc(best.pipeline)
-        print(f"  {oname:>12s}: best test acc {acc:.3f} (${cost:.4f}), "
-              f"returned {len(r.frontier)} plan(s)")
+        label = "MOAR" if oname == "moar" else oname
+        print(f"  {label:>12s}: best test acc {acc:.3f} (${cost:.4f}), "
+              f"returned {len(res.frontier)} plan(s)")
 
 
 if __name__ == "__main__":

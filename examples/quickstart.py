@@ -1,35 +1,42 @@
 """Quickstart: optimize a document-processing pipeline with MOAR.
 
-Builds the CUAD-style legal workload, runs the MOAR optimizer with a
-40-evaluation budget, and prints the discovered accuracy/cost Pareto
-frontier — the end-to-end path of the paper in one script.
+Uses the typed ``repro.pipeline`` public API end-to-end: the workload's
+raw-dict config is lifted into a frozen ``Pipeline`` (lossless round-trip,
+hash-preserving), the optimizer is resolved from the registry and run
+through the shared ``Optimizer.optimize()`` protocol, and the discovered
+accuracy/cost Pareto frontier is printed — the paper's end-to-end path in
+one script.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core.search import MOARSearch
 from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor
-from repro.engine.operators import describe
 from repro.engine.workloads import WORKLOADS
+from repro.pipeline import Pipeline, get_optimizer
+
+BUDGET = 40
 
 
 def main():
     workload = WORKLOADS["cuad"]()
     backend = SimBackend(seed=0, domain=workload.domain)
 
-    print("user pipeline:", describe(workload.initial_pipeline))
-    search = MOARSearch(workload, backend, budget=40, seed=0)
-    result = search.run()
+    # typed view of the user's pipeline config (dicts keep working too)
+    user_plan = Pipeline.from_dict(workload.initial_pipeline)
+    print("user pipeline:", user_plan.describe())
+
+    search = get_optimizer("moar")(workload, backend, budget=BUDGET, seed=0)
+    result = search.optimize(user_plan, workload, BUDGET)
 
     print(f"\nsearch: {result.budget_used} evaluations, "
           f"{len(result.evaluated)} pipelines, {result.wall_s:.1f}s")
-    print(f"initial accuracy (D_o): {result.root.acc:.3f} "
-          f"at ${result.root.cost:.4f}")
+    root = result.native.root
+    print(f"initial accuracy (D_o): {root.acc:.3f} at ${root.cost:.4f}")
     print("\nPareto frontier (sample estimates):")
-    for node in result.frontier:
-        path = " -> ".join(node.path_actions()) or "(original)"
-        print(f"  ${node.cost:8.4f}  acc={node.acc:.3f}  {path[:90]}")
+    for plan in result.frontier:
+        path = " -> ".join(plan.meta.get("path", [])) or "(original)"
+        print(f"  ${plan.cost:8.4f}  acc={plan.acc:.3f}  {path[:90]}")
 
     # held-out evaluation of the best plan
     best = result.best()
@@ -38,7 +45,8 @@ def main():
     print(f"\nbest plan on held-out test set: "
           f"acc={workload.score(out, workload.test):.3f} "
           f"cost=${stats.cost:.4f}")
-    print("best plan structure:", describe(best.pipeline))
+    print("best plan structure:",
+          Pipeline.from_dict(best.pipeline).describe())
 
 
 if __name__ == "__main__":

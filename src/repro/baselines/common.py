@@ -1,35 +1,28 @@
-"""Shared protocol for baseline optimizers."""
+"""Shared base class for baseline optimizers.
+
+Baselines report through the unified ``repro.pipeline`` optimizer API:
+``optimize(pipeline, workload, budget)`` returns the optimizer-agnostic
+``SearchResult`` of ``PlanPoint``s, so benchmarks/examples treat MOAR and
+every baseline identically. ``EvalPoint``/``BaselineResult`` remain as
+aliases of the unified types for older call sites.
+"""
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import replace as _dc_replace
+from typing import Dict, List, Optional, Tuple
 
-from repro.core import pareto
 from repro.engine.executor import Executor, TransientLLMError
 from repro.engine.operators import PipelineConfig, pipeline_hash
 from repro.engine.workloads import Workload
+from repro.pipeline.model import PipelineLike, as_config
+from repro.pipeline.optimizers import (PlanPoint, SearchResult,
+                                       pareto_plan_points)
 
-
-@dataclass
-class EvalPoint:
-    pipeline: PipelineConfig
-    acc: float
-    cost: float
-    note: str = ""
-
-
-@dataclass
-class BaselineResult:
-    name: str
-    evaluated: List[EvalPoint]
-    frontier: List[EvalPoint]
-    budget_used: int
-    wall_s: float
-
-    def best(self) -> EvalPoint:
-        return max(self.evaluated, key=lambda p: p.acc)
+# compatibility aliases (pre-repro.pipeline names)
+EvalPoint = PlanPoint
+BaselineResult = SearchResult
 
 
 class BaseOptimizer:
@@ -43,16 +36,16 @@ class BaseOptimizer:
         self.seed = seed
         self.executor = Executor(backend, seed=seed)
         self.cache: Dict[str, Tuple[float, float]] = {}
-        self.evaluated: List[EvalPoint] = []
-        self.returned: Optional[List[EvalPoint]] = None  # single-plan systems
+        self.evaluated: List[PlanPoint] = []
+        self.returned: Optional[List[PlanPoint]] = None  # single-plan systems
         self.t = 0
 
     def evaluate(self, pipeline: PipelineConfig, note: str = ""
-                 ) -> Optional[EvalPoint]:
+                 ) -> Optional[PlanPoint]:
         h = pipeline_hash(pipeline)
         if h in self.cache:
             acc, cost = self.cache[h]
-            pt = EvalPoint(pipeline, acc, cost, note)
+            pt = PlanPoint(pipeline, acc, cost, note)
             self.evaluated.append(pt)
             return pt
         if self.t >= self.budget:
@@ -65,26 +58,39 @@ class BaseOptimizer:
         acc = self.workload.score(out, self.workload.sample)
         self.cache[h] = (acc, stats.cost)
         self.t += 1
-        pt = EvalPoint(pipeline, acc, stats.cost, note)
+        pt = PlanPoint(pipeline, acc, stats.cost, note)
         self.evaluated.append(pt)
         return pt
 
-    def optimize(self) -> BaselineResult:
+    def optimize(self, pipeline: Optional[PipelineLike] = None,
+                 workload: Optional[Workload] = None,
+                 budget: Optional[int] = None) -> SearchResult:
+        """Unified ``Optimizer.optimize()`` entry point; the arguments
+        optionally override what the optimizer was constructed with.
+        Each call is a fresh run: accumulated evaluations, budget use, and
+        the measurement cache are reset (the cache is keyed by pipeline
+        hash only, so carrying it across workload overrides would report
+        a previous workload's scores)."""
+        if workload is not None:
+            self.workload = workload
+        if pipeline is not None:
+            self.workload = _dc_replace(self.workload,
+                                        initial_pipeline=as_config(pipeline))
+        if budget is not None:
+            self.budget = budget
+        self.cache = {}
+        self.evaluated = []
+        self.returned = None
+        self.t = 0
         t0 = time.time()
         self._run()
         # single-plan systems (DocETL-V1, LOTUS) return their chosen plan,
         # not the Pareto set of everything they happened to evaluate
-        frontier = pareto.pareto_set(self.returned
-                                     if self.returned is not None
-                                     else self.evaluated)
-        seen, dedup = set(), []
-        for p in sorted(frontier, key=lambda p: (p.cost, -p.acc)):
-            key = (round(p.cost, 9), round(p.acc, 9))
-            if key not in seen:
-                seen.add(key)
-                dedup.append(p)
-        return BaselineResult(self.name, list(self.evaluated), dedup,
-                              self.t, time.time() - t0)
+        frontier = pareto_plan_points(self.returned
+                                      if self.returned is not None
+                                      else self.evaluated)
+        return SearchResult(self.name, list(self.evaluated), frontier,
+                            self.t, time.time() - t0)
 
     def _run(self):
         raise NotImplementedError

@@ -25,6 +25,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.engine.operators import (LLM_TYPES, OpConfig, PipelineConfig,
                                     clone_pipeline, validate_pipeline)
+from repro.pipeline.spec import operator_spec
 
 Params = Dict[str, Any]
 
@@ -52,11 +53,16 @@ def _is_extract_map(op: OpConfig) -> bool:
 
 
 def _text_source_ops(pipeline) -> List[int]:
-    """Indices of semantic ops that read document text (compressible)."""
+    """Indices of semantic ops that read document text (compressible).
+
+    Consults the registry's rewrite-target metadata: any operator type
+    registered with the ``reads_text`` tag is a compression target, so
+    custom LLM operators opt in without touching the directive library.
+    """
     out = []
     for i, op in enumerate(pipeline["operators"]):
-        if op["type"] in ("map", "filter", "extract") and \
-                op["type"] in LLM_TYPES and not op.get("format_field"):
+        if "reads_text" in operator_spec(op["type"]).rewrite_tags and \
+                not op.get("format_field"):
             out.append(i)
     return out
 

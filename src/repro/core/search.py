@@ -19,7 +19,7 @@ from __future__ import annotations
 import math
 import time
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import pareto
@@ -32,6 +32,9 @@ from repro.engine.executor import Executor, TransientLLMError
 from repro.engine.operators import (PipelineConfig, clone_pipeline,
                                     pipeline_hash, validate_pipeline)
 from repro.engine.workloads import Workload
+from repro.pipeline.model import PipelineLike, as_config
+from repro.pipeline.optimizers import (PlanPoint,
+                                       SearchResult as UnifiedResult)
 
 
 @dataclass(eq=False)  # identity equality: nodes form a tree (deep __eq__
@@ -86,6 +89,8 @@ class SearchResult:
 
 
 class MOARSearch:
+    name = "moar"  # Optimizer-protocol registry name (repro.pipeline)
+
     def __init__(
         self,
         workload: Workload,
@@ -372,6 +377,50 @@ class MOARSearch:
             errors=self.errors,
             wall_s=time.time() - t0,
             history=history,
+        )
+
+    # -- unified Optimizer protocol (repro.pipeline) -----------------------------------
+
+    def optimize(self, pipeline: Optional[PipelineLike] = None,
+                 workload: Optional[Workload] = None,
+                 budget: Optional[int] = None) -> UnifiedResult:
+        """Shared ``Optimizer.optimize()`` entry point: run the MOAR
+        search and report the optimizer-agnostic ``SearchResult``
+        (PlanPoints carry the rewrite path / eval index in ``meta``; the
+        native tree result rides in ``native``). Each call is a fresh
+        search: evaluation list, budget use, caches, and agent statistics
+        are reset (the measurement cache is keyed by pipeline hash only,
+        so carrying it across workload overrides would report a previous
+        workload's scores)."""
+        if workload is not None:
+            self.workload = workload
+        if pipeline is not None:
+            self.workload = _dc_replace(self.workload,
+                                        initial_pipeline=as_config(pipeline))
+        if budget is not None:
+            self.budget = budget
+        self.cache = {}
+        self.evaluated = []
+        self.t = 0
+        self.errors = 0
+        self.model_stats = ModelStats()
+        self.dstats = DirectiveStats()
+        res = self.run()
+
+        def point(n: Node) -> PlanPoint:
+            return PlanPoint(n.pipeline, n.acc, n.cost, note=n.last_action,
+                             meta={"path": n.path_actions(),
+                                   "eval_index": n.eval_index,
+                                   "depth": n.depth})
+
+        return UnifiedResult(
+            optimizer=self.name,
+            evaluated=[point(n) for n in res.evaluated],
+            frontier=[point(n) for n in res.frontier],
+            budget_used=res.budget_used,
+            wall_s=res.wall_s,
+            errors=res.errors,
+            native=res,
         )
 
     # -- held-out evaluation ----------------------------------------------------------

@@ -88,6 +88,10 @@ def _hash01(*parts) -> float:
 
 
 class SimBackend:
+    # Backend-protocol batching hint: the simulator is a pure function of
+    # (seed, doc, op) so batching buys nothing — invoke one at a time.
+    preferred_batch_size = 1
+
     def __init__(self, seed: int = 0, domain: str = "generic",
                  cards: Optional[Dict[str, ModelCard]] = None):
         self.seed = seed
@@ -450,6 +454,10 @@ class SimBackend:
 
 class JaxBackend:
     """Operators run real reduced-model forward passes from the pool."""
+
+    # Backend-protocol batching hint: real decoding amortizes prefill
+    # across requests (continuous batcher default slot count).
+    preferred_batch_size = 4
 
     def __init__(self, seed: int = 0, max_new_tokens: int = 8):
         import jax

@@ -1,0 +1,346 @@
+"""Built-in operator registrations (paper §2.1, Table 7).
+
+The execution semantics of every Table 7 operator (map, parallel_map,
+reduce, filter, resolve, equijoin, unnest, split, gather, sample, extract,
+code_map/code_reduce/code_filter), registered into the
+``repro.pipeline`` operator registry. Each registration bundles the
+type's validation rules, execution function, cost kind (LLM vs. $0), and
+rewrite-target metadata; ``Executor.run`` dispatches through the
+registry, so these functions replaced the old ``Executor._exec_*``
+method chain one-for-one.
+
+Execution functions take ``(executor, op, docs, stats)``: the executor
+provides the backend, failure injection (``_maybe_fail``), grouping, and
+the run seed; ``stats.charge`` applies the paper's cost model.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List
+
+from repro.data.documents import (Dataset, Document, doc_text,
+                                  main_text_key)
+from repro.engine import codeops
+from repro.engine.backend import Usage, _hash01
+from repro.pipeline.spec import (KIND_AUX, KIND_CODE, KIND_LLM,
+                                 PipelineValidationError, register_operator)
+
+# ---------------------------------------------------------------------------
+# per-type validators (rules beyond simple required keys)
+# ---------------------------------------------------------------------------
+
+
+def _validate_reduce(op):
+    if "reduce_key" not in op:
+        raise PipelineValidationError(f"{op['name']}: reduce needs reduce_key "
+                                      "(may be '_all')")
+
+
+def _validate_sample(op):
+    if op.get("method") not in ("random", "bm25", "embedding", "stratified"):
+        raise PipelineValidationError(f"{op['name']}: bad sample method")
+    if not op.get("size"):
+        raise PipelineValidationError(f"{op['name']}: sample needs size")
+
+
+def _validate_code(op):
+    if not op.get("code"):
+        raise PipelineValidationError(f"{op['name']}: code op needs CodeSpec")
+
+
+# ---------------------------------------------------------------------------
+# semantic (LLM-invoking) operators
+# ---------------------------------------------------------------------------
+
+
+@register_operator(
+    "map", kind=KIND_LLM, required_keys=("prompt", "model", "output_schema"),
+    rewrite_tags=("reads_text", "model_bearing", "decomposable"),
+    description="LLM projection over each document (extraction, "
+                "summarization, classification, formatting)")
+def exec_map(ex, op, docs: Dataset, stats) -> Dataset:
+    out = []
+    for d in docs:
+        ex._maybe_fail(op, d.get("id"))
+        if op.get("summarize"):
+            fields, usage = ex.backend.run_summarize(op, d)
+        elif op.get("classify"):
+            spec = op["classify"]
+            label, usage = ex.backend.run_classify(
+                op, d, spec["classes"], spec["truth_field"])
+            fields = {spec["output_field"]: label}
+        else:
+            fields, usage = ex.backend.run_map(op, d)
+        stats.charge(op["name"], op["model"], usage, ex.backend)
+        out.append({**d, **fields})
+    return out
+
+
+@register_operator(
+    "parallel_map", kind=KIND_LLM,
+    required_keys=("prompt", "model", "output_schema"),
+    rewrite_tags=("model_bearing", "decomposable"),
+    description="independent sub-prompts over each document, merged")
+def exec_parallel_map(ex, op, docs: Dataset, stats) -> Dataset:
+    out = docs
+    for i, sub in enumerate(op["prompts"]):
+        sub_op = {**op, **sub, "name": f"{op['name']}.{i}"}
+        sub_op.pop("prompts", None)
+        out = exec_map(ex, sub_op, out, stats)
+    return out
+
+
+@register_operator(
+    "filter", kind=KIND_LLM,
+    required_keys=("prompt", "model", "output_schema"),
+    validate=None,
+    rewrite_tags=("reads_text", "model_bearing", "pushdown"),
+    description="LLM predicate keeping/dropping documents")
+def exec_filter(ex, op, docs: Dataset, stats) -> Dataset:
+    out = []
+    for d in docs:
+        ex._maybe_fail(op, d.get("id"))
+        keep, usage = ex.backend.run_filter(op, d)
+        stats.charge(op["name"], op["model"], usage, ex.backend)
+        if keep:
+            out.append(d)
+    return out
+
+
+@register_operator(
+    "reduce", kind=KIND_LLM,
+    required_keys=("prompt", "model", "output_schema"),
+    validate=_validate_reduce,
+    rewrite_tags=("model_bearing", "aggregation"),
+    description="LLM aggregation over groups (reduce_key, '_all' for "
+                "whole-collection)")
+def exec_reduce(ex, op, docs: Dataset, stats) -> Dataset:
+    out = []
+    for gkey, group in ex._group(docs, op["reduce_key"]).items():
+        ex._maybe_fail(op, gkey)
+        fields, usage = ex.backend.run_reduce(op, group)
+        stats.charge(op["name"], op["model"], usage, ex.backend)
+        doc = {"id": f"group_{gkey}", op["reduce_key"]: gkey, **fields}
+        if op.get("restore_id"):
+            # chunk-merge reduces group by _parent_id and must restore
+            # the original document identity (and its hidden truth, for
+            # scoring) so downstream scoring matches documents
+            doc["id"] = gkey
+            src = group[0]
+            for k in src:
+                if k.startswith("_") and k not in doc:
+                    doc[k] = src[k]
+            for k, v in src.items():
+                if not k.startswith("_") and k not in doc and k != "id":
+                    doc[k] = v
+        out.append(doc)
+    return out
+
+
+@register_operator(
+    "resolve", kind=KIND_LLM, required_keys=("prompt", "model"),
+    rewrite_tags=("model_bearing",),
+    description="canonicalize near-duplicate field values across documents")
+def exec_resolve(ex, op, docs: Dataset, stats) -> Dataset:
+    ex._maybe_fail(op, "resolve")
+    out, usage = ex.backend.run_resolve(op, docs)
+    stats.charge(op["name"], op["model"], usage, ex.backend)
+    return out
+
+
+@register_operator(
+    "equijoin", kind=KIND_LLM, required_keys=("prompt", "model"),
+    rewrite_tags=("model_bearing",),
+    description="semantic join of the stream against op['right_docs']")
+def exec_equijoin(ex, op, docs: Dataset, stats) -> Dataset:
+    right = op.get("right_docs", [])
+    fld_l, fld_r = op["left_field"], op["right_field"]
+    out = []
+    for d in docs:
+        lval = str(d.get(fld_l, "")).lower()
+        best = None
+        for r in right:
+            if str(r.get(fld_r, "")).lower() == lval:
+                best = r
+                break
+        usage = Usage(in_tokens=40 * max(len(right), 1), out_tokens=4,
+                      calls=1)
+        stats.charge(op["name"], op["model"], usage, ex.backend)
+        if best is not None:
+            out.append({**d, **{f"right_{k}": v for k, v in best.items()
+                                if not k.startswith("_")}})
+    return out
+
+
+@register_operator(
+    "extract", kind=KIND_LLM, required_keys=("prompt", "model"),
+    rewrite_tags=("reads_text", "model_bearing", "compression"),
+    description="LLM document compression: keep fact-bearing line ranges")
+def exec_extract(ex, op, docs: Dataset, stats) -> Dataset:
+    out = []
+    for d in docs:
+        ex._maybe_fail(op, d.get("id"))
+        fields, usage = ex.backend.run_extract(op, d)
+        stats.charge(op["name"], op["model"], usage, ex.backend)
+        out.append({**d, **fields})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# auxiliary ($0) operators
+# ---------------------------------------------------------------------------
+
+
+@register_operator(
+    "unnest", kind=KIND_AUX, required_keys=("field",),
+    description="explode a list-valued field into one document per element")
+def exec_unnest(ex, op, docs: Dataset, stats) -> Dataset:
+    fld = op["field"]
+    out = []
+    for d in docs:
+        vals = d.get(fld, [])
+        if not isinstance(vals, list):
+            out.append(d)
+            continue
+        for i, v in enumerate(vals):
+            nd = {k: w for k, w in d.items() if k != fld}
+            nd["id"] = f"{d.get('id')}#{i}"
+            if isinstance(v, dict):
+                nd.update(v)
+            else:
+                nd[fld] = v
+            out.append(nd)
+    return out
+
+
+@register_operator(
+    "split", kind=KIND_AUX, required_keys=("chunk_size",),
+    rewrite_tags=("chunker",),
+    description="split document text into fixed-size word chunks")
+def exec_split(ex, op, docs: Dataset, stats) -> Dataset:
+    size = op["chunk_size"]  # words
+    out = []
+    for d in docs:
+        key = op.get("text_key") or main_text_key(d)
+        words = str(d.get(key, "")).split()
+        n = max(1, math.ceil(len(words) / size))
+        for i in range(n):
+            chunk = " ".join(words[i * size:(i + 1) * size])
+            nd = dict(d)
+            nd["id"] = f"{d.get('id')}::c{i}"
+            nd[key] = chunk
+            nd["_parent_id"] = d.get("id")
+            nd["_chunk_idx"] = i
+            nd["_num_chunks"] = n
+            out.append(nd)
+    return out
+
+
+@register_operator(
+    "gather", kind=KIND_AUX, rewrite_tags=("chunker",),
+    description="widen each chunk with prev/next sibling context")
+def exec_gather(ex, op, docs: Dataset, stats) -> Dataset:
+    prev_k = op.get("prev", 1)
+    next_k = op.get("next", 0)
+    by_parent: Dict[Any, List[Document]] = {}
+    for d in docs:
+        by_parent.setdefault(d.get("_parent_id"), []).append(d)
+    out = []
+    for parent, chunks in by_parent.items():
+        chunks = sorted(chunks, key=lambda c: c.get("_chunk_idx", 0))
+        key = op.get("text_key") or main_text_key(chunks[0])
+        texts = [str(c.get(key, "")) for c in chunks]
+        for i, c in enumerate(chunks):
+            parts = []
+            for j in range(max(0, i - prev_k), i):
+                parts.append(texts[j])
+            parts.append(texts[i])
+            for j in range(i + 1, min(len(chunks), i + 1 + next_k)):
+                parts.append(texts[j])
+            nd = dict(c)
+            nd[key] = " ".join(parts)
+            out.append(nd)
+    return out
+
+
+def _score_doc(method: str, text: str, keywords: List[str]) -> float:
+    t = text.lower()
+    score = 0.0
+    for kw in keywords:
+        score += t.count(f"[{kw.lower()}]")
+        if method == "embedding":
+            score += 0.8 * t.count(f"(alt-{kw.lower()})")
+    return score
+
+
+@register_operator(
+    "sample", kind=KIND_AUX, validate=_validate_sample,
+    rewrite_tags=("sampler",),
+    description="keep a subset per group (random/bm25/embedding/stratified)")
+def exec_sample(ex, op, docs: Dataset, stats) -> Dataset:
+    method = op["method"]
+    size = op["size"]
+    group_key = op.get("group_key")
+    keywords = op.get("query_keywords", [])
+
+    def pick(cands: Dataset) -> Dataset:
+        if len(cands) <= size:
+            return list(cands)
+        if method == "random" or not keywords:
+            idx = sorted(range(len(cands)),
+                         key=lambda i: _hash01(ex.seed, "smp", op["name"],
+                                               cands[i].get("id")))
+            return [cands[i] for i in idx[:size]]
+        scored = sorted(
+            cands,
+            key=lambda d: (-_score_doc(method, doc_text(d), keywords),
+                           str(d.get("id"))))
+        return scored[:size]
+
+    if group_key:
+        out = []
+        for _, group in ex._group(docs, group_key).items():
+            out.extend(pick(group))
+        return out
+    return pick(docs)
+
+
+# ---------------------------------------------------------------------------
+# code-powered ($0) operators
+# ---------------------------------------------------------------------------
+
+
+@register_operator(
+    "code_map", kind=KIND_CODE, validate=_validate_code,
+    rewrite_tags=("code",),
+    description="deterministic CodeSpec projection per document")
+def exec_code_map(ex, op, docs: Dataset, stats) -> Dataset:
+    return [{**d, **codeops.run_code_map(op["code"], d)} for d in docs]
+
+
+@register_operator(
+    "code_filter", kind=KIND_CODE, validate=_validate_code,
+    rewrite_tags=("code", "pushdown"),
+    description="deterministic CodeSpec predicate per document")
+def exec_code_filter(ex, op, docs: Dataset, stats) -> Dataset:
+    return [d for d in docs if codeops.run_code_filter(op["code"], d)]
+
+
+@register_operator(
+    "code_reduce", kind=KIND_CODE, validate=_validate_code,
+    rewrite_tags=("code", "aggregation"),
+    description="deterministic CodeSpec aggregation over groups")
+def exec_code_reduce(ex, op, docs: Dataset, stats) -> Dataset:
+    key = op.get("reduce_key", "_all")
+    out = []
+    for gkey, group in ex._group(docs, key).items():
+        fields = codeops.run_code_reduce(op["code"], group)
+        doc = {"id": f"group_{gkey}", key: gkey, **fields}
+        if op.get("restore_id"):
+            doc["id"] = gkey
+            for k, v in group[0].items():
+                if k not in doc and k != "id":
+                    doc[k] = v
+        out.append(doc)
+    return out

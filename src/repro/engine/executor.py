@@ -1,14 +1,18 @@
 """Pipeline executor: runs an operator sequence over a document collection.
 
-Implements the execution semantics of every operator in Table 7 (map,
-parallel_map, reduce, filter, resolve, equijoin, unnest, split, gather,
-sample, extract, code_map/code_reduce/code_filter) against a pluggable
-backend (SimBackend / JaxBackend).
+Execution dispatches through the ``repro.pipeline`` operator registry
+(engine/builtin_ops.py registers the Table 7 set: map, parallel_map,
+reduce, filter, resolve, equijoin, unnest, split, gather, sample, extract,
+code_map/code_reduce/code_filter) against a pluggable backend satisfying
+the ``Backend`` protocol (SimBackend / JaxBackend), checked at
+construction. Custom operator types execute without touching this file:
+one ``@register_operator`` call is the whole integration.
 
 Returns (output documents, ExecutionStats) where stats carry the paper's
 cost model: $ cost = sum over LLM ops of tokens x model token price; code
-and auxiliary operators cost $0 (paper §2.3). A latency estimate (calls x
-size-dependent per-call latency / worker parallelism) feeds Table 9.
+and auxiliary operators cost $0 (paper §2.3). Latency (calls x
+size-dependent per-call latency / worker parallelism) feeds Table 8/9 and
+is recorded per operator alongside cost and calls in ``per_op``.
 
 Transient-failure injection (``fail_prob``) exercises the optimizer's
 error-handling path (paper §4.3.3) in tests.
@@ -16,21 +20,30 @@ error-handling path (paper §4.3.3) in tests.
 
 from __future__ import annotations
 
-import math
-import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
-from repro.data.documents import (Dataset, Document, doc_text,
-                                  main_text_key, word_count)
-from repro.engine import codeops
-from repro.engine.backend import SimBackend, Usage, _hash01
-from repro.engine.operators import (LLM_TYPES, PipelineConfig,
-                                    validate_pipeline)
+from repro.core.models_catalog import catalog
+from repro.data.documents import Dataset
+from repro.engine import builtin_ops  # noqa: F401 — registers Table 7 ops
+from repro.engine.backend import Usage, _hash01
+from repro.engine.operators import validate_pipeline
+from repro.pipeline.model import PipelineLike, as_config
+from repro.pipeline.protocols import batch_hint, check_backend
+from repro.pipeline.spec import operator_spec
 
 
 class TransientLLMError(RuntimeError):
     """Simulated API failure (rate limit / outage)."""
+
+
+@dataclass
+class OpStats:
+    """Per-operator accounting: cost, latency, and LLM call count."""
+
+    cost: float = 0.0
+    latency_s: float = 0.0
+    calls: int = 0
 
 
 @dataclass
@@ -40,7 +53,7 @@ class ExecutionStats:
     in_tokens: int = 0
     out_tokens: int = 0
     latency_s: float = 0.0
-    per_op: Dict[str, float] = field(default_factory=dict)
+    per_op: Dict[str, OpStats] = field(default_factory=dict)
 
     def charge(self, op_name: str, model: str, usage: Usage, backend):
         c = backend.usage_cost(model, usage) if model else 0.0
@@ -48,24 +61,33 @@ class ExecutionStats:
         self.llm_calls += usage.calls
         self.in_tokens += usage.in_tokens
         self.out_tokens += usage.out_tokens
-        self.per_op[op_name] = self.per_op.get(op_name, 0.0) + c
+        entry = self.per_op.setdefault(op_name, OpStats())
+        entry.cost += c
+        entry.calls += usage.calls
         if model:
-            from repro.core.models_catalog import catalog
             n_act = catalog()[model].active_params
-            self.latency_s += usage.calls * (0.15 + 2e-12 * n_act *
-                                             usage.out_tokens)
+            lat = usage.calls * (0.15 + 2e-12 * n_act * usage.out_tokens)
+            self.latency_s += lat
+            entry.latency_s += lat
+
+    def per_op_cost(self) -> Dict[str, float]:
+        return {k: v.cost for k, v in self.per_op.items()}
+
+    def per_op_latency(self) -> Dict[str, float]:
+        return {k: v.latency_s for k, v in self.per_op.items()}
 
 
 class Executor:
     def __init__(self, backend, *, fail_prob: float = 0.0, seed: int = 0,
                  workers: int = 3):
-        self.backend = backend
+        self.backend = check_backend(backend)
+        self.batch_hint = batch_hint(backend)
         self.fail_prob = fail_prob
         self.seed = seed
         self.workers = workers
         self._run_counter = 0  # transient failures vary across retries
 
-    # -- failure injection ---------------------------------------------------
+    # -- shared infrastructure for operator implementations -------------------
 
     def _maybe_fail(self, op, key):
         if self.fail_prob > 0 and \
@@ -73,43 +95,6 @@ class Executor:
                         op.get("name"), key) < self.fail_prob:
             raise TransientLLMError(
                 f"simulated API failure in {op.get('name')}")
-
-    # -- per-type execution ---------------------------------------------------
-
-    def _exec_map(self, op, docs: Dataset, stats) -> Dataset:
-        out = []
-        for d in docs:
-            self._maybe_fail(op, d.get("id"))
-            if op.get("summarize"):
-                fields, usage = self.backend.run_summarize(op, d)
-            elif op.get("classify"):
-                spec = op["classify"]
-                label, usage = self.backend.run_classify(
-                    op, d, spec["classes"], spec["truth_field"])
-                fields = {spec["output_field"]: label}
-            else:
-                fields, usage = self.backend.run_map(op, d)
-            stats.charge(op["name"], op["model"], usage, self.backend)
-            out.append({**d, **fields})
-        return out
-
-    def _exec_parallel_map(self, op, docs: Dataset, stats) -> Dataset:
-        out = docs
-        for i, sub in enumerate(op["prompts"]):
-            sub_op = {**op, **sub, "name": f"{op['name']}.{i}"}
-            sub_op.pop("prompts", None)
-            out = self._exec_map(sub_op, out, stats)
-        return out
-
-    def _exec_filter(self, op, docs: Dataset, stats) -> Dataset:
-        out = []
-        for d in docs:
-            self._maybe_fail(op, d.get("id"))
-            keep, usage = self.backend.run_filter(op, d)
-            stats.charge(op["name"], op["model"], usage, self.backend)
-            if keep:
-                out.append(d)
-        return out
 
     def _group(self, docs: Dataset, key: str) -> Dict[Any, Dataset]:
         if key == "_all":
@@ -119,191 +104,21 @@ class Executor:
             groups.setdefault(d.get(key), []).append(d)
         return groups
 
-    def _exec_reduce(self, op, docs: Dataset, stats) -> Dataset:
-        out = []
-        for gkey, group in self._group(docs, op["reduce_key"]).items():
-            self._maybe_fail(op, gkey)
-            fields, usage = self.backend.run_reduce(op, group)
-            stats.charge(op["name"], op["model"], usage, self.backend)
-            doc = {"id": f"group_{gkey}", op["reduce_key"]: gkey, **fields}
-            if op.get("restore_id"):
-                # chunk-merge reduces group by _parent_id and must restore
-                # the original document identity (and its hidden truth, for
-                # scoring) so downstream scoring matches documents
-                doc["id"] = gkey
-                src = group[0]
-                for k in src:
-                    if k.startswith("_") and k not in doc:
-                        doc[k] = src[k]
-                for k, v in src.items():
-                    if not k.startswith("_") and k not in doc and k != "id":
-                        doc[k] = v
-            out.append(doc)
-        return out
-
-    def _exec_resolve(self, op, docs: Dataset, stats) -> Dataset:
-        self._maybe_fail(op, "resolve")
-        out, usage = self.backend.run_resolve(op, docs)
-        stats.charge(op["name"], op["model"], usage, self.backend)
-        return out
-
-    def _exec_equijoin(self, op, docs: Dataset, stats) -> Dataset:
-        """Semantic join of the stream against op['right_docs']."""
-        right = op.get("right_docs", [])
-        fld_l, fld_r = op["left_field"], op["right_field"]
-        out = []
-        for d in docs:
-            lval = str(d.get(fld_l, "")).lower()
-            best = None
-            for r in right:
-                if str(r.get(fld_r, "")).lower() == lval:
-                    best = r
-                    break
-            usage = Usage(in_tokens=40 * max(len(right), 1), out_tokens=4,
-                          calls=1)
-            stats.charge(op["name"], op["model"], usage, self.backend)
-            if best is not None:
-                out.append({**d, **{f"right_{k}": v for k, v in best.items()
-                                    if not k.startswith("_")}})
-        return out
-
-    def _exec_unnest(self, op, docs: Dataset, stats) -> Dataset:
-        fld = op["field"]
-        out = []
-        for d in docs:
-            vals = d.get(fld, [])
-            if not isinstance(vals, list):
-                out.append(d)
-                continue
-            for i, v in enumerate(vals):
-                nd = {k: w for k, w in d.items() if k != fld}
-                nd["id"] = f"{d.get('id')}#{i}"
-                if isinstance(v, dict):
-                    nd.update(v)
-                else:
-                    nd[fld] = v
-                out.append(nd)
-        return out
-
-    def _exec_split(self, op, docs: Dataset, stats) -> Dataset:
-        size = op["chunk_size"]  # words
-        out = []
-        for d in docs:
-            key = op.get("text_key") or main_text_key(d)
-            words = str(d.get(key, "")).split()
-            n = max(1, math.ceil(len(words) / size))
-            for i in range(n):
-                chunk = " ".join(words[i * size:(i + 1) * size])
-                nd = dict(d)
-                nd["id"] = f"{d.get('id')}::c{i}"
-                nd[key] = chunk
-                nd["_parent_id"] = d.get("id")
-                nd["_chunk_idx"] = i
-                nd["_num_chunks"] = n
-                out.append(nd)
-        return out
-
-    def _exec_gather(self, op, docs: Dataset, stats) -> Dataset:
-        prev_k = op.get("prev", 1)
-        next_k = op.get("next", 0)
-        by_parent: Dict[Any, List[Document]] = {}
-        for d in docs:
-            by_parent.setdefault(d.get("_parent_id"), []).append(d)
-        out = []
-        for parent, chunks in by_parent.items():
-            chunks = sorted(chunks, key=lambda c: c.get("_chunk_idx", 0))
-            key = op.get("text_key") or main_text_key(chunks[0])
-            texts = [str(c.get(key, "")) for c in chunks]
-            for i, c in enumerate(chunks):
-                parts = []
-                for j in range(max(0, i - prev_k), i):
-                    parts.append(texts[j])
-                parts.append(texts[i])
-                for j in range(i + 1, min(len(chunks), i + 1 + next_k)):
-                    parts.append(texts[j])
-                nd = dict(c)
-                nd[key] = " ".join(parts)
-                out.append(nd)
-        return out
-
-    def _score_doc(self, method: str, text: str, keywords: List[str]) -> float:
-        t = text.lower()
-        score = 0.0
-        for kw in keywords:
-            score += t.count(f"[{kw.lower()}]")
-            if method == "embedding":
-                score += 0.8 * t.count(f"(alt-{kw.lower()})")
-        return score
-
-    def _exec_sample(self, op, docs: Dataset, stats) -> Dataset:
-        method = op["method"]
-        size = op["size"]
-        group_key = op.get("group_key")
-        keywords = op.get("query_keywords", [])
-
-        def pick(cands: Dataset) -> Dataset:
-            if len(cands) <= size:
-                return list(cands)
-            if method == "random" or not keywords:
-                idx = sorted(range(len(cands)),
-                             key=lambda i: _hash01(self.seed, "smp", op["name"],
-                                                   cands[i].get("id")))
-                return [cands[i] for i in idx[:size]]
-            scored = sorted(
-                cands,
-                key=lambda d: (-self._score_doc(method, doc_text(d), keywords),
-                               str(d.get("id"))))
-            return scored[:size]
-
-        if group_key:
-            out = []
-            for _, group in self._group(docs, group_key).items():
-                out.extend(pick(group))
-            return out
-        return pick(docs)
-
-    def _exec_extract(self, op, docs: Dataset, stats) -> Dataset:
-        out = []
-        for d in docs:
-            self._maybe_fail(op, d.get("id"))
-            fields, usage = self.backend.run_extract(op, d)
-            stats.charge(op["name"], op["model"], usage, self.backend)
-            out.append({**d, **fields})
-        return out
-
-    def _exec_code_map(self, op, docs: Dataset, stats) -> Dataset:
-        return [{**d, **codeops.run_code_map(op["code"], d)} for d in docs]
-
-    def _exec_code_filter(self, op, docs: Dataset, stats) -> Dataset:
-        return [d for d in docs if codeops.run_code_filter(op["code"], d)]
-
-    def _exec_code_reduce(self, op, docs: Dataset, stats) -> Dataset:
-        key = op.get("reduce_key", "_all")
-        out = []
-        for gkey, group in self._group(docs, key).items():
-            fields = codeops.run_code_reduce(op["code"], group)
-            doc = {"id": f"group_{gkey}", key: gkey, **fields}
-            if op.get("restore_id"):
-                doc["id"] = gkey
-                for k, v in group[0].items():
-                    if k not in doc and k != "id":
-                        doc[k] = v
-            out.append(doc)
-        return out
-
     # -- entry point -----------------------------------------------------------
 
-    def run(self, pipeline: PipelineConfig, docs: Dataset
+    def run(self, pipeline: PipelineLike, docs: Dataset
             ) -> Tuple[Dataset, ExecutionStats]:
-        validate_pipeline(pipeline)
+        config = as_config(pipeline)
+        validate_pipeline(config)
         self._run_counter += 1
         stats = ExecutionStats()
         cur = list(docs)
-        for op in pipeline["operators"]:
-            t = op["type"]
-            handler = getattr(self, f"_exec_{t}", None)
-            if handler is None:
-                raise ValueError(f"no executor for op type {t!r}")
-            cur = handler(op, cur, stats)
+        for op in config["operators"]:
+            spec = operator_spec(op["type"])
+            cur = spec.execute(self, op, cur, stats)
+        # worker parallelism scales wall-clock latency; keep per-op entries
+        # in the same units so they sum to latency_s
         stats.latency_s /= max(self.workers, 1)
+        for entry in stats.per_op.values():
+            entry.latency_s /= max(self.workers, 1)
         return cur, stats

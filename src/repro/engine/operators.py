@@ -1,13 +1,20 @@
-"""Operator and pipeline configuration model (paper §2.1, Table 7).
+"""Operator and pipeline configuration helpers (paper §2.1, Table 7).
 
-Operators are JSON-serializable dicts (DocETL specifies pipelines in YAML;
-we keep the same dict-of-parameters shape so rewrites are pure config
-transformations and pipelines hash for caching).
+Compatibility layer over the typed public API in :mod:`repro.pipeline`.
+Operators remain JSON-serializable dicts (DocETL specifies pipelines in
+YAML; the dict-of-parameters shape keeps rewrites pure config
+transformations and pipelines hashable for caching), but the *vocabulary*
+now lives in the ``repro.pipeline`` operator registry: validation rules,
+execution, cost semantics, and rewrite-target metadata are bundled per
+type, and the historical ``SEMANTIC_TYPES``/``AUX_TYPES``/``CODE_TYPES``
+constants are live views over the registry — an operator type registered
+at runtime is immediately a member.
 
 Required keys per operator: ``name``, ``type``. Semantic operators carry
 ``prompt`` (natural-language spec), ``output_schema`` (field -> type str),
 ``model``; code-powered operators carry ``code`` (a CodeSpec, see
-codeops.py). Type-specific keys documented per validator below.
+codeops.py). Type-specific rules live on each ``OperatorSpec``
+(engine/builtin_ops.py for the Table 7 set).
 
 Semantic op prompts also carry ``task_tags``: the workload-level task
 units the prompt asks for (e.g. clause types). These mirror how DocETL
@@ -18,118 +25,72 @@ them (an op asking for 41 tags at once is "harder" than one asking for 3).
 from __future__ import annotations
 
 import copy
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 from repro.data.documents import content_hash
+from repro.engine import builtin_ops  # noqa: F401 — registers Table 7 ops
+from repro.pipeline.model import Op, Pipeline, as_config  # noqa: F401
+from repro.pipeline.spec import (KIND_AUX, KIND_CODE, KIND_LLM, OpConfig,
+                                 PipelineConfig, PipelineValidationError,
+                                 TypeView, is_llm_type, operator_spec,
+                                 validate_op, validate_pipeline_config)
 
-OpConfig = Dict[str, Any]
-PipelineConfig = Dict[str, Any]
-
-SEMANTIC_TYPES = {"map", "parallel_map", "reduce", "filter", "resolve",
-                  "equijoin", "extract"}
-AUX_TYPES = {"unnest", "split", "gather", "sample"}
-CODE_TYPES = {"code_map", "code_reduce", "code_filter"}
-ALL_TYPES = SEMANTIC_TYPES | AUX_TYPES | CODE_TYPES
+# live registry views: custom registrations are immediately members
+SEMANTIC_TYPES = TypeView(KIND_LLM)
+AUX_TYPES = TypeView(KIND_AUX)
+CODE_TYPES = TypeView(KIND_CODE)
+ALL_TYPES = TypeView()
 
 # operator types that invoke an LLM
 LLM_TYPES = SEMANTIC_TYPES
-
-
-class PipelineValidationError(ValueError):
-    pass
 
 
 def make_pipeline(name: str, operators: List[OpConfig]) -> PipelineConfig:
     return {"name": name, "operators": operators}
 
 
-def pipeline_hash(pipeline: PipelineConfig) -> str:
+def pipeline_hash(pipeline) -> str:
+    if isinstance(pipeline, Pipeline):
+        return pipeline.hash
     return content_hash(pipeline["operators"])
 
 
 def clone_pipeline(pipeline: PipelineConfig) -> PipelineConfig:
-    return copy.deepcopy(pipeline)
+    return copy.deepcopy(as_config(pipeline))
 
 
-def op_types(pipeline: PipelineConfig) -> List[str]:
-    return [op["type"] for op in pipeline["operators"]]
+def op_types(pipeline) -> List[str]:
+    return [op["type"] for op in as_config(pipeline)["operators"]]
 
 
-def models_used(pipeline: PipelineConfig) -> List[str]:
-    return [op.get("model", "") for op in pipeline["operators"]
-            if op["type"] in LLM_TYPES]
+def models_used(pipeline) -> List[str]:
+    return [op.get("model", "") for op in as_config(pipeline)["operators"]
+            if is_llm_type(op["type"])]
 
 
 def validate_operator(op: OpConfig) -> None:
-    if "name" not in op or "type" not in op:
-        raise PipelineValidationError(f"operator missing name/type: {op}")
-    t = op["type"]
-    if t not in ALL_TYPES:
-        raise PipelineValidationError(f"unknown operator type {t!r}")
-    if t in SEMANTIC_TYPES and t != "extract":
-        if not op.get("prompt"):
-            raise PipelineValidationError(f"{op['name']}: semantic op needs prompt")
-        if not op.get("model"):
-            raise PipelineValidationError(f"{op['name']}: semantic op needs model")
-        if t in ("map", "parallel_map", "reduce", "filter") and \
-                not op.get("output_schema"):
-            raise PipelineValidationError(f"{op['name']}: needs output_schema")
-    if t == "extract":
-        if not op.get("prompt") or not op.get("model"):
-            raise PipelineValidationError(f"{op['name']}: extract needs prompt+model")
-    if t in CODE_TYPES and not op.get("code"):
-        raise PipelineValidationError(f"{op['name']}: code op needs CodeSpec")
-    if t == "reduce" and "reduce_key" not in op:
-        raise PipelineValidationError(f"{op['name']}: reduce needs reduce_key "
-                                      "(may be '_all')")
-    if t == "split" and not op.get("chunk_size"):
-        raise PipelineValidationError(f"{op['name']}: split needs chunk_size")
-    if t == "sample":
-        if op.get("method") not in ("random", "bm25", "embedding", "stratified"):
-            raise PipelineValidationError(f"{op['name']}: bad sample method")
-        if not op.get("size"):
-            raise PipelineValidationError(f"{op['name']}: sample needs size")
+    validate_op(op)
 
 
-def validate_pipeline(pipeline: PipelineConfig) -> None:
-    """Structural validation + schema closure: every field a downstream op
-    references must be produced upstream or exist in the source dataset
-    (we can't know source fields statically, so we check fields produced
-    by earlier ops are not consumed before they exist)."""
-    ops = pipeline.get("operators", [])
-    if not ops:
-        raise PipelineValidationError("pipeline has no operators")
-    names = set()
-    for op in ops:
-        validate_operator(op)
-        if op["name"] in names:
-            raise PipelineValidationError(f"duplicate op name {op['name']}")
-        names.add(op["name"])
-    produced: set = set()
-    for op in ops:
-        for field in op.get("requires", []):
-            # 'requires' marks fields produced by a previous operator
-            if field not in produced:
-                raise PipelineValidationError(
-                    f"{op['name']} requires field {field!r} before it is "
-                    "produced")
-        produced |= set((op.get("output_schema") or {}).keys())
+def validate_pipeline(pipeline) -> None:
+    validate_pipeline_config(as_config(pipeline))
 
 
-def output_fields(pipeline: PipelineConfig) -> set:
+def output_fields(pipeline) -> set:
     out: set = set()
-    for op in pipeline["operators"]:
+    for op in as_config(pipeline)["operators"]:
         out |= set((op.get("output_schema") or {}).keys())
     return out
 
 
-def count_llm_ops(pipeline: PipelineConfig) -> int:
-    return sum(1 for op in pipeline["operators"] if op["type"] in LLM_TYPES)
+def count_llm_ops(pipeline) -> int:
+    return sum(1 for op in as_config(pipeline)["operators"]
+               if is_llm_type(op["type"]))
 
 
-def describe(pipeline: PipelineConfig) -> str:
+def describe(pipeline) -> str:
     parts = []
-    for op in pipeline["operators"]:
+    for op in as_config(pipeline)["operators"]:
         model = op.get("model", "")
         parts.append(f"{op['type']}({op['name']}{',' + model if model else ''})")
     return " -> ".join(parts)

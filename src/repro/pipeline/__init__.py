@@ -1,0 +1,65 @@
+"""``repro.pipeline`` — the typed public API of the system.
+
+One contract that the MOAR search, all four baseline optimizers, the
+benchmarks, the examples, and the serving path speak:
+
+- operator registry (:mod:`repro.pipeline.spec`): ``@register_operator``
+  bundles validation, execution, cost semantics, and rewrite-target
+  metadata per operator type; the executor dispatches through it;
+- typed pipeline model (:mod:`repro.pipeline.model`): frozen ``Op`` /
+  ``Pipeline`` with lossless ``to_dict``/``from_dict`` that preserves
+  ``pipeline_hash`` (search-tree caching and YAML/dict configs keep
+  working);
+- ``Backend`` protocol (:mod:`repro.pipeline.protocols`): the execution
+  substrate contract, checked at executor construction;
+- ``Optimizer`` protocol (:mod:`repro.pipeline.optimizers`):
+  ``optimize(pipeline, workload, budget) -> SearchResult`` implemented by
+  MOAR and every baseline, plus the name registry behind
+  :func:`run_optimizer`.
+
+Raw-dict pipelines remain accepted everywhere via ``as_config`` /
+``as_pipeline``; ``engine/operators.py`` keeps the historical helpers as
+thin shims over this package.
+"""
+
+from repro.pipeline.model import (Op, Pipeline, PipelineLike, as_config,
+                                  as_pipeline)
+from repro.pipeline.optimizers import (Optimizer, PlanPoint, SearchResult,
+                                       get_optimizer, optimizer_names,
+                                       optimizer_registry,
+                                       pareto_plan_points, run_optimizer)
+from repro.pipeline.protocols import (Backend, REQUIRED_BACKEND_METHODS,
+                                      batch_hint, check_backend)
+from repro.pipeline.spec import (KIND_AUX, KIND_CODE, KIND_LLM, KINDS,
+                                 OpConfig, OperatorSpec, PipelineConfig,
+                                 PipelineValidationError, TypeView,
+                                 is_llm_type, is_registered, operator_spec,
+                                 register_operator, register_spec,
+                                 registered_types, types_with_tag,
+                                 unregister_operator, validate_op,
+                                 validate_pipeline_config)
+
+# Populate the registry with the Table 7 built-ins: the advertised entry
+# points (Pipeline.validate, registered_types, the type views) must work
+# from a bare `import repro.pipeline`, not only after an engine import.
+# Safe against cycles: builtin_ops pulls from repro.pipeline.spec, which
+# is fully initialized above, and never from this module's namespace.
+from repro.engine import builtin_ops as _builtin_ops  # noqa: E402,F401
+
+__all__ = [
+    # model
+    "Op", "Pipeline", "PipelineLike", "as_config", "as_pipeline",
+    # registry
+    "OperatorSpec", "register_operator", "register_spec",
+    "unregister_operator", "operator_spec", "registered_types",
+    "is_registered", "is_llm_type", "types_with_tag", "TypeView",
+    "KIND_LLM", "KIND_CODE", "KIND_AUX", "KINDS",
+    "OpConfig", "PipelineConfig", "PipelineValidationError",
+    "validate_op", "validate_pipeline_config",
+    # backend protocol
+    "Backend", "check_backend", "batch_hint", "REQUIRED_BACKEND_METHODS",
+    # optimizer protocol
+    "Optimizer", "PlanPoint", "SearchResult", "get_optimizer",
+    "optimizer_names", "optimizer_registry", "run_optimizer",
+    "pareto_plan_points",
+]

@@ -1,0 +1,179 @@
+"""Frozen ``Op``/``Pipeline`` dataclasses: the typed pipeline contract.
+
+Pipelines were historically raw dicts (``{"name": ..., "operators":
+[...]}``) because rewrites are pure config transformations and pipelines
+must hash for search-tree caching. These classes keep both properties —
+``to_dict``/``from_dict`` round-trip losslessly and ``Pipeline.hash``
+equals ``operators.pipeline_hash`` of the dict form — while giving
+callers a typed, immutable surface (YAML/dict configs keep working
+through the shims in ``engine/operators.py``).
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field, replace as _dc_replace
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
+
+from repro.data.documents import content_hash
+from repro.pipeline.spec import (OpConfig, PipelineConfig, operator_spec,
+                                 validate_op, validate_pipeline_config)
+
+
+@dataclass(frozen=True)
+class Op:
+    """One operator: ``name``, registered ``type``, and its parameters.
+
+    ``params`` holds every key other than name/type, exactly as the dict
+    form carries them; treat it as immutable (use :meth:`replace`).
+    """
+
+    name: str
+    type: str
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    # -- conversion ---------------------------------------------------------
+
+    @classmethod
+    def from_dict(cls, config: OpConfig) -> "Op":
+        if "name" not in config or "type" not in config:
+            from repro.pipeline.spec import PipelineValidationError
+            raise PipelineValidationError(
+                f"operator missing name/type: {config}")
+        params = {k: copy.deepcopy(v) for k, v in config.items()
+                  if k not in ("name", "type")}
+        return cls(name=config["name"], type=config["type"], params=params)
+
+    def to_dict(self) -> OpConfig:
+        return {"name": self.name, "type": self.type,
+                **copy.deepcopy(dict(self.params))}
+
+    # -- accessors ----------------------------------------------------------
+
+    def get(self, key: str, default: Any = None) -> Any:
+        if key == "name":
+            return self.name
+        if key == "type":
+            return self.type
+        return self.params.get(key, default)
+
+    def __getitem__(self, key: str) -> Any:
+        sentinel = object()
+        v = self.get(key, sentinel)
+        if v is sentinel:
+            raise KeyError(key)
+        return v
+
+    @property
+    def spec(self):
+        return operator_spec(self.type)
+
+    @property
+    def model(self) -> str:
+        return self.params.get("model", "")
+
+    @property
+    def is_llm(self) -> bool:
+        return self.spec.is_llm
+
+    # -- functional updates --------------------------------------------------
+
+    def replace(self, **updates: Any) -> "Op":
+        """New Op with parameter (or name/type) updates applied."""
+        name = updates.pop("name", self.name)
+        type_ = updates.pop("type", self.type)
+        params = {**self.params, **updates}
+        return Op(name=name, type=type_, params=params)
+
+    def validate(self) -> None:
+        validate_op(self.to_dict())
+
+
+@dataclass(frozen=True)
+class Pipeline:
+    """Immutable operator sequence; the unit the optimizers search over."""
+
+    name: str
+    ops: Tuple[Op, ...]
+    extra: Mapping[str, Any] = field(default_factory=dict)  # lossless misc keys
+
+    # -- conversion ---------------------------------------------------------
+
+    @classmethod
+    def from_dict(cls, config: PipelineConfig) -> "Pipeline":
+        ops = tuple(Op.from_dict(o) for o in config.get("operators", []))
+        extra = {k: copy.deepcopy(v) for k, v in config.items()
+                 if k not in ("name", "operators")}
+        return cls(name=config.get("name", ""), ops=ops, extra=extra)
+
+    @classmethod
+    def build(cls, name: str, *ops: Union[Op, OpConfig]) -> "Pipeline":
+        return cls(name=name, ops=tuple(
+            o if isinstance(o, Op) else Op.from_dict(o) for o in ops))
+
+    def to_dict(self) -> PipelineConfig:
+        return {"name": self.name,
+                "operators": [o.to_dict() for o in self.ops],
+                **copy.deepcopy(dict(self.extra))}
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def hash(self) -> str:
+        """Equals ``operators.pipeline_hash(self.to_dict())`` — the search
+        tree's cache key survives dict <-> dataclass round-trips."""
+        return content_hash([o.to_dict() for o in self.ops])
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def __iter__(self):
+        return iter(self.ops)
+
+    # -- queries ------------------------------------------------------------
+
+    def op_types(self) -> List[str]:
+        return [o.type for o in self.ops]
+
+    def models_used(self) -> List[str]:
+        return [o.model for o in self.ops if o.is_llm]
+
+    def count_llm_ops(self) -> int:
+        return sum(1 for o in self.ops if o.is_llm)
+
+    def describe(self) -> str:
+        parts = []
+        for o in self.ops:
+            parts.append(f"{o.type}({o.name}{',' + o.model if o.model else ''})")
+        return " -> ".join(parts)
+
+    def validate(self) -> None:
+        validate_pipeline_config(self.to_dict())
+
+    # -- functional updates --------------------------------------------------
+
+    def with_ops(self, ops) -> "Pipeline":
+        return _dc_replace(self, ops=tuple(
+            o if isinstance(o, Op) else Op.from_dict(o) for o in ops))
+
+    def replace_op(self, index: int, op: Union[Op, OpConfig]) -> "Pipeline":
+        ops = list(self.ops)
+        ops[index] = op if isinstance(op, Op) else Op.from_dict(op)
+        return self.with_ops(ops)
+
+
+PipelineLike = Union[Pipeline, PipelineConfig]
+
+
+def as_config(pipeline: PipelineLike) -> PipelineConfig:
+    """Accept either surface (typed Pipeline or raw dict), return the dict
+    form every rewrite/execution internal operates on."""
+    if isinstance(pipeline, Pipeline):
+        return pipeline.to_dict()
+    return pipeline
+
+
+def as_pipeline(pipeline: PipelineLike) -> Pipeline:
+    if isinstance(pipeline, Pipeline):
+        return pipeline
+    return Pipeline.from_dict(pipeline)

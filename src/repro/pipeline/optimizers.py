@@ -1,0 +1,128 @@
+"""Unified ``Optimizer`` protocol + result types.
+
+Every optimizer in the system — MOAR's global tree search and the four
+baselines (abacus, docetl_v1, lotus, simple_agent) — is constructed as
+``cls(workload, backend, budget=..., seed=...)`` and exposes
+``optimize(pipeline, workload, budget) -> SearchResult``. Benchmarks,
+examples, and launch scripts loop over :func:`optimizer_names` instead of
+duplicating per-optimizer glue; a new optimizer is one registry entry.
+
+``SearchResult`` is the optimizer-agnostic report: the evaluated
+:class:`PlanPoint` set, its Pareto frontier, and budget accounting.
+Optimizer-specific structure (MOAR's search tree, a baseline's notes)
+rides along in ``native``/``meta`` without leaking into the shared
+surface.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
+                    runtime_checkable)
+
+from repro.pipeline.model import PipelineLike
+from repro.pipeline.spec import PipelineConfig
+
+
+@dataclass(frozen=True)
+class PlanPoint:
+    """One evaluated plan: its config and measured accuracy/cost on D_o."""
+
+    pipeline: PipelineConfig
+    acc: float
+    cost: float
+    note: str = ""
+    meta: Mapping[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class SearchResult:
+    """Optimizer-agnostic outcome of one ``optimize()`` run."""
+
+    optimizer: str
+    evaluated: List[PlanPoint]
+    frontier: List[PlanPoint]
+    budget_used: int
+    wall_s: float
+    errors: int = 0
+    native: Any = None  # optimizer-specific result (e.g. MOAR's tree)
+
+    @property
+    def name(self) -> str:  # BaselineResult compatibility
+        return self.optimizer
+
+    def best(self) -> PlanPoint:
+        return max(self.evaluated, key=lambda p: p.acc)
+
+
+@runtime_checkable
+class Optimizer(Protocol):
+    """``optimize(pipeline, workload, budget) -> SearchResult``.
+
+    All three arguments are optional overrides of what the optimizer was
+    constructed with: ``pipeline`` replaces the workload's initial
+    pipeline (typed ``Pipeline`` or raw dict), ``workload`` replaces the
+    workload, ``budget`` the evaluation budget B.
+    """
+
+    name: str
+
+    def optimize(self, pipeline: Optional[PipelineLike] = None,
+                 workload: Any = None,
+                 budget: Optional[int] = None) -> SearchResult: ...
+
+
+def pareto_plan_points(points: List[PlanPoint]) -> List[PlanPoint]:
+    """Pareto frontier of PlanPoints, deduplicated on (cost, acc) and
+    sorted cheap-to-expensive — the shared frontier post-processing every
+    optimizer's report uses."""
+    from repro.core import pareto
+    front = pareto.pareto_set(points)
+    seen, dedup = set(), []
+    for p in sorted(front, key=lambda p: (p.cost, -p.acc)):
+        key = (round(p.cost, 9), round(p.acc, 9))
+        if key not in seen:
+            seen.add(key)
+            dedup.append(p)
+    return dedup
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+# imported lazily: the optimizers live above this layer (core/, baselines/)
+# and importing them here at module level would cycle through engine/.
+
+
+def optimizer_registry() -> Dict[str, Callable[..., Optimizer]]:
+    """name -> factory with the shared ``(workload, backend, *, budget,
+    seed)`` construction signature. MOAR first: benchmark tables keep the
+    paper's method order."""
+    from repro.baselines import OPTIMIZERS as _BASELINES
+    from repro.core.search import MOARSearch
+    reg: Dict[str, Callable[..., Optimizer]] = {"moar": MOARSearch}
+    reg.update(_BASELINES)
+    return reg
+
+
+def optimizer_names() -> List[str]:
+    return list(optimizer_registry())
+
+
+def get_optimizer(name: str) -> Callable[..., Optimizer]:
+    reg = optimizer_registry()
+    try:
+        return reg[name]
+    except KeyError:
+        raise KeyError(f"unknown optimizer {name!r} "
+                       f"(registered: {sorted(reg)})") from None
+
+
+def run_optimizer(name: str, workload, backend, *, budget: int = 40,
+                  seed: int = 0, **kwargs) -> SearchResult:
+    """Construct optimizer ``name`` and run it: the one-call entry point
+    benchmarks and examples share."""
+    opt = get_optimizer(name)(workload, backend, budget=budget, seed=seed,
+                              **kwargs)
+    return opt.optimize()

@@ -1,0 +1,66 @@
+"""``Backend`` protocol: what an execution substrate must provide.
+
+``SimBackend`` (deterministic LLM-behaviour model) and ``JaxBackend``
+(real reduced-model forward passes) grew the same surface by convention;
+this protocol formalizes it so the executor can check conformance at
+construction time instead of failing mid-pipeline, and so new substrates
+(sharded, async, remote) know the exact contract.
+
+Required surface:
+- ``usage_cost(model, usage)``: $ cost of a Usage record (tokens x the
+  model's per-token price);
+- ``run_map/run_filter/run_reduce/run_extract/run_classify/run_resolve``:
+  the semantic-operator invocation entry points.
+
+Optional:
+- ``run_summarize``: summarization maps (SimBackend only; the executor
+  routes ``summarize`` ops here when present);
+- ``preferred_batch_size``: batching hint — how many operator invocations
+  the substrate would like to see at once (continuous-batching serving
+  uses >1; the sequential executor records it for future batched
+  dispatch).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, Tuple, runtime_checkable
+
+REQUIRED_BACKEND_METHODS = (
+    "usage_cost", "run_map", "run_filter", "run_reduce", "run_extract",
+    "run_classify", "run_resolve",
+)
+
+
+@runtime_checkable
+class Backend(Protocol):
+    def usage_cost(self, model: str, usage: Any) -> float: ...
+
+    def run_map(self, op, doc) -> Tuple[dict, Any]: ...
+
+    def run_filter(self, op, doc) -> Tuple[bool, Any]: ...
+
+    def run_reduce(self, op, docs) -> Tuple[dict, Any]: ...
+
+    def run_extract(self, op, doc) -> Tuple[dict, Any]: ...
+
+    def run_classify(self, op, doc, classes, truth_field) -> Tuple[str, Any]: ...
+
+    def run_resolve(self, op, docs) -> Tuple[list, Any]: ...
+
+
+def check_backend(backend: Any) -> Any:
+    """Raise TypeError (listing what's missing) unless ``backend``
+    provides the full required surface. Returns the backend unchanged so
+    constructors can chain it."""
+    missing = [m for m in REQUIRED_BACKEND_METHODS
+               if not callable(getattr(backend, m, None))]
+    if missing:
+        raise TypeError(
+            f"{type(backend).__name__} does not satisfy the Backend "
+            f"protocol: missing {', '.join(missing)}")
+    return backend
+
+
+def batch_hint(backend: Any) -> int:
+    """The substrate's preferred invocation batch size (>= 1)."""
+    return max(1, int(getattr(backend, "preferred_batch_size", 1)))

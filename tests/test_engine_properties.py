@@ -2,6 +2,9 @@
 
 import copy
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.engine.backend import SimBackend
@@ -73,7 +76,9 @@ def test_pipeline_cost_is_sum_of_per_op(model):
         "prompt": "q", "filter_tag": "clause_01",
         "output_schema": {"keep": "bool"}, "model": model})
     out, stats = _exec().run(p, CUAD.sample[:6])
-    assert abs(stats.cost - sum(stats.per_op.values())) < 1e-12
+    assert abs(stats.cost - sum(v.cost for v in stats.per_op.values())) < 1e-12
+    assert abs(stats.latency_s -
+               sum(v.latency_s for v in stats.per_op.values())) < 1e-9
 
 
 @settings(max_examples=8, deadline=None)

@@ -2,6 +2,9 @@
 
 from dataclasses import dataclass
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pareto

@@ -1,0 +1,228 @@
+"""Public ``repro.pipeline`` API: registry, typed model, protocols.
+
+Covers the API contract the rest of the system now relies on: lossless,
+hash-preserving Pipeline round-trips; rejection of unregistered operator
+types; custom operator types executing end-to-end through the Executor
+with zero engine edits; Backend-protocol conformance checking; and the
+unified Optimizer entry point shared by MOAR and the baselines.
+"""
+
+import pytest
+
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.operators import (ALL_TYPES, CODE_TYPES, LLM_TYPES,
+                                    make_pipeline, pipeline_hash,
+                                    validate_pipeline)
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline import (Backend, Op, Pipeline, PipelineValidationError,
+                            check_backend, operator_spec, register_operator,
+                            registered_types, run_optimizer, types_with_tag,
+                            unregister_operator)
+
+CUAD = WORKLOADS["cuad"]()
+
+
+def _exec(seed=0):
+    return Executor(SimBackend(seed=seed, domain="legal"), seed=seed)
+
+
+# -- typed model round-trip ---------------------------------------------------
+
+
+def test_pipeline_roundtrip_preserves_hash():
+    config = CUAD.initial_pipeline
+    p = Pipeline.from_dict(config)
+    assert p.hash == pipeline_hash(config)
+    assert Pipeline.from_dict(p.to_dict()).hash == p.hash
+
+
+def test_pipeline_roundtrip_is_lossless():
+    config = {"name": "t", "operators": [
+        {"name": "m", "type": "map", "prompt": "q", "model": "gemma2-9b",
+         "output_schema": {"x": "list"}, "task_tags": ["a", "b"],
+         "prompt_features": {"clarified": 1}}],
+        "labels": {"team": "bench"}}  # unknown top-level keys survive too
+    assert Pipeline.from_dict(config).to_dict() == config
+
+
+def test_op_replace_is_functional():
+    op = Op.from_dict({"name": "m", "type": "map", "prompt": "q",
+                       "model": "gemma2-9b", "output_schema": {"x": "list"}})
+    swapped = op.replace(model="llama3.2-1b")
+    assert swapped.model == "llama3.2-1b"
+    assert op.model == "gemma2-9b", "original Op must be unchanged"
+    assert swapped.to_dict()["prompt"] == "q"
+
+
+def test_typed_pipeline_executes_like_dict():
+    docs = CUAD.sample[:4]
+    out_dict, s1 = _exec().run(CUAD.initial_pipeline, docs)
+    out_typed, s2 = _exec().run(Pipeline.from_dict(CUAD.initial_pipeline),
+                                docs)
+    assert s1.cost == s2.cost
+    assert [d["id"] for d in out_dict] == [d["id"] for d in out_typed]
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_unregistered_type_rejected():
+    with pytest.raises(PipelineValidationError):
+        validate_pipeline(make_pipeline("bad", [
+            {"name": "m", "type": "nosuch_operator"}]))
+    with pytest.raises(PipelineValidationError):
+        operator_spec("nosuch_operator")
+
+
+def test_registry_covers_table7():
+    assert set(registered_types("llm")) == {
+        "map", "parallel_map", "reduce", "filter", "resolve", "equijoin",
+        "extract"}
+    assert set(registered_types("aux")) == {"unnest", "split", "gather",
+                                            "sample"}
+    assert set(registered_types("code")) == {"code_map", "code_reduce",
+                                             "code_filter"}
+
+
+def test_type_views_are_live():
+    assert "map" in LLM_TYPES and "code_map" in CODE_TYPES
+    assert "map" in ALL_TYPES and "nosuch" not in ALL_TYPES
+    assert set(LLM_TYPES | CODE_TYPES) >= {"map", "code_map"}
+
+    @register_operator("live_view_probe", kind="llm", replace=True)
+    def _probe(ex, op, docs, stats):
+        return docs
+
+    try:
+        assert "live_view_probe" in LLM_TYPES, \
+            "runtime registrations must be visible through the views"
+    finally:
+        unregister_operator("live_view_probe")
+    assert "live_view_probe" not in LLM_TYPES
+
+
+def test_rewrite_tags_expose_targets():
+    assert set(types_with_tag("reads_text")) == {"map", "filter", "extract"}
+    assert "split" in types_with_tag("chunker")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        @register_operator("map", kind="llm")
+        def _clash(ex, op, docs, stats):
+            return docs
+
+
+# -- custom operator end-to-end ----------------------------------------------
+
+
+def test_custom_operator_executes_end_to_end():
+    """A third-party operator type is one registration call: it validates,
+    executes through Executor, and costs $0 — with no edits to
+    engine/executor.py or engine/operators.py."""
+
+    @register_operator(
+        "head_words", kind="aux", required_keys=("n_words",),
+        description="keep the first n_words words of the main text")
+    def exec_head_words(ex, op, docs, stats):
+        from repro.data.documents import main_text_key
+        out = []
+        for d in docs:
+            key = main_text_key(d)
+            words = str(d.get(key, "")).split()[:op["n_words"]]
+            out.append({**d, key: " ".join(words)})
+        return out
+
+    try:
+        p = make_pipeline("t", [
+            {"name": "h", "type": "head_words", "n_words": 5}])
+        validate_pipeline(p)
+        from repro.data.documents import main_text_key
+        out, stats = _exec().run(p, CUAD.sample[:3])
+        assert len(out) == 3
+        assert all(len(str(d[main_text_key(d)]).split()) <= 5 for d in out)
+        assert stats.cost == 0.0, "aux ops cost $0 (paper §2.3)"
+        # required-key validation came from the registration, not engine code
+        with pytest.raises(PipelineValidationError):
+            validate_pipeline(make_pipeline("bad", [
+                {"name": "h", "type": "head_words"}]))
+    finally:
+        unregister_operator("head_words")
+
+
+# -- backend protocol --------------------------------------------------------
+
+
+def test_backend_protocol_accepts_simbackend():
+    be = SimBackend(seed=0)
+    assert isinstance(be, Backend)
+    assert check_backend(be) is be
+
+
+def test_backend_protocol_rejects_partial_backend():
+    class NotABackend:
+        def usage_cost(self, model, usage):
+            return 0.0
+
+    with pytest.raises(TypeError, match="run_map"):
+        Executor(NotABackend())
+
+
+# -- unified optimizer API ----------------------------------------------------
+
+
+def test_run_optimizer_unified_entry_point():
+    be = SimBackend(seed=0, domain=CUAD.domain)
+    for name in ("lotus", "moar"):
+        res = run_optimizer(name, CUAD, be, budget=3, seed=0)
+        assert res.optimizer == name
+        assert res.budget_used <= 3
+        assert res.evaluated and res.frontier
+        best = res.best()
+        assert 0.0 <= best.acc <= 1.0 and best.cost >= 0.0
+        assert "operators" in best.pipeline
+
+
+def test_bare_package_import_populates_registry():
+    """`import repro.pipeline` alone must expose the Table 7 built-ins —
+    consumers should not need to import engine modules first."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    import repro.pipeline
+    src = str(pathlib.Path(repro.pipeline.__file__).parents[2])
+    code = (
+        "from repro.pipeline import Pipeline, registered_types\n"
+        "assert 'map' in registered_types('llm'), registered_types()\n"
+        "Pipeline.from_dict({'name': 'p', 'operators': [\n"
+        "    {'name': 'm', 'type': 'map', 'prompt': 'q', 'model': 'x',\n"
+        "     'output_schema': {'a': 'str'}}]}).validate()\n")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True,
+                          env={**os.environ, "PYTHONPATH": src})
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_optimize_is_repeatable():
+    """optimize() resets accumulated state: a second call must not
+    duplicate evaluated points or leak the first run's budget/cache."""
+    be = SimBackend(seed=0, domain=CUAD.domain)
+    from repro.pipeline import get_optimizer
+    opt = get_optimizer("lotus")(CUAD, be, budget=3, seed=0)
+    r1 = opt.optimize()
+    r2 = opt.optimize()
+    assert len(r2.evaluated) == len(r1.evaluated)
+    assert r2.budget_used == r1.budget_used
+    moar = get_optimizer("moar")(CUAD, be, budget=3, seed=0)
+    m1 = moar.optimize()
+    m2 = moar.optimize()
+    assert len(m2.evaluated) == len(m1.evaluated)
+
+
+def test_unknown_optimizer_rejected():
+    with pytest.raises(KeyError):
+        from repro.pipeline import get_optimizer
+        get_optimizer("nosuch_optimizer")
