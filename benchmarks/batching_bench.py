@@ -1,0 +1,106 @@
+"""Batched dispatch benchmark: Backend v2 ``submit`` vs legacy per-doc.
+
+Two measurements:
+
+1. JaxBackend real-decode amortization — the same map pipeline over a
+   small doc set, dispatched (a) through ``JaxBackend.submit`` (chunks of
+   ``preferred_batch_size`` through the continuous batcher — one jitted
+   decode step serves every active slot) and (b) through a
+   ``LegacyBackendAdapter`` over the v1 per-document surface (each doc
+   pays its own prefill + serial decode). Wall-clock and LLM-call counts;
+   costs/usage must agree.
+
+2. Two-tier evaluation-cache hit rates of one ``MOARSearch.optimize``
+   run per workload on the SimBackend: pipeline-hash tier (identical
+   candidates are free) and the content-addressed call tier (candidates
+   sharing a prefix with anything evaluated only pay the changed suffix).
+
+  PYTHONPATH=src python benchmarks/batching_bench.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.search import MOARSearch
+from repro.engine.backend import JaxBackend, SimBackend
+from repro.engine.executor import Executor
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline import REQUIRED_BACKEND_METHODS
+
+
+def legacy_view(backend):
+    """Strip a backend to the v1 per-document surface (no ``submit``) so
+    ``check_backend`` wraps it in the LegacyBackendAdapter."""
+    class View:
+        pass
+
+    v = View()
+    for m in REQUIRED_BACKEND_METHODS:
+        setattr(v, m, getattr(backend, m))
+    return v
+
+
+def bench_jax_dispatch(n_docs: int = 6, max_new_tokens: int = 4):
+    w = WORKLOADS["medec"]()
+    docs = w.sample[:n_docs]
+    print(f"== JaxBackend dispatch: {n_docs} docs, "
+          f"{max_new_tokens} new tokens ==")
+
+    rows = []
+    for mode in ("batched", "legacy"):
+        be = JaxBackend(seed=0, max_new_tokens=max_new_tokens)
+        ex = Executor(be if mode == "batched" else legacy_view(be))
+        ex.run(w.initial_pipeline, docs[:1])  # warm: params + jit compile
+        ex.call_cache.clear()  # time real dispatch, not cache replay
+        t0 = time.time()
+        out, stats = ex.run(w.initial_pipeline, docs)
+        dt = time.time() - t0
+        rows.append((mode, dt, stats))
+        sched = "continuous batcher" if be._batchers else "per-doc decode"
+        print(f"  {mode:8s}: {dt:6.2f}s  {stats.llm_calls} LLM calls, "
+              f"{stats.in_tokens} in-tok, cost ${stats.cost:.6f}  [{sched}]")
+
+    (_, t_batched, s_b), (_, t_legacy, s_l) = rows
+    assert s_b.llm_calls == s_l.llm_calls and s_b.cost == s_l.cost, \
+        "dispatch mode must not change usage accounting"
+    if t_batched > 0:
+        print(f"  amortization: {t_legacy / t_batched:.2f}x wall-clock "
+              f"({s_b.llm_calls} calls share "
+              f"{max(1, s_b.llm_calls // be.preferred_batch_size)} "
+              f"decode-batch drains)")
+
+
+def bench_cache_tiers(budget: int = 40, seed: int = 0):
+    print(f"\n== two-tier evaluation cache, MOARSearch.optimize "
+          f"(budget={budget}, seed={seed}) ==")
+    for name in ("cuad", "medec", "blackvault"):
+        w = WORKLOADS[name]()
+        be = SimBackend(seed=seed, domain=w.domain)
+        t0 = time.time()
+        res = MOARSearch(w, be, budget=budget, seed=seed).optimize()
+        cs = res.cache_stats
+        print(f"  {name:12s}: {time.time() - t0:5.1f}s  "
+              f"pipeline-tier hits {cs['pipeline_cache_hits']:3d}  "
+              f"call-tier hits {cs['call_cache_hits']:5d}/"
+              f"{cs['call_cache_hits'] + cs['call_cache_misses']:5d} "
+              f"({100 * cs['call_cache_hit_rate']:.1f}%)  "
+              f"best acc {res.best().acc:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=40)
+    ap.add_argument("--skip-jax", action="store_true",
+                    help="only the SimBackend cache-tier benchmark")
+    args = ap.parse_args()
+    if not args.skip_jax:
+        bench_jax_dispatch(args.docs, args.max_new)
+    bench_cache_tiers(args.budget)
+
+
+if __name__ == "__main__":
+    main()

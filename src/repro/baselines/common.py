@@ -13,7 +13,8 @@ import time
 from dataclasses import replace as _dc_replace
 from typing import Dict, List, Optional, Tuple
 
-from repro.engine.executor import Executor, TransientLLMError
+from repro.engine.executor import (Executor, TransientLLMError,
+                                   evaluation_cache_stats)
 from repro.engine.operators import PipelineConfig, pipeline_hash
 from repro.engine.workloads import Workload
 from repro.pipeline.model import PipelineLike, as_config
@@ -34,16 +35,26 @@ class BaseOptimizer:
         self.backend = backend
         self.budget = budget
         self.seed = seed
+        # the shared executor's call cache is the second evaluation-cache
+        # tier under the pipeline-hash cache below: candidate plans that
+        # share a prefix with anything already measured only re-execute
+        # the changed suffix (ABACUS-style sample reuse)
         self.executor = Executor(backend, seed=seed)
         self.cache: Dict[str, Tuple[float, float]] = {}
+        self.cache_hits = 0
         self.evaluated: List[PlanPoint] = []
         self.returned: Optional[List[PlanPoint]] = None  # single-plan systems
         self.t = 0
+
+    def cache_stats(self) -> Dict[str, float]:
+        return evaluation_cache_stats(self.cache_hits, len(self.cache),
+                                      self.executor.call_cache)
 
     def evaluate(self, pipeline: PipelineConfig, note: str = ""
                  ) -> Optional[PlanPoint]:
         h = pipeline_hash(pipeline)
         if h in self.cache:
+            self.cache_hits += 1
             acc, cost = self.cache[h]
             pt = PlanPoint(pipeline, acc, cost, note)
             self.evaluated.append(pt)
@@ -79,6 +90,8 @@ class BaseOptimizer:
         if budget is not None:
             self.budget = budget
         self.cache = {}
+        self.cache_hits = 0
+        self.executor.call_cache.clear()
         self.evaluated = []
         self.returned = None
         self.t = 0
@@ -90,7 +103,8 @@ class BaseOptimizer:
                                       if self.returned is not None
                                       else self.evaluated)
         return SearchResult(self.name, list(self.evaluated), frontier,
-                            self.t, time.time() - t0)
+                            self.t, time.time() - t0,
+                            cache_stats=self.cache_stats())
 
     def _run(self):
         raise NotImplementedError

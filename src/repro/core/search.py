@@ -28,7 +28,8 @@ from repro.core.agent import (AgentContext, AgentPolicy, DirectiveStats,
 from repro.core.directives import BY_NAME, DIRECTIVES, Directive, Target, \
     applicable
 from repro.core.models_catalog import model_names
-from repro.engine.executor import Executor, TransientLLMError
+from repro.engine.executor import (CallCache, Executor, TransientLLMError,
+                                   evaluation_cache_stats)
 from repro.engine.operators import (PipelineConfig, clone_pipeline,
                                     pipeline_hash, validate_pipeline)
 from repro.engine.workloads import Workload
@@ -83,6 +84,7 @@ class SearchResult:
     errors: int
     wall_s: float
     history: List[Dict[str, Any]] = field(default_factory=list)
+    cache_stats: Dict[str, Any] = field(default_factory=dict)
 
     def best(self) -> Node:
         return max(self.evaluated, key=lambda n: n.acc)
@@ -111,11 +113,19 @@ class MOARSearch:
         self.seed = seed
         self.models = (models or model_names())[:max_models]
         self.workers = workers
-        self.executor = Executor(backend, fail_prob=fail_prob, seed=seed)
+        # two-tier evaluation cache (paper §4.3.3 measurement reuse):
+        # tier 1 — self.cache, keyed by pipeline hash (identical candidate
+        # = free); tier 2 — the executor's content-addressed call cache
+        # (candidates sharing a prefix with anything already evaluated
+        # only re-execute the changed suffix)
+        self.call_cache = CallCache()
+        self.executor = Executor(backend, fail_prob=fail_prob, seed=seed,
+                                 call_cache=self.call_cache)
         self.policy = AgentPolicy(seed=seed)
         self.model_stats = ModelStats()
         self.dstats = DirectiveStats()
         self.cache: Dict[str, Tuple[float, float]] = {}
+        self.cache_hits = 0
         self.evaluated: List[Node] = []
         self.t = 0
         self.errors = 0
@@ -128,6 +138,7 @@ class MOARSearch:
         """Returns (acc, cost, cached). Raises TransientLLMError upward."""
         h = pipeline_hash(pipeline)
         if h in self.cache:
+            self.cache_hits += 1
             acc, cost = self.cache[h]
             return acc, cost, True
         out, stats = self.executor.run(pipeline, self.workload.sample)
@@ -151,6 +162,11 @@ class MOARSearch:
             self.t += 1
         self.evaluated.append(node)
         return node
+
+    def cache_stats(self) -> Dict[str, Any]:
+        """Hit accounting for both evaluation-cache tiers."""
+        return evaluation_cache_stats(self.cache_hits, len(self.cache),
+                                      self.call_cache)
 
     # -- initialization (paper §4.1) --------------------------------------------
 
@@ -377,6 +393,7 @@ class MOARSearch:
             errors=self.errors,
             wall_s=time.time() - t0,
             history=history,
+            cache_stats=self.cache_stats(),
         )
 
     # -- unified Optimizer protocol (repro.pipeline) -----------------------------------
@@ -400,6 +417,8 @@ class MOARSearch:
         if budget is not None:
             self.budget = budget
         self.cache = {}
+        self.cache_hits = 0
+        self.call_cache.clear()
         self.evaluated = []
         self.t = 0
         self.errors = 0
@@ -421,6 +440,7 @@ class MOARSearch:
             wall_s=res.wall_s,
             errors=res.errors,
             native=res,
+            cache_stats=res.cache_stats,
         )
 
     # -- held-out evaluation ----------------------------------------------------------

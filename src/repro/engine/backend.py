@@ -34,6 +34,14 @@ Operators execute real forward passes of reduced-config JAX models from
 the pool (real tokenization, prefill/decode, token counting). Used by
 integration tests and the serving example — it validates the substrate,
 not extraction quality (models are untrained).
+
+Both backends implement the batched Backend protocol v2
+(``submit(list[OpRequest]) -> list[OpResult]``): SimBackend as a
+vectorized per-request sweep (a pure function gains nothing from
+batching but must answer the batched surface), JaxBackend by routing
+generation chunks through the continuous-batching scheduler. The legacy
+per-document ``run_*`` methods remain as the kind-specific
+implementations and keep v1 compatibility via ``LegacyBackendAdapter``.
 """
 
 from __future__ import annotations
@@ -45,7 +53,10 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.models_catalog import ModelCard, catalog
-from repro.data.documents import Dataset, Document, doc_text, word_count
+from repro.data.documents import (Dataset, Document, doc_text,
+                                  main_text_key, word_count)
+from repro.engine.codeops import sentences
+from repro.pipeline.protocols import OpRequest, OpResult, execute_request
 
 WORDS_PER_TOKEN = 0.75
 
@@ -87,16 +98,61 @@ def _hash01(*parts) -> float:
     return int.from_bytes(h[:8], "little") / 2**64
 
 
+def default_equijoin(op: Dict[str, Any], doc: Document
+                     ) -> Tuple[Optional[Dict], Usage]:
+    """Semantic join of one document against ``op['right_docs']``: the
+    shared implementation both backends (and the LegacyBackendAdapter
+    fallback) use. Returns (``right_*``-prefixed fields of the best
+    match, or None) plus the per-probe usage."""
+    right = op.get("right_docs", [])
+    lval = str(doc.get(op["left_field"], "")).lower()
+    fld_r = op["right_field"]
+    best = None
+    for r in right:
+        if str(r.get(fld_r, "")).lower() == lval:
+            best = r
+            break
+    usage = Usage(in_tokens=40 * max(len(right), 1), out_tokens=4, calls=1)
+    if best is None:
+        return None, usage
+    return {f"right_{k}": v for k, v in best.items()
+            if not k.startswith("_")}, usage
+
+
 class SimBackend:
     # Backend-protocol batching hint: the simulator is a pure function of
     # (seed, doc, op) so batching buys nothing — invoke one at a time.
     preferred_batch_size = 1
+    # results depend only on (seed, domain, op, doc): the executor's
+    # content-addressed call cache may memoize invocations
+    deterministic = True
 
     def __init__(self, seed: int = 0, domain: str = "generic",
                  cards: Optional[Dict[str, ModelCard]] = None):
         self.seed = seed
         self.domain = domain
         self.cards = cards or catalog()
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        # custom card sets change context windows and therefore results:
+        # key them by content (prices + windows), not object identity
+        from repro.data.documents import content_hash
+        cards_fp = None if self.cards is catalog() else content_hash(
+            sorted((name, str(card)) for name, card in self.cards.items()))
+        return ("sim", self.seed, self.domain, cards_fp)
+
+    # -- batched dispatch (Backend protocol v2) -------------------------------
+
+    def submit(self, requests: List[OpRequest]) -> List[OpResult]:
+        """Vectorized entry point: the simulator is a pure per-request
+        function, so the batch executes as a straight sweep (via the
+        shared kind -> ``run_*`` routing) — no cross-request state, any
+        chunking yields identical results."""
+        out = []
+        for req in requests:
+            value, usage = execute_request(self, req)
+            out.append(OpResult(value=value, usage=usage))
+        return out
 
     # -- internals ----------------------------------------------------------
 
@@ -384,7 +440,6 @@ class SimBackend:
             if _hash01(self.seed, "summ", doc.get("id"), model,
                        f["value"]) < p:
                 kept.append(f)
-        from repro.data.documents import main_text_key
         key = main_text_key(doc)
         lines = [f"summary of the source document ({len(kept)} findings)."]
         for f in kept:
@@ -418,17 +473,20 @@ class SimBackend:
             if _hash01(self.seed, "ext", doc.get("id"), model,
                        f["value"]) < p:
                 kept_values.append(f["value"])
-        from repro.engine.codeops import sentences
         sents = sentences(text)
         kept = [s for s in sents if any(v in s for v in kept_values)]
         # keep ~10% neutral context lines
         kept += [s for i, s in enumerate(sents)
                  if _hash01(self.seed, "extn", doc.get("id"), i) < 0.10]
-        key = op.get("text_key") or "text"
-        from repro.data.documents import main_text_key
-        key = main_text_key(doc)
+        # explicit text_key override wins; default to the main text field
+        key = op.get("text_key") or main_text_key(doc)
         usage = self._usage(op, int(visible / WORDS_PER_TOKEN), 30)
         return {key: " ".join(dict.fromkeys(kept))}, usage
+
+    def run_equijoin(self, op: Dict[str, Any], doc: Document
+                     ) -> Tuple[Optional[Dict], Usage]:
+        """Semantic join probe: exact-match against op['right_docs']."""
+        return default_equijoin(op, doc)
 
     def run_resolve(self, op: Dict[str, Any], docs: Dataset
                     ) -> Tuple[Dataset, Usage]:
@@ -453,11 +511,27 @@ class SimBackend:
 
 
 class JaxBackend:
-    """Operators run real reduced-model forward passes from the pool."""
+    """Operators run real reduced-model forward passes from the pool.
+
+    ``submit`` batches generation: requests are grouped by model and run
+    through the fixed-slot continuous batcher (``serving/scheduler.py``),
+    so prefill/decode of a chunk genuinely amortizes — one jitted decode
+    step serves every active slot. Encoder-decoder and VLM architectures
+    need extra prefill inputs the scheduler doesn't thread, so they fall
+    back to per-request decoding.
+    """
 
     # Backend-protocol batching hint: real decoding amortizes prefill
-    # across requests (continuous batcher default slot count).
+    # across requests (continuous batcher slot count).
     preferred_batch_size = 4
+    # NOT memoizable: the fixed-slot batcher pads every slot to the max
+    # active length, so a request's decoded tokens depend on which other
+    # requests share its chunk — caching would freeze one batch
+    # composition's answer and make search order-dependent
+    deterministic = False
+
+    # prompt truncation: the serving path tokenizes at most this many ids
+    MAX_PROMPT_TOKENS = 96
 
     def __init__(self, seed: int = 0, max_new_tokens: int = 8):
         import jax
@@ -469,7 +543,11 @@ class JaxBackend:
         self.seed = seed
         self.max_new_tokens = max_new_tokens
         self._params = {}
+        self._batchers: Dict[str, Any] = {}
         self.cards = catalog()
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        return ("jax", self.seed, self.max_new_tokens)
 
     def _model(self, name: str):
         if name not in self._params:
@@ -479,13 +557,104 @@ class JaxBackend:
             self._params[name] = (cfg, params)
         return self._params[name]
 
+    # -- batched dispatch (Backend protocol v2) -------------------------------
+
+    def submit(self, requests: List[OpRequest]) -> List[OpResult]:
+        results: List[Optional[OpResult]] = [None] * len(requests)
+        by_model: Dict[str, List[int]] = {}
+        for i, req in enumerate(requests):
+            if req.kind == "resolve":
+                results[i] = OpResult(value=list(req.docs), usage=Usage())
+            elif req.kind == "equijoin":
+                value, usage = default_equijoin(req.op, req.doc)
+                results[i] = OpResult(value=value, usage=usage)
+            else:
+                by_model.setdefault(req.op["model"], []).append(i)
+        for model, idxs in by_model.items():
+            prompts = [self._prompt_for(requests[i]) for i in idxs]
+            for i, (toks, usage) in zip(idxs,
+                                        self._generate_batch(model, prompts)):
+                results[i] = OpResult(
+                    value=self._value_for(requests[i], toks), usage=usage)
+        return results
+
+    def _prompt_for(self, req: OpRequest) -> str:
+        op = req.op
+        if req.kind in ("map", "summarize", "filter"):
+            return f"{op.get('prompt', '')}\n{doc_text(req.doc)[:2000]}"
+        if req.kind == "extract":
+            return doc_text(req.doc)[:2000]
+        if req.kind == "classify":
+            return doc_text(req.doc)[:1000]
+        if req.kind == "reduce":
+            joined = " ".join(doc_text(d)[:400] for d in req.docs[:8])
+            return f"{op.get('prompt', '')}\n{joined}"
+        raise TypeError(f"JaxBackend cannot execute request kind "
+                        f"{req.kind!r}")
+
+    def _value_for(self, req: OpRequest, toks: List[int]) -> Any:
+        op = req.op
+        if req.kind in ("map", "summarize"):
+            out_field = next(iter(op.get("output_schema", {})), "output")
+            return {out_field: [{"tag": "gen",
+                                 "value": " ".join(map(str, toks))}]}
+        if req.kind == "filter":
+            return bool(toks[0] % 2)
+        if req.kind == "extract":
+            key = op.get("text_key") or main_text_key(req.doc)
+            words = doc_text(req.doc).split()
+            return {key: " ".join(words[:len(words) // 2])}
+        if req.kind == "classify":
+            classes = req.extra["classes"]
+            return classes[toks[0] % len(classes)]
+        out_field = next(iter(op.get("output_schema", {})), "aggregated")
+        return {out_field: [{"tag": "gen", "value": str(t)} for t in toks]}
+
+    def _batcher(self, model: str):
+        """Persistent per-model continuous batcher: the jitted decode
+        step compiles once and is reused across submit calls
+        (``run_until_drained`` drains per call, so batches don't mix)."""
+        b = self._batchers.get(model)
+        if b is None:
+            from repro.serving.scheduler import ContinuousBatcher
+            cfg, params = self._model(model)
+            b = ContinuousBatcher(
+                params, cfg, num_slots=self.preferred_batch_size,
+                max_len=self.MAX_PROMPT_TOKENS + self.max_new_tokens + 8,
+                eos_id=-1)  # match generate(): no early EOS stop
+            self._batchers[model] = b
+        return b
+
+    def _generate_batch(self, model: str, texts: List[str]
+                        ) -> List[Tuple[List[int], Usage]]:
+        import numpy as np
+        from repro.data.tokenizer import HashWordTokenizer
+        cfg, params = self._model(model)
+        if cfg.is_encoder_decoder or cfg.family == "vlm":
+            # extra prefill inputs (frames / patch embeds) aren't threaded
+            # through the scheduler — decode these per request
+            return [self._generate(model, t) for t in texts]
+        tok = HashWordTokenizer(cfg.vocab_size)
+        batcher = self._batcher(model)
+        ids_list = [tok.encode(t)[:self.MAX_PROMPT_TOKENS] for t in texts]
+        uids = [batcher.submit(np.asarray(ids, np.int32),
+                               max_new_tokens=self.max_new_tokens)
+                for ids in ids_list]
+        finished = {r.uid: r for r in batcher.run_until_drained()}
+        out = []
+        for uid, ids in zip(uids, ids_list):
+            usage = Usage(in_tokens=len(ids),
+                          out_tokens=self.max_new_tokens, calls=1)
+            out.append((list(finished[uid].generated), usage))
+        return out
+
     def _generate(self, model: str, text: str) -> Tuple[List[int], Usage]:
         import numpy as np
         from repro.data.tokenizer import HashWordTokenizer
         from repro.serving.decode import generate
         cfg, params = self._model(model)
         tok = HashWordTokenizer(cfg.vocab_size)
-        ids = tok.encode(text)[:96]
+        ids = tok.encode(text)[:self.MAX_PROMPT_TOKENS]
         prompt = np.asarray(ids, dtype=np.int32)[None, :]
         extra = {}
         if cfg.is_encoder_decoder:
@@ -508,36 +677,31 @@ class JaxBackend:
         return (usage.in_tokens * card.price_in
                 + usage.out_tokens * card.price_out) / 1e6
 
+    def _run_one(self, req: OpRequest) -> Tuple[Any, Usage]:
+        """v1 per-request path: same prompt construction and output
+        shaping as the batched path, minus the scheduler."""
+        toks, usage = self._generate(req.op["model"], self._prompt_for(req))
+        return self._value_for(req, toks), usage
+
     def run_map(self, op, doc):
-        prompt = f"{op.get('prompt','')}\n{doc_text(doc)[:2000]}"
-        toks, usage = self._generate(op["model"], prompt)
-        schema = op.get("output_schema", {})
-        out_field = next(iter(schema), "output")
-        return {out_field: [{"tag": "gen", "value": " ".join(map(str, toks))}]}, usage
+        return self._run_one(OpRequest("map", op, doc=doc))
 
     def run_filter(self, op, doc):
-        prompt = f"{op.get('prompt','')}\n{doc_text(doc)[:2000]}"
-        toks, usage = self._generate(op["model"], prompt)
-        return bool(toks[0] % 2), usage
+        return self._run_one(OpRequest("filter", op, doc=doc))
 
     def run_reduce(self, op, docs):
-        joined = " ".join(doc_text(d)[:400] for d in docs[:8])
-        toks, usage = self._generate(op["model"], f"{op.get('prompt','')}\n{joined}")
-        schema = op.get("output_schema", {})
-        out_field = next(iter(schema), "aggregated")
-        return {out_field: [{"tag": "gen", "value": str(t)} for t in toks]}, usage
+        return self._run_one(OpRequest("reduce", op, docs=list(docs)))
 
     def run_extract(self, op, doc):
-        from repro.data.documents import main_text_key
-        toks, usage = self._generate(op["model"], doc_text(doc)[:2000])
-        key = main_text_key(doc)
-        words = doc_text(doc).split()
-        keep = len(words) // 2
-        return {key: " ".join(words[:keep])}, usage
+        return self._run_one(OpRequest("extract", op, doc=doc))
 
     def run_classify(self, op, doc, classes, truth_field):
-        toks, usage = self._generate(op["model"], doc_text(doc)[:1000])
-        return classes[toks[0] % len(classes)], usage
+        return self._run_one(OpRequest(
+            "classify", op, doc=doc,
+            extra={"classes": classes, "truth_field": truth_field}))
+
+    def run_equijoin(self, op, doc):
+        return default_equijoin(op, doc)
 
     def run_resolve(self, op, docs):
         usage = Usage()

@@ -6,12 +6,19 @@ code_map/code_reduce/code_filter), registered into the
 ``repro.pipeline`` operator registry. Each registration bundles the
 type's validation rules, execution function, cost kind (LLM vs. $0), and
 rewrite-target metadata; ``Executor.run`` dispatches through the
-registry, so these functions replaced the old ``Executor._exec_*``
-method chain one-for-one.
+registry.
 
-Execution functions take ``(executor, op, docs, stats)``: the executor
-provides the backend, failure injection (``_maybe_fail``), grouping, and
-the run seed; ``stats.charge`` applies the paper's cost model.
+Execution functions take ``(executor, op, docs, stats)``. LLM-kind
+operators *plan* their backend invocations as a batch of ``OpRequest``s
+and hand the whole batch to ``executor.dispatch`` — which consults the
+call cache, chunks by the backend's ``preferred_batch_size``, submits
+through ``Backend.submit``, retries transient per-request failures, and
+charges the paper's cost model into ``stats``. Auxiliary/code operators
+never touch the backend.
+
+NOTE: ``backend`` is imported as a module reference, not from-imported:
+this module loads during ``repro.pipeline.__init__`` which the backend
+module itself triggers, so names must resolve at call time.
 """
 
 from __future__ import annotations
@@ -21,8 +28,9 @@ from typing import Any, Dict, List
 
 from repro.data.documents import (Dataset, Document, doc_text,
                                   main_text_key)
+from repro.engine import backend as _backend
 from repro.engine import codeops
-from repro.engine.backend import Usage, _hash01
+from repro.pipeline.protocols import OpRequest
 from repro.pipeline.spec import (KIND_AUX, KIND_CODE, KIND_LLM,
                                  PipelineValidationError, register_operator)
 
@@ -54,25 +62,29 @@ def _validate_code(op):
 # ---------------------------------------------------------------------------
 
 
+def _map_request(op, doc) -> OpRequest:
+    if op.get("summarize"):
+        return OpRequest("summarize", op, doc=doc, key=doc.get("id"))
+    if op.get("classify"):
+        spec = op["classify"]
+        return OpRequest("classify", op, doc=doc, key=doc.get("id"),
+                         extra={"classes": spec["classes"],
+                                "truth_field": spec["truth_field"]})
+    return OpRequest("map", op, doc=doc, key=doc.get("id"))
+
+
 @register_operator(
     "map", kind=KIND_LLM, required_keys=("prompt", "model", "output_schema"),
     rewrite_tags=("reads_text", "model_bearing", "decomposable"),
     description="LLM projection over each document (extraction, "
                 "summarization, classification, formatting)")
 def exec_map(ex, op, docs: Dataset, stats) -> Dataset:
+    reqs = [_map_request(op, d) for d in docs]
+    values = ex.dispatch(reqs, stats)
     out = []
-    for d in docs:
-        ex._maybe_fail(op, d.get("id"))
-        if op.get("summarize"):
-            fields, usage = ex.backend.run_summarize(op, d)
-        elif op.get("classify"):
-            spec = op["classify"]
-            label, usage = ex.backend.run_classify(
-                op, d, spec["classes"], spec["truth_field"])
-            fields = {spec["output_field"]: label}
-        else:
-            fields, usage = ex.backend.run_map(op, d)
-        stats.charge(op["name"], op["model"], usage, ex.backend)
+    for d, req, v in zip(docs, reqs, values):
+        fields = {op["classify"]["output_field"]: v} \
+            if req.kind == "classify" else v
         out.append({**d, **fields})
     return out
 
@@ -98,14 +110,9 @@ def exec_parallel_map(ex, op, docs: Dataset, stats) -> Dataset:
     rewrite_tags=("reads_text", "model_bearing", "pushdown"),
     description="LLM predicate keeping/dropping documents")
 def exec_filter(ex, op, docs: Dataset, stats) -> Dataset:
-    out = []
-    for d in docs:
-        ex._maybe_fail(op, d.get("id"))
-        keep, usage = ex.backend.run_filter(op, d)
-        stats.charge(op["name"], op["model"], usage, ex.backend)
-        if keep:
-            out.append(d)
-    return out
+    reqs = [OpRequest("filter", op, doc=d, key=d.get("id")) for d in docs]
+    keeps = ex.dispatch(reqs, stats)
+    return [d for d, keep in zip(docs, keeps) if keep]
 
 
 @register_operator(
@@ -116,11 +123,12 @@ def exec_filter(ex, op, docs: Dataset, stats) -> Dataset:
     description="LLM aggregation over groups (reduce_key, '_all' for "
                 "whole-collection)")
 def exec_reduce(ex, op, docs: Dataset, stats) -> Dataset:
+    groups = list(ex._group(docs, op["reduce_key"]).items())
+    reqs = [OpRequest("reduce", op, docs=group, key=gkey)
+            for gkey, group in groups]
+    values = ex.dispatch(reqs, stats)
     out = []
-    for gkey, group in ex._group(docs, op["reduce_key"]).items():
-        ex._maybe_fail(op, gkey)
-        fields, usage = ex.backend.run_reduce(op, group)
-        stats.charge(op["name"], op["model"], usage, ex.backend)
+    for (gkey, group), fields in zip(groups, values):
         doc = {"id": f"group_{gkey}", op["reduce_key"]: gkey, **fields}
         if op.get("restore_id"):
             # chunk-merge reduces group by _parent_id and must restore
@@ -143,9 +151,8 @@ def exec_reduce(ex, op, docs: Dataset, stats) -> Dataset:
     rewrite_tags=("model_bearing",),
     description="canonicalize near-duplicate field values across documents")
 def exec_resolve(ex, op, docs: Dataset, stats) -> Dataset:
-    ex._maybe_fail(op, "resolve")
-    out, usage = ex.backend.run_resolve(op, docs)
-    stats.charge(op["name"], op["model"], usage, ex.backend)
+    [out] = ex.dispatch([OpRequest("resolve", op, docs=list(docs),
+                                   key="resolve")], stats)
     return out
 
 
@@ -154,22 +161,12 @@ def exec_resolve(ex, op, docs: Dataset, stats) -> Dataset:
     rewrite_tags=("model_bearing",),
     description="semantic join of the stream against op['right_docs']")
 def exec_equijoin(ex, op, docs: Dataset, stats) -> Dataset:
-    right = op.get("right_docs", [])
-    fld_l, fld_r = op["left_field"], op["right_field"]
+    reqs = [OpRequest("equijoin", op, doc=d, key=d.get("id")) for d in docs]
+    values = ex.dispatch(reqs, stats)
     out = []
-    for d in docs:
-        lval = str(d.get(fld_l, "")).lower()
-        best = None
-        for r in right:
-            if str(r.get(fld_r, "")).lower() == lval:
-                best = r
-                break
-        usage = Usage(in_tokens=40 * max(len(right), 1), out_tokens=4,
-                      calls=1)
-        stats.charge(op["name"], op["model"], usage, ex.backend)
-        if best is not None:
-            out.append({**d, **{f"right_{k}": v for k, v in best.items()
-                                if not k.startswith("_")}})
+    for d, fields in zip(docs, values):
+        if fields is not None:
+            out.append({**d, **fields})
     return out
 
 
@@ -178,13 +175,9 @@ def exec_equijoin(ex, op, docs: Dataset, stats) -> Dataset:
     rewrite_tags=("reads_text", "model_bearing", "compression"),
     description="LLM document compression: keep fact-bearing line ranges")
 def exec_extract(ex, op, docs: Dataset, stats) -> Dataset:
-    out = []
-    for d in docs:
-        ex._maybe_fail(op, d.get("id"))
-        fields, usage = ex.backend.run_extract(op, d)
-        stats.charge(op["name"], op["model"], usage, ex.backend)
-        out.append({**d, **fields})
-    return out
+    reqs = [OpRequest("extract", op, doc=d, key=d.get("id")) for d in docs]
+    values = ex.dispatch(reqs, stats)
+    return [{**d, **fields} for d, fields in zip(docs, values)]
 
 
 # ---------------------------------------------------------------------------
@@ -289,8 +282,8 @@ def exec_sample(ex, op, docs: Dataset, stats) -> Dataset:
             return list(cands)
         if method == "random" or not keywords:
             idx = sorted(range(len(cands)),
-                         key=lambda i: _hash01(ex.seed, "smp", op["name"],
-                                               cands[i].get("id")))
+                         key=lambda i: _backend._hash01(
+                             ex.seed, "smp", op["name"], cands[i].get("id")))
             return [cands[i] for i in idx[:size]]
         scored = sorted(
             cands,

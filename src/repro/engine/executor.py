@@ -4,15 +4,33 @@ Execution dispatches through the ``repro.pipeline`` operator registry
 (engine/builtin_ops.py registers the Table 7 set: map, parallel_map,
 reduce, filter, resolve, equijoin, unnest, split, gather, sample, extract,
 code_map/code_reduce/code_filter) against a pluggable backend satisfying
-the ``Backend`` protocol (SimBackend / JaxBackend), checked at
+the batched ``Backend`` protocol (SimBackend / JaxBackend; v1 per-document
+backends are auto-wrapped in a ``LegacyBackendAdapter``), checked at
 construction. Custom operator types execute without touching this file:
 one ``@register_operator`` call is the whole integration.
+
+Each LLM-kind operator plans its invocations as a batch of ``OpRequest``s
+and hands them to :meth:`Executor.dispatch`, which
+
+- answers requests from the content-addressed **call cache** — keyed on
+  (backend fingerprint, op fingerprint, doc fingerprint) — replaying the
+  recorded usage so measured cost/latency are unchanged while the backend
+  is not re-invoked (the cache tier below the pipeline-hash cache in
+  ``core/search.py``: rewrites sharing a prefix with an evaluated
+  candidate only pay for the changed suffix);
+- splits the remainder into ``preferred_batch_size`` chunks for
+  ``Backend.submit`` (JaxBackend routes chunks through the continuous
+  batcher in ``serving/scheduler.py``);
+- retries individual requests on ``TransientLLMError`` instead of
+  aborting the whole pipeline evaluation; a request that keeps failing
+  for ``max_attempts`` attempts aborts the evaluation as before.
 
 Returns (output documents, ExecutionStats) where stats carry the paper's
 cost model: $ cost = sum over LLM ops of tokens x model token price; code
 and auxiliary operators cost $0 (paper §2.3). Latency (calls x
 size-dependent per-call latency / worker parallelism) feeds Table 8/9 and
-is recorded per operator alongside cost and calls in ``per_op``.
+is recorded per operator alongside cost, calls, and token counts in
+``per_op``.
 
 Transient-failure injection (``fail_prob``) exercises the optimizer's
 error-handling path (paper §4.3.3) in tests.
@@ -20,30 +38,35 @@ error-handling path (paper §4.3.3) in tests.
 
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.models_catalog import catalog
-from repro.data.documents import Dataset
+from repro.data.documents import Dataset, content_hash
 from repro.engine import builtin_ops  # noqa: F401 — registers Table 7 ops
 from repro.engine.backend import Usage, _hash01
 from repro.engine.operators import validate_pipeline
 from repro.pipeline.model import PipelineLike, as_config
-from repro.pipeline.protocols import batch_hint, check_backend
+from repro.pipeline.protocols import (OpRequest, TransientBackendError,
+                                      backend_fingerprint, batch_hint,
+                                      check_backend, is_deterministic)
 from repro.pipeline.spec import operator_spec
 
 
-class TransientLLMError(RuntimeError):
+class TransientLLMError(TransientBackendError):
     """Simulated API failure (rate limit / outage)."""
 
 
 @dataclass
 class OpStats:
-    """Per-operator accounting: cost, latency, and LLM call count."""
+    """Per-operator accounting: cost, latency, calls, and token counts."""
 
     cost: float = 0.0
     latency_s: float = 0.0
     calls: int = 0
+    in_tokens: int = 0
+    out_tokens: int = 0
 
 
 @dataclass
@@ -53,6 +76,7 @@ class ExecutionStats:
     in_tokens: int = 0
     out_tokens: int = 0
     latency_s: float = 0.0
+    retries: int = 0
     per_op: Dict[str, OpStats] = field(default_factory=dict)
 
     def charge(self, op_name: str, model: str, usage: Usage, backend):
@@ -64,11 +88,32 @@ class ExecutionStats:
         entry = self.per_op.setdefault(op_name, OpStats())
         entry.cost += c
         entry.calls += usage.calls
+        entry.in_tokens += usage.in_tokens
+        entry.out_tokens += usage.out_tokens
         if model:
             n_act = catalog()[model].active_params
             lat = usage.calls * (0.15 + 2e-12 * n_act * usage.out_tokens)
             self.latency_s += lat
             entry.latency_s += lat
+
+    def merge(self, other: "ExecutionStats") -> "ExecutionStats":
+        """Accumulate ``other`` into this record (suffix-cache
+        accounting: stats of a cached prefix + a re-executed suffix sum
+        to the full-pipeline measurement). Returns self for chaining."""
+        self.cost += other.cost
+        self.llm_calls += other.llm_calls
+        self.in_tokens += other.in_tokens
+        self.out_tokens += other.out_tokens
+        self.latency_s += other.latency_s
+        self.retries += other.retries
+        for name, st in other.per_op.items():
+            entry = self.per_op.setdefault(name, OpStats())
+            entry.cost += st.cost
+            entry.latency_s += st.latency_s
+            entry.calls += st.calls
+            entry.in_tokens += st.in_tokens
+            entry.out_tokens += st.out_tokens
+        return self
 
     def per_op_cost(self) -> Dict[str, float]:
         return {k: v.cost for k, v in self.per_op.items()}
@@ -77,24 +122,91 @@ class ExecutionStats:
         return {k: v.latency_s for k, v in self.per_op.items()}
 
 
+class CallCache:
+    """Content-addressed memo of backend invocations: the evaluation
+    cache tier *below* the pipeline-hash cache.
+
+    Key: (backend fingerprint, request kind, op config minus ``name``,
+    document content) — a deterministic backend returns the same
+    (value, usage) for that key regardless of which candidate pipeline
+    asked, so near-identical candidates sharing a prefix with an already
+    evaluated one only re-execute the changed suffix. Entries are deep-
+    copied on store AND hit: cached state never aliases live documents,
+    so a downstream operator mutating a merged field in place (legal for
+    third-party registered ops) cannot poison the cache. Whole-corpus
+    payloads (UNCACHED_KINDS) never enter, keeping copies small.
+    """
+
+    def __init__(self):
+        self.data: Dict[str, Tuple[Any, Any]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def lookup(self, key: str) -> Optional[Tuple[Any, Any]]:
+        entry = self.data.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return copy.deepcopy(entry)
+
+    def store(self, key: str, value: Any, usage: Any) -> None:
+        self.data[key] = copy.deepcopy((value, usage))
+
+    def clear(self) -> None:
+        self.data.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+def evaluation_cache_stats(pipeline_hits: int, pipeline_entries: int,
+                           call_cache: CallCache) -> Dict[str, Any]:
+    """The two-tier cache report every optimizer exposes as
+    ``SearchResult.cache_stats``: pipeline-hash tier (identical
+    candidates) + content-addressed call tier (shared-prefix reuse)."""
+    return {
+        "pipeline_cache_hits": pipeline_hits,
+        "pipeline_cache_entries": pipeline_entries,
+        "call_cache_hits": call_cache.hits,
+        "call_cache_misses": call_cache.misses,
+        "call_cache_hit_rate": call_cache.hit_rate,
+        "call_cache_entries": len(call_cache),
+    }
+
+
+_UNSET = object()
+
+# request kinds the call cache skips: a resolve request carries the whole
+# document stream and returns it rewritten, so fingerprinting the key
+# costs as much as the (cheap) call and the cached value would hold a
+# second copy of the corpus
+UNCACHED_KINDS = frozenset({"resolve"})
+
+
 class Executor:
     def __init__(self, backend, *, fail_prob: float = 0.0, seed: int = 0,
-                 workers: int = 3):
+                 workers: int = 3, call_cache: Optional[CallCache] = None,
+                 max_attempts: int = 3):
         self.backend = check_backend(backend)
-        self.batch_hint = batch_hint(backend)
+        self.batch_hint = batch_hint(self.backend)
         self.fail_prob = fail_prob
         self.seed = seed
         self.workers = workers
+        self.max_attempts = max(1, max_attempts)
+        self.call_cache = call_cache if call_cache is not None else CallCache()
+        self._cache_enabled = is_deterministic(self.backend)
+        self._backend_fp = backend_fingerprint(self.backend)
         self._run_counter = 0  # transient failures vary across retries
 
     # -- shared infrastructure for operator implementations -------------------
-
-    def _maybe_fail(self, op, key):
-        if self.fail_prob > 0 and \
-                _hash01(self.seed, "apifail", self._run_counter,
-                        op.get("name"), key) < self.fail_prob:
-            raise TransientLLMError(
-                f"simulated API failure in {op.get('name')}")
 
     def _group(self, docs: Dataset, key: str) -> Dict[Any, Dataset]:
         if key == "_all":
@@ -103,6 +215,117 @@ class Executor:
         for d in docs:
             groups.setdefault(d.get(key), []).append(d)
         return groups
+
+    # -- batched request dispatch ---------------------------------------------
+
+    def _fails(self, req: OpRequest, attempt: int) -> bool:
+        return self.fail_prob > 0 and \
+            _hash01(self.seed, "apifail", self._run_counter,
+                    req.op.get("name"), req.key, attempt) < self.fail_prob
+
+    def _cache_key(self, req: OpRequest, op_fps: Dict[int, str]) -> str:
+        # the op config is shared by every request of a batch (and can
+        # embed large payloads, e.g. equijoin right_docs): hash it once
+        # per dispatch, memoized by object identity
+        op_fp = op_fps.get(id(req.op))
+        if op_fp is None:
+            op_fp = content_hash({k: v for k, v in req.op.items()
+                                  if k != "name"})
+            op_fps[id(req.op)] = op_fp
+        payload = req.docs if req.kind in ("reduce", "resolve") else req.doc
+        return content_hash([self._backend_fp, req.kind, op_fp, payload,
+                             req.extra])
+
+    def _charge(self, req: OpRequest, usage, stats: ExecutionStats) -> None:
+        stats.charge(req.op["name"], req.op.get("model", ""), usage,
+                     self.backend)
+
+    def dispatch(self, requests: List[OpRequest], stats: ExecutionStats
+                 ) -> List[Any]:
+        """Answer a batch of operator invocations, in request order.
+
+        Cache hits replay their recorded usage into ``stats`` (measured
+        cost is a property of the pipeline, not of who paid for the
+        call); misses go to ``Backend.submit`` in ``preferred_batch_size``
+        chunks, with per-request retry of transient failures. Charging
+        happens in request order after every request resolved, so the
+        float accumulation is bit-identical whatever the hit pattern,
+        chunking, or retry schedule. Raises ``TransientLLMError`` only
+        after a request exhausts ``max_attempts``.
+        """
+        results: List[Any] = [_UNSET] * len(requests)
+        usages: List[Any] = [None] * len(requests)
+        keys: List[Optional[str]] = [None] * len(requests)
+        op_fps: Dict[int, str] = {}
+        pending: List[int] = []
+        for i, req in enumerate(requests):
+            if self._cache_enabled and req.kind not in UNCACHED_KINDS:
+                keys[i] = self._cache_key(req, op_fps)
+                hit = self.call_cache.lookup(keys[i])
+                if hit is not None:
+                    results[i], usages[i] = hit
+                    continue
+            pending.append(i)
+
+        attempt = 0
+        while pending:
+            retry: List[int] = []
+            live: List[int] = []
+            for i in pending:
+                if self._fails(requests[i], attempt):
+                    if attempt + 1 >= self.max_attempts:
+                        raise TransientLLMError(
+                            f"simulated API failure in "
+                            f"{requests[i].op.get('name')} "
+                            f"(gave up after {attempt + 1} attempts)")
+                    retry.append(i)
+                    continue
+                live.append(i)
+            for start in range(0, len(live), self.batch_hint):
+                chunk = live[start:start + self.batch_hint]
+                try:
+                    outs = self.backend.submit([requests[i] for i in chunk])
+                except TransientBackendError as e:
+                    # the documented contract allows raising instead of
+                    # returning OpResult(error=...): retry the chunk
+                    if attempt + 1 >= self.max_attempts:
+                        raise TransientLLMError(
+                            f"backend failure persisted for "
+                            f"{attempt + 1} attempts: {e}") from e
+                    retry.extend(chunk)
+                    continue
+                if len(outs) != len(chunk):
+                    raise RuntimeError(
+                        f"{type(self.backend).__name__}.submit returned "
+                        f"{len(outs)} results for {len(chunk)} requests")
+                for i, res in zip(chunk, outs):
+                    if res.error is not None:
+                        if isinstance(res.error, TransientBackendError):
+                            if attempt + 1 < self.max_attempts:
+                                retry.append(i)
+                                continue
+                            # normalize so optimizer error handlers
+                            # (except TransientLLMError) keep working
+                            raise TransientLLMError(
+                                f"{requests[i].op.get('name')}: transient "
+                                f"backend failure persisted for "
+                                f"{attempt + 1} attempts: {res.error}"
+                            ) from res.error
+                        raise res.error
+                    # backends may omit usage for free operations
+                    usage = res.usage if res.usage is not None else Usage()
+                    if keys[i] is not None:
+                        self.call_cache.store(keys[i], res.value, usage)
+                    results[i] = res.value
+                    usages[i] = usage
+            stats.retries += len(retry)
+            pending = retry
+            attempt += 1
+
+        assert not any(r is _UNSET for r in results)
+        for req, usage in zip(requests, usages):
+            self._charge(req, usage, stats)
+        return results
 
     # -- entry point -----------------------------------------------------------
 

@@ -10,8 +10,10 @@ benchmarks, the examples, and the serving path speak:
   ``Pipeline`` with lossless ``to_dict``/``from_dict`` that preserves
   ``pipeline_hash`` (search-tree caching and YAML/dict configs keep
   working);
-- ``Backend`` protocol (:mod:`repro.pipeline.protocols`): the execution
-  substrate contract, checked at executor construction;
+- ``Backend`` protocol v2 (:mod:`repro.pipeline.protocols`): the batched
+  execution-substrate contract — ``submit(list[OpRequest]) ->
+  list[OpResult]`` — checked at executor construction; v1 per-document
+  backends are auto-wrapped in a ``LegacyBackendAdapter``;
 - ``Optimizer`` protocol (:mod:`repro.pipeline.optimizers`):
   ``optimize(pipeline, workload, budget) -> SearchResult`` implemented by
   MOAR and every baseline, plus the name registry behind
@@ -28,8 +30,13 @@ from repro.pipeline.optimizers import (Optimizer, PlanPoint, SearchResult,
                                        get_optimizer, optimizer_names,
                                        optimizer_registry,
                                        pareto_plan_points, run_optimizer)
-from repro.pipeline.protocols import (Backend, REQUIRED_BACKEND_METHODS,
-                                      batch_hint, check_backend)
+from repro.pipeline.protocols import (BACKEND_V2_METHODS, Backend,
+                                      LegacyBackendAdapter, OpRequest,
+                                      OpResult, REQUIRED_BACKEND_METHODS,
+                                      TransientBackendError,
+                                      backend_fingerprint, batch_hint,
+                                      check_backend, execute_request,
+                                      is_deterministic)
 from repro.pipeline.spec import (KIND_AUX, KIND_CODE, KIND_LLM, KINDS,
                                  OpConfig, OperatorSpec, PipelineConfig,
                                  PipelineValidationError, TypeView,
@@ -56,8 +63,11 @@ __all__ = [
     "KIND_LLM", "KIND_CODE", "KIND_AUX", "KINDS",
     "OpConfig", "PipelineConfig", "PipelineValidationError",
     "validate_op", "validate_pipeline_config",
-    # backend protocol
-    "Backend", "check_backend", "batch_hint", "REQUIRED_BACKEND_METHODS",
+    # backend protocol (v2: batched request/response dispatch)
+    "Backend", "OpRequest", "OpResult", "LegacyBackendAdapter",
+    "TransientBackendError", "check_backend", "batch_hint",
+    "backend_fingerprint", "execute_request", "is_deterministic",
+    "REQUIRED_BACKEND_METHODS", "BACKEND_V2_METHODS",
     # optimizer protocol
     "Optimizer", "PlanPoint", "SearchResult", "get_optimizer",
     "optimizer_names", "optimizer_registry", "run_optimizer",

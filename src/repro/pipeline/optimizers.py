@@ -46,6 +46,9 @@ class SearchResult:
     wall_s: float
     errors: int = 0
     native: Any = None  # optimizer-specific result (e.g. MOAR's tree)
+    # two-tier evaluation-cache accounting: pipeline-hash tier (identical
+    # candidates) + content-addressed call tier (shared-prefix reuse)
+    cache_stats: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def name(self) -> str:  # BaselineResult compatibility

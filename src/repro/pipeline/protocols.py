@@ -1,66 +1,221 @@
-"""``Backend`` protocol: what an execution substrate must provide.
+"""``Backend`` protocol v2: batched request/response dispatch.
 
-``SimBackend`` (deterministic LLM-behaviour model) and ``JaxBackend``
-(real reduced-model forward passes) grew the same surface by convention;
-this protocol formalizes it so the executor can check conformance at
-construction time instead of failing mid-pipeline, and so new substrates
-(sharded, async, remote) know the exact contract.
+An execution substrate receives *batches* of operator invocations and
+answers them in order:
 
-Required surface:
 - ``usage_cost(model, usage)``: $ cost of a Usage record (tokens x the
   model's per-token price);
-- ``run_map/run_filter/run_reduce/run_extract/run_classify/run_resolve``:
-  the semantic-operator invocation entry points.
+- ``submit(requests: list[OpRequest]) -> list[OpResult]``: execute a
+  batch of operator invocations. The executor plans one batch per
+  operator, splits it into ``preferred_batch_size`` chunks, and calls
+  ``submit`` once per chunk — so a substrate with a continuous-batching
+  scheduler (``JaxBackend`` via ``serving/scheduler.py``) genuinely
+  amortizes prefill/decode across the chunk.
 
-Optional:
-- ``run_summarize``: summarization maps (SimBackend only; the executor
-  routes ``summarize`` ops here when present);
-- ``preferred_batch_size``: batching hint — how many operator invocations
-  the substrate would like to see at once (continuous-batching serving
-  uses >1; the sequential executor records it for future batched
-  dispatch).
+Request kinds mirror the v1 per-document surface: ``map``, ``summarize``,
+``classify``, ``filter``, ``extract``, ``equijoin`` carry one ``doc``;
+``reduce`` and ``resolve`` carry a document group in ``docs``.
+
+Optional backend attributes the executor consults:
+
+- ``preferred_batch_size``: chunk size for ``submit`` calls (default 1);
+- ``deterministic``: declare ``True`` when results are a pure function
+  of (backend state, op, doc) to opt in to the executor's
+  content-addressed call cache. Backends that never declare it are NOT
+  cached — silently memoizing a sampling or stateful backend would
+  distort search;
+- ``fingerprint()``: stable identity of the backend's behaviour (e.g.
+  ``("sim", seed, domain)``), used to key the call cache. Without it the
+  cache falls back to the instance id — still correct, never shared
+  across instances.
+
+Backwards compatibility: any object exposing the v1 per-document surface
+(``run_map``/``run_filter``/``run_reduce``/``run_extract``/
+``run_classify``/``run_resolve`` + ``usage_cost``) is auto-wrapped by
+:func:`check_backend` in a :class:`LegacyBackendAdapter`, which answers
+``submit`` by sequential per-request dispatch — third-party backends keep
+working unmodified.
+
+Transient failures: a backend may mark a single failed request by
+returning ``OpResult(error=...)`` with a :class:`TransientBackendError`
+(or raise it); the executor retries that request instead of aborting the
+whole pipeline evaluation.
 """
 
 from __future__ import annotations
 
-from typing import Any, Protocol, Tuple, runtime_checkable
+import uuid
+from dataclasses import dataclass, field
+from typing import (Any, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
+# v1 per-document surface (LegacyBackendAdapter wraps this)
 REQUIRED_BACKEND_METHODS = (
     "usage_cost", "run_map", "run_filter", "run_reduce", "run_extract",
     "run_classify", "run_resolve",
 )
+
+# v2 batched surface
+BACKEND_V2_METHODS = ("usage_cost", "submit")
+
+#: request kinds that carry a single ``doc`` (vs. a ``docs`` group)
+PER_DOC_KINDS = ("map", "summarize", "classify", "filter", "extract",
+                 "equijoin")
+GROUP_KINDS = ("reduce", "resolve")
+
+
+class TransientBackendError(RuntimeError):
+    """Recoverable per-request failure (rate limit / outage): the
+    executor retries the request instead of aborting the evaluation."""
+
+
+@dataclass(frozen=True)
+class OpRequest:
+    """One operator invocation: the unit ``Backend.submit`` receives.
+
+    ``kind`` selects the semantic entry point; ``op`` is the operator
+    config; per-document kinds populate ``doc``, group kinds ``docs``.
+    ``key`` is the request's identity within the operator (doc id / group
+    key) — failure injection and diagnostics use it. ``extra`` carries
+    kind-specific arguments (classify: ``classes``, ``truth_field``).
+    """
+
+    kind: str
+    op: Dict[str, Any]
+    doc: Any = None
+    docs: Any = None
+    key: Any = None
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class OpResult:
+    """Answer to one :class:`OpRequest`: the kind-specific ``value``
+    (fields dict, bool, label, doc list, ...), the ``usage`` record the
+    cost model charges, or a per-request ``error``."""
+
+    value: Any = None
+    usage: Any = None
+    error: Optional[BaseException] = None
 
 
 @runtime_checkable
 class Backend(Protocol):
     def usage_cost(self, model: str, usage: Any) -> float: ...
 
-    def run_map(self, op, doc) -> Tuple[dict, Any]: ...
+    def submit(self, requests: List[OpRequest]) -> List[OpResult]: ...
 
-    def run_filter(self, op, doc) -> Tuple[bool, Any]: ...
 
-    def run_reduce(self, op, docs) -> Tuple[dict, Any]: ...
+class LegacyBackendAdapter:
+    """Wraps a v1 per-document backend into the batched v2 surface.
 
-    def run_extract(self, op, doc) -> Tuple[dict, Any]: ...
+    ``submit`` dispatches each request to the wrapped ``run_*`` method;
+    per-request exceptions become ``OpResult(error=...)`` so one bad
+    request doesn't poison its chunk. Everything else (``usage_cost``,
+    ``preferred_batch_size``, ``seed``, custom attributes) passes through
+    to the wrapped backend.
+    """
 
-    def run_classify(self, op, doc, classes, truth_field) -> Tuple[str, Any]: ...
+    def __init__(self, inner: Any):
+        self.inner = inner
 
-    def run_resolve(self, op, docs) -> Tuple[list, Any]: ...
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self.inner, name)
+
+    def __repr__(self) -> str:
+        return f"LegacyBackendAdapter({self.inner!r})"
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        return ("legacy",) + backend_fingerprint(self.inner)
+
+    def submit(self, requests: List[OpRequest]) -> List[OpResult]:
+        out: List[OpResult] = []
+        for req in requests:
+            try:
+                value, usage = execute_request(self.inner, req)
+            except Exception as e:  # noqa: BLE001 — executor inspects/raises
+                out.append(OpResult(error=e))
+                continue
+            out.append(OpResult(value=value, usage=usage))
+        return out
+
+
+def execute_request(backend: Any, req: OpRequest) -> Tuple[Any, Any]:
+    """Route one request to a per-document backend surface: the single
+    kind -> ``run_*`` table, shared by the adapter and any backend whose
+    ``submit`` is a plain per-request sweep (SimBackend)."""
+    op, kind = req.op, req.kind
+    if kind == "summarize":
+        # v1 made run_summarize optional; fall back to run_map
+        fn = getattr(backend, "run_summarize", None) or backend.run_map
+        return fn(op, req.doc)
+    if kind == "classify":
+        return backend.run_classify(op, req.doc, req.extra["classes"],
+                                    req.extra["truth_field"])
+    if kind == "equijoin":
+        fn = getattr(backend, "run_equijoin", None)
+        if fn is None:
+            # layering: engine.backend imports this module at load
+            # time, so the shared default is pulled in lazily here
+            from repro.engine.backend import default_equijoin as fn
+        return fn(op, req.doc)
+    if kind in GROUP_KINDS:
+        return getattr(backend, f"run_{kind}")(op, list(req.docs))
+    fn = getattr(backend, f"run_{kind}", None)
+    if fn is None:
+        raise TypeError(f"{type(backend).__name__} cannot execute "
+                        f"request kind {kind!r}")
+    return fn(op, req.doc)
 
 
 def check_backend(backend: Any) -> Any:
-    """Raise TypeError (listing what's missing) unless ``backend``
-    provides the full required surface. Returns the backend unchanged so
-    constructors can chain it."""
+    """Normalize ``backend`` onto the v2 surface.
+
+    A backend exposing ``submit`` + ``usage_cost`` is returned unchanged;
+    one exposing the v1 per-document surface is wrapped in a
+    :class:`LegacyBackendAdapter`; anything else raises TypeError listing
+    what's missing.
+    """
+    if all(callable(getattr(backend, m, None)) for m in BACKEND_V2_METHODS):
+        return backend
     missing = [m for m in REQUIRED_BACKEND_METHODS
                if not callable(getattr(backend, m, None))]
     if missing:
         raise TypeError(
             f"{type(backend).__name__} does not satisfy the Backend "
-            f"protocol: missing {', '.join(missing)}")
-    return backend
+            f"protocol: missing submit (v2) and legacy "
+            f"{', '.join(missing)}")
+    return LegacyBackendAdapter(backend)
 
 
 def batch_hint(backend: Any) -> int:
     """The substrate's preferred invocation batch size (>= 1)."""
     return max(1, int(getattr(backend, "preferred_batch_size", 1)))
+
+
+def backend_fingerprint(backend: Any) -> Tuple[Any, ...]:
+    """Stable identity of the backend's behaviour, keying the executor's
+    call cache. Backends declare it via ``fingerprint()``; the fallback
+    tags the instance with a one-time token, confining cache sharing to
+    that instance — a token (unlike ``id()``) is never reused after
+    garbage collection, so a long-lived shared cache cannot alias two
+    backends that happened to occupy the same address."""
+    fp = getattr(backend, "fingerprint", None)
+    if callable(fp):
+        return tuple(fp())
+    token = getattr(backend, "_repro_fp_token", None)
+    if token is None:
+        token = uuid.uuid4().hex
+        try:
+            backend._repro_fp_token = token
+        except AttributeError:  # __slots__ etc.: last-resort instance id
+            token = f"id:{id(backend)}"
+    return (type(backend).__qualname__, getattr(backend, "seed", None),
+            token)
+
+
+def is_deterministic(backend: Any) -> bool:
+    """Whether the backend *declared* its results a pure function of
+    (backend, op, doc) — the precondition for the executor's call cache.
+    Backends without the declaration are conservatively uncached."""
+    return bool(getattr(backend, "deterministic", False))

@@ -122,8 +122,13 @@ class ContinuousBatcher:
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Step until queue and slots are empty; drain and return the
+        requests completed since the last drain (a persistent batcher —
+        e.g. JaxBackend's per-model instance — can call this repeatedly
+        without re-collecting or accumulating earlier batches)."""
         ticks = 0
         while (self.queue or any(self.slots)) and ticks < max_ticks:
             self.step()
             ticks += 1
-        return self.finished
+        done, self.finished = self.finished, []
+        return done

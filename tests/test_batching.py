@@ -1,0 +1,361 @@
+"""Backend v2 batched dispatch: equivalence, adapter, and call cache.
+
+The contract under test: batching is an execution detail, never a
+semantics change. Any ``preferred_batch_size`` must yield bit-identical
+documents, accuracy, and measured cost; a v1 per-document backend keeps
+working through the ``LegacyBackendAdapter``; and the content-addressed
+call cache (the evaluation tier below the pipeline-hash cache) never
+changes results — including under transient-failure injection.
+"""
+
+import pytest
+
+from repro.core.search import MOARSearch
+from repro.engine.backend import SimBackend
+from repro.engine.executor import CallCache, Executor, ExecutionStats
+from repro.engine.operators import make_pipeline
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline import (REQUIRED_BACKEND_METHODS, LegacyBackendAdapter,
+                            register_operator, unregister_operator)
+
+CUAD = WORKLOADS["cuad"]()
+BLACKVAULT = WORKLOADS["blackvault"]()
+
+# multi-kind pipeline: extract -> split -> map -> reduce -> filter, so one
+# run exercises most request kinds with chunked per-doc batches
+MULTI = make_pipeline("multi", [
+    {"name": "compress", "type": "extract", "model": "gemma2-9b",
+     "prompt": "keep clause lines", "task_tags": CUAD.tags[:8]},
+    {"name": "chunk", "type": "split", "chunk_size": 300},
+    {"name": "find", "type": "map", "model": "llama3.2-1b",
+     "prompt": "extract clauses", "task_tags": CUAD.tags[:8],
+     "output_schema": {"clauses": "list"}},
+    {"name": "merge", "type": "reduce", "reduce_key": "_parent_id",
+     "restore_id": True, "aggregate_field": "clauses",
+     "model": "gemma2-9b", "prompt": "merge clause lists",
+     "output_schema": {"clauses": "list"}},
+    {"name": "keep_hits", "type": "filter", "model": "llama3.2-1b",
+     "prompt": "keep docs with clauses", "filter_tag": CUAD.tags[0],
+     "output_schema": {"_": "bool"}},
+])
+
+
+def _legacy_view(backend, extra=("run_summarize",)):
+    """Strip a backend down to the v1 per-document surface (no submit)."""
+    class _V:
+        pass
+
+    v = _V()
+    for m in REQUIRED_BACKEND_METHODS + tuple(extra):
+        setattr(v, m, getattr(backend, m))
+    return v
+
+
+def _run(backend, pipeline, docs, **kw):
+    ex = Executor(backend, seed=0, **kw)
+    out, stats = ex.run(pipeline, docs)
+    return out, stats, ex
+
+
+# -- batch-size equivalence ----------------------------------------------------
+
+
+@pytest.mark.parametrize("batch_size", [1, 3, 7, 64])
+def test_batch_size_equivalence(batch_size):
+    docs = CUAD.sample[:6]
+    base_out, base_stats, _ = _run(SimBackend(seed=0, domain="legal"),
+                                   MULTI, docs)
+    be = SimBackend(seed=0, domain="legal")
+    be.preferred_batch_size = batch_size
+    out, stats, ex = _run(be, MULTI, docs)
+    assert ex.batch_hint == batch_size
+    assert out == base_out
+    assert stats.cost == base_stats.cost
+    assert stats.llm_calls == base_stats.llm_calls
+    assert CUAD.score(out, docs) == CUAD.score(base_out, docs)
+
+
+def test_batch_size_equivalence_property():
+    """Hypothesis sweep: arbitrary batch sizes and seeds agree with
+    sequential dispatch (docs, accuracy, cost)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    docs = BLACKVAULT.sample[:5]
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 64), st.integers(0, 10_000))
+    def check(batch_size, seed):
+        seq = SimBackend(seed=seed, domain=BLACKVAULT.domain)
+        out1, s1, _ = _run(seq, BLACKVAULT.initial_pipeline, docs)
+        be = SimBackend(seed=seed, domain=BLACKVAULT.domain)
+        be.preferred_batch_size = batch_size
+        out2, s2, _ = _run(be, BLACKVAULT.initial_pipeline, docs)
+        assert out2 == out1 and s2.cost == s1.cost
+
+    check()
+
+
+def test_classify_summarize_resolve_equijoin_kinds_batch():
+    """Remaining request kinds agree between batched submit and the
+    legacy per-document adapter path."""
+    right = [{"rid": f"r{i}", "key": f"k{i}", "notes": f"note {i}"}
+             for i in range(4)]
+    docs = [{"id": f"d{i}", "text": f"document body {i} mentions k{i % 5}",
+             "key": f"k{i % 5}", "_keep": i % 2 == 0} for i in range(6)]
+    p = make_pipeline("kinds", [
+        {"name": "summ", "type": "map", "summarize": True,
+         "model": "gemma2-9b", "prompt": "summarize",
+         "output_schema": {"summary": "str"}},
+        {"name": "join", "type": "equijoin", "model": "llama3.2-1b",
+         "prompt": "join", "left_field": "key", "right_field": "key",
+         "right_docs": right},
+        {"name": "canon", "type": "resolve", "model": "llama3.2-1b",
+         "prompt": "canonicalize", "resolve_field": "right_notes"}])
+    be = SimBackend(seed=1, domain="generic")
+    be.preferred_batch_size = 3
+    out_b, stats_b, _ = _run(be, p, docs)
+    out_l, stats_l, ex = _run(_legacy_view(SimBackend(seed=1,
+                                                      domain="generic")),
+                              p, docs)
+    assert isinstance(ex.backend, LegacyBackendAdapter)
+    assert out_b == out_l
+    assert stats_b.cost == stats_l.cost
+    # classify routes through the batch too (blackvault pipeline)
+    bdocs = BLACKVAULT.sample[:5]
+    be2 = SimBackend(seed=0, domain=BLACKVAULT.domain)
+    be2.preferred_batch_size = 4
+    out1, s1, _ = _run(be2, BLACKVAULT.initial_pipeline, bdocs)
+    out2, s2, _ = _run(_legacy_view(SimBackend(seed=0,
+                                               domain=BLACKVAULT.domain)),
+                       BLACKVAULT.initial_pipeline, bdocs)
+    assert out1 == out2 and s1.cost == s2.cost
+
+
+# -- legacy adapter ------------------------------------------------------------
+
+
+def test_legacy_backend_custom_operator_end_to_end():
+    """A v1 per-document backend (no ``submit``) still runs a custom
+    registered operator end-to-end via the auto-wrapping adapter."""
+
+    @register_operator("head_words2", kind="aux", required_keys=("n_words",))
+    def exec_head_words(ex, op, docs, stats):
+        from repro.data.documents import main_text_key
+        return [{**d, main_text_key(d):
+                 " ".join(str(d.get(main_text_key(d), "")).split()
+                          [:op["n_words"]])} for d in docs]
+
+    try:
+        p = make_pipeline("t", [
+            {"name": "h", "type": "head_words2", "n_words": 4},
+            {"name": "find", "type": "map", "model": "llama3.2-1b",
+             "prompt": "extract", "task_tags": CUAD.tags[:4],
+             "output_schema": {"clauses": "list"}}])
+        legacy = _legacy_view(SimBackend(seed=0, domain="legal"))
+        out, stats, ex = _run(legacy, p, CUAD.sample[:3])
+        assert isinstance(ex.backend, LegacyBackendAdapter)
+        assert len(out) == 3 and stats.llm_calls == 3
+        native_out, native_stats, _ = _run(SimBackend(seed=0, domain="legal"),
+                                           p, CUAD.sample[:3])
+        assert out == native_out and stats.cost == native_stats.cost
+    finally:
+        unregister_operator("head_words2")
+
+
+def test_backend_without_any_surface_rejected():
+    class Nothing:
+        def usage_cost(self, model, usage):
+            return 0.0
+
+    with pytest.raises(TypeError, match="run_map"):
+        Executor(Nothing())
+
+
+# -- call cache ----------------------------------------------------------------
+
+
+def test_call_cache_replays_identical_stats():
+    docs = CUAD.sample[:5]
+    ex = Executor(SimBackend(seed=0, domain="legal"), seed=0)
+    out1, s1 = ex.run(MULTI, docs)
+    hits_before = ex.call_cache.hits
+    out2, s2 = ex.run(MULTI, docs)
+    assert ex.call_cache.hits > hits_before, "second run must hit the cache"
+    assert out2 == out1
+    assert (s2.cost, s2.llm_calls, s2.in_tokens, s2.out_tokens) == \
+        (s1.cost, s1.llm_calls, s1.in_tokens, s1.out_tokens)
+    assert s2.latency_s == pytest.approx(s1.latency_s)
+
+
+def test_call_cache_never_changes_results_under_failures():
+    """fail_prob > 0: request-level retries (and cache hits, which skip
+    the simulated API entirely) must leave results bit-identical."""
+    docs = CUAD.sample[:5]
+    clean_out, clean_stats, _ = _run(SimBackend(seed=0, domain="legal"),
+                                     MULTI, docs)
+    # live retries: every request eventually succeeds on a later attempt
+    out, stats, _ = _run(SimBackend(seed=0, domain="legal"), MULTI, docs,
+                         fail_prob=0.2, max_attempts=8)
+    assert out == clean_out and stats.cost == clean_stats.cost
+    assert stats.retries > 0, "failure injection must have triggered retries"
+    # pre-warmed cache: with every request answered from cache, even
+    # fail_prob=1.0 cannot perturb (or fail) the evaluation
+    shared = CallCache()
+    _run(SimBackend(seed=0, domain="legal"), MULTI, docs, call_cache=shared)
+    out_hot, stats_hot, ex = _run(SimBackend(seed=0, domain="legal"), MULTI,
+                                  docs, call_cache=shared, fail_prob=1.0)
+    assert out_hot == clean_out and stats_hot.cost == clean_stats.cost
+    assert ex.call_cache.misses == len(ex.call_cache.data)
+
+
+def test_call_cache_immune_to_in_place_mutation():
+    """A downstream operator mutating a merged field in place must not
+    poison the cache: identical runs stay identical."""
+
+    @register_operator("poke", kind="aux", required_keys=("field",))
+    def exec_poke(ex, op, docs, stats):
+        for d in docs:
+            d[op["field"]].append({"tag": "injected", "value": "x"})
+        return docs
+
+    try:
+        p = make_pipeline("t", [
+            {"name": "find", "type": "map", "model": "llama3.2-1b",
+             "prompt": "extract", "task_tags": CUAD.tags[:4],
+             "output_schema": {"clauses": "list"}},
+            {"name": "mut", "type": "poke", "field": "clauses"}])
+        ex = Executor(SimBackend(seed=0, domain="legal"), seed=0)
+        out1, _ = ex.run(p, CUAD.sample[:3])
+        out2, _ = ex.run(p, CUAD.sample[:3])
+        assert ex.call_cache.hits > 0
+        assert out1 == out2, "cache replay must not accumulate mutations"
+        assert all(sum(1 for c in d["clauses"] if c["tag"] == "injected") == 1
+                   for d in out2)
+    finally:
+        unregister_operator("poke")
+
+
+def test_nondeterministic_backend_opts_out_of_cache():
+    be = SimBackend(seed=0, domain="legal")
+    be.deterministic = False
+    _, _, ex = _run(be, CUAD.initial_pipeline, CUAD.sample[:3])
+    assert ex.call_cache.hits == 0 and len(ex.call_cache) == 0
+
+
+def test_native_v2_transient_errors_retried_and_normalized():
+    """A v2 backend may raise TransientBackendError from submit() or
+    return it per-request; both retry, and exhaustion surfaces as
+    TransientLLMError so optimizer error handlers keep working."""
+    from repro.engine.backend import Usage
+    from repro.engine.executor import TransientLLMError
+    from repro.pipeline import OpResult, TransientBackendError
+
+    p = make_pipeline("t", [
+        {"name": "m", "type": "map", "prompt": "q", "model": "llama3.2-1b",
+         "output_schema": {"xs": "list"}}])
+    docs = [{"id": "d0", "text": "body"}]
+
+    class RaisesTwice:
+        calls = 0
+
+        def usage_cost(self, model, usage):
+            return 0.0
+
+        def submit(self, requests):
+            RaisesTwice.calls += 1
+            if RaisesTwice.calls <= 2:
+                raise TransientBackendError("rate limit")
+            return [OpResult(value={"xs": []}, usage=Usage(calls=1))
+                    for _ in requests]
+
+    out, stats = Executor(RaisesTwice(), max_attempts=5).run(p, docs)
+    assert len(out) == 1 and RaisesTwice.calls == 3
+
+    class AlwaysErrors:
+        def usage_cost(self, model, usage):
+            return 0.0
+
+        def submit(self, requests):
+            return [OpResult(error=TransientBackendError("outage"))
+                    for _ in requests]
+
+    with pytest.raises(TransientLLMError):
+        Executor(AlwaysErrors(), max_attempts=3).run(p, docs)
+
+
+# -- stats satellites ----------------------------------------------------------
+
+
+def test_per_op_token_counts():
+    _, stats, _ = _run(SimBackend(seed=0, domain="legal"), MULTI,
+                       CUAD.sample[:4])
+    per_op_in = sum(o.in_tokens for o in stats.per_op.values())
+    per_op_out = sum(o.out_tokens for o in stats.per_op.values())
+    assert per_op_in == stats.in_tokens > 0
+    assert per_op_out == stats.out_tokens > 0
+    assert stats.per_op["find"].in_tokens > 0
+
+
+def test_execution_stats_merge_matches_full_run():
+    """Suffix-cache accounting: prefix stats + suffix stats == full run."""
+    docs = BLACKVAULT.sample[:6]
+    p = BLACKVAULT.initial_pipeline
+    full_out, full, _ = _run(SimBackend(seed=0, domain=BLACKVAULT.domain),
+                             p, docs)
+    prefix = make_pipeline("prefix", p["operators"][:1])
+    suffix = make_pipeline("suffix", p["operators"][1:])
+    mid, s_prefix, _ = _run(SimBackend(seed=0, domain=BLACKVAULT.domain),
+                            prefix, docs)
+    out, s_suffix, _ = _run(SimBackend(seed=0, domain=BLACKVAULT.domain),
+                            suffix, mid)
+    assert out == full_out
+    merged = ExecutionStats().merge(s_prefix).merge(s_suffix)
+    assert merged.cost == pytest.approx(full.cost)
+    assert merged.llm_calls == full.llm_calls
+    assert merged.in_tokens == full.in_tokens
+    assert merged.latency_s == pytest.approx(full.latency_s)
+    assert set(merged.per_op) == set(full.per_op)
+    for name, entry in full.per_op.items():
+        assert merged.per_op[name].cost == pytest.approx(entry.cost)
+        assert merged.per_op[name].calls == entry.calls
+
+
+# -- search integration --------------------------------------------------------
+
+
+def test_moar_suffix_cache_nonzero_and_equivalent():
+    """The default-budget search reports a nonzero call-tier hit rate,
+    and caching changes no reported accuracy/cost number."""
+    w = WORKLOADS["medec"]()
+    res = MOARSearch(w, SimBackend(seed=0, domain=w.domain), budget=40,
+                     seed=0).optimize()
+    assert res.cache_stats["call_cache_hits"] > 0
+    assert res.cache_stats["call_cache_hit_rate"] > 0.0
+    be_off = SimBackend(seed=0, domain=w.domain)
+    be_off.deterministic = False  # disables the call-cache tier
+    res_off = MOARSearch(w, be_off, budget=40, seed=0).optimize()
+    assert res_off.cache_stats["call_cache_hits"] == 0
+    assert [(p.acc, p.cost) for p in res.evaluated] == \
+        [(p.acc, p.cost) for p in res_off.evaluated]
+
+
+# -- JaxBackend through the continuous batcher ---------------------------------
+
+
+def test_jax_backend_submit_uses_scheduler():
+    from repro.engine.backend import JaxBackend
+    w = WORKLOADS["medec"]()
+    be = JaxBackend(seed=0, max_new_tokens=2)
+    ex = Executor(be)
+    out, stats = ex.run(w.initial_pipeline, w.sample[:3])
+    assert len(out) == 3
+    assert stats.llm_calls == 3 and stats.cost > 0.0
+    assert be._batchers, "decoder models must route through the batcher"
+    # legacy per-document adapter view: same usage accounting
+    out_l, stats_l, ex_l = _run(
+        _legacy_view(JaxBackend(seed=0, max_new_tokens=2), extra=()),
+        w.initial_pipeline, w.sample[:3])
+    assert isinstance(ex_l.backend, LegacyBackendAdapter)
+    assert stats_l.llm_calls == stats.llm_calls
+    assert stats_l.cost == stats.cost
