@@ -1,0 +1,126 @@
+"""Deterministic parallel search benchmark: workers=N vs workers=1.
+
+The round engine plans identical rounds at any worker count — the bench
+asserts bit-identical frontiers and budget accounting — so the only
+thing ``workers`` buys is wall-clock: the round's candidate evaluations
+advance stage-aligned through one dispatch session, their LLM requests
+merge into shared ``Backend.submit`` chunks, and a thread-safe backend
+keeps several chunks in flight at once.
+
+The backend is the deterministic SimBackend wrapped with a per-``submit``
+round-trip latency, modeling what dominates real optimizer runs: a
+remote batched LLM endpoint where every dispatch pays a network + queue
+round trip regardless of batch size. Sequential search pays one round
+trip per pipeline per stage; the dispatch session pays one per merged
+stage wave.
+
+  PYTHONPATH=src python benchmarks/search_parallel_bench.py
+  PYTHONPATH=src python benchmarks/search_parallel_bench.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import replace as _dc_replace
+
+from repro.core.search import MOARSearch
+from repro.engine.backend import SimBackend
+from repro.engine.workloads import WORKLOADS
+
+
+class LatencySimBackend(SimBackend):
+    """SimBackend + a fixed per-``submit`` round-trip latency.
+
+    Results are bit-identical to the plain SimBackend (the sleep touches
+    no state), so determinism assertions hold across worker counts;
+    ``preferred_batch_size`` is raised to a serving-endpoint batch so a
+    merged round rides few round trips.
+    """
+
+    preferred_batch_size = 64
+
+    def __init__(self, *args, latency_s: float = 0.05, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.latency_s = latency_s
+
+    def submit(self, requests):
+        time.sleep(self.latency_s)
+        return super().submit(requests)
+
+
+def run_one(workload_name: str, workers: int, *, budget: int, seed: int,
+            latency_s: float, sample_docs: int):
+    w = WORKLOADS[workload_name]()
+    if sample_docs:
+        # Workload.sample is docs[:N_SAMPLE]; trimming docs trims D_o
+        # (the held-out split is unused by search.run)
+        w = _dc_replace(w, docs=w.docs[:sample_docs])
+    be = LatencySimBackend(seed=seed, domain=w.domain, latency_s=latency_s)
+    search = MOARSearch(w, be, budget=budget, seed=seed, workers=workers)
+    t0 = time.time()
+    res = search.run()
+    dt = time.time() - t0
+    return res, dt
+
+
+def bench(workload_name: str, *, budget: int, seed: int, latency_s: float,
+          sample_docs: int, workers_list=(1, 4), min_speedup: float = 0.0):
+    print(f"== {workload_name}: budget={budget} seed={seed} "
+          f"latency={1000 * latency_s:.0f}ms/submit "
+          f"sample={sample_docs or 'full'} ==")
+    runs = {}
+    for workers in workers_list:
+        res, dt = run_one(workload_name, workers, budget=budget, seed=seed,
+                          latency_s=latency_s, sample_docs=sample_docs)
+        runs[workers] = (res, dt)
+        ps = res.parallel_stats
+        print(f"  workers={workers}: {dt:6.2f}s  "
+              f"{ps['submit_calls']:4d} submits  "
+              f"{ps['merged_stages']:3d} merged stages  "
+              f"budget {res.budget_used}  best acc {res.best().acc:.3f}")
+    base_res, base_dt = runs[workers_list[0]]
+    base_fp = [(n.acc, n.cost, n.last_action) for n in base_res.evaluated]
+    for workers in workers_list[1:]:
+        res, dt = runs[workers]
+        fp = [(n.acc, n.cost, n.last_action) for n in res.evaluated]
+        assert fp == base_fp, \
+            f"workers={workers} diverged from workers={workers_list[0]}"
+        assert res.budget_used == base_res.budget_used
+        assert [(n.acc, n.cost) for n in res.frontier] == \
+            [(n.acc, n.cost) for n in base_res.frontier]
+        speedup = base_dt / max(dt, 1e-9)
+        print(f"  workers={workers}: {speedup:.2f}x wall-clock speedup, "
+              f"results bit-identical")
+        if min_speedup:
+            assert speedup >= min_speedup, \
+                f"expected >= {min_speedup}x, got {speedup:.2f}x"
+    return runs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run for CI: asserts determinism, "
+                         "reports (but does not gate on) speedup")
+    ap.add_argument("--budget", type=int, default=30)
+    ap.add_argument("--latency-ms", type=float, default=60.0)
+    ap.add_argument("--sample-docs", type=int, default=12,
+                    help="trim D_o so round-trip latency (not the pure-"
+                         "python simulator) dominates, as it does with "
+                         "a real endpoint; 0 = full sample")
+    ap.add_argument("--min-speedup", type=float, default=2.0)
+    args = ap.parse_args()
+    if args.smoke:
+        bench("cuad", budget=12, seed=0, latency_s=0.02, sample_docs=8,
+              workers_list=(1, 4), min_speedup=0.0)
+        return
+    for name in ("cuad", "medec"):
+        bench(name, budget=args.budget, seed=0,
+              latency_s=args.latency_ms / 1000.0,
+              sample_docs=args.sample_docs,
+              workers_list=(1, 4), min_speedup=args.min_speedup)
+
+
+if __name__ == "__main__":
+    main()

@@ -97,29 +97,33 @@ class Abacus(BaseOptimizer):
         if base is None:
             return
 
-        # physical phase: per-operator independent implementation scoring
+        # physical phase: per-operator independent implementation scoring.
+        # Candidates are independent by construction (the optimal-
+        # substructure assumption), so the whole sweep is built up front
+        # and evaluated as ONE batched round through the shared dispatch
+        # session — same points and budget accounting as the sequential
+        # loop, the LLM calls just ride merged Backend.submit batches.
         n_ops = len(base_pipeline["operators"])
         per_op: Dict[int, List[_Impl]] = {}
         impl_budget = max(1, int(self.budget * 0.6))
+        built: List[Tuple[int, _Impl, dict]] = []
         for idx in range(n_ops):
-            impls = self._op_impls(base_pipeline, idx)
-            # adaptive sampling: prioritize cheap->strong spread of models
-            kept = []
-            for impl in impls:
-                if self.t >= impl_budget:
-                    break
+            for impl in self._op_impls(base_pipeline, idx):
                 try:
                     cand = impl.apply_fn(base_pipeline)
                     validate_pipeline(cand)
                 except Exception:  # noqa: BLE001
                     continue
-                pt = self.evaluate(cand, f"op{idx}:{impl.desc}")
-                if pt is None:
-                    continue
-                impl.acc, impl.cost = pt.acc, pt.cost
-                kept.append(impl)
-            if kept:
-                per_op[idx] = kept
+                built.append((idx, impl, cand))
+        points = self.evaluate_batch(
+            [cand for _, _, cand in built],
+            [f"op{idx}:{impl.desc}" for idx, impl, _ in built],
+            budget_cap=impl_budget)
+        for (idx, impl, _), pt in zip(built, points):
+            if pt is None:
+                continue
+            impl.acc, impl.cost = pt.acc, pt.cost
+            per_op.setdefault(idx, []).append(impl)
 
         # compose phase: per-op Pareto implementations -> full plans
         class _P:  # tiny holder for pareto_set
@@ -135,10 +139,11 @@ class Abacus(BaseOptimizer):
                             sorted(front, key=lambda p: -p.acc)][:3]
         if not choices:
             return
-        # compose plans: rank r picks the r-th best impl at every operator
+        # compose plans: rank r picks the r-th best impl at every
+        # operator; the ranks are independent, so they evaluate as one
+        # batched round too
+        plans: List[Tuple[dict, str]] = []
         for rank in range(3):
-            if self.t >= self.budget:
-                break
             plan = clone_pipeline(base_pipeline)
             for idx, impls in choices.items():
                 impl = impls[min(rank, len(impls) - 1)]
@@ -150,7 +155,9 @@ class Abacus(BaseOptimizer):
                 validate_pipeline(plan)
             except Exception:  # noqa: BLE001
                 continue
-            self.evaluate(plan, f"composed_rank{rank}")
+            plans.append((plan, f"composed_rank{rank}"))
+        self.evaluate_batch([p for p, _ in plans], [n for _, n in plans],
+                            budget_cap=self.budget)
         # spend any remaining budget refining around the best composition
         guard = 0
         while self.t < self.budget and guard < self.budget * 4:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import replace as _dc_replace
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.engine.executor import (Executor, TransientLLMError,
                                    evaluation_cache_stats)
@@ -30,11 +30,14 @@ class BaseOptimizer:
     name = "base"
 
     def __init__(self, workload: Workload, backend, *, budget: int = 40,
-                 seed: int = 0):
+                 seed: int = 0, workers: int = 1):
         self.workload = workload
         self.backend = backend
         self.budget = budget
         self.seed = seed
+        # execution parallelism for evaluate_batch rounds (never changes
+        # results — the dispatch session is bit-identical to sequential)
+        self.workers = max(1, workers)
         # the shared executor's call cache is the second evaluation-cache
         # tier under the pipeline-hash cache below: candidate plans that
         # share a prefix with anything already measured only re-execute
@@ -72,6 +75,95 @@ class BaseOptimizer:
         pt = PlanPoint(pipeline, acc, stats.cost, note)
         self.evaluated.append(pt)
         return pt
+
+    def evaluate_batch(self, pipelines: List[PipelineConfig],
+                       notes: List[str], budget_cap: Optional[int] = None
+                       ) -> List[Optional[PlanPoint]]:
+        """Batched counterpart of calling :meth:`evaluate` on each
+        pipeline in order — same points, same budget accounting, same
+        cache state — except the non-cached candidates execute through
+        ONE cross-pipeline dispatch session (``Executor.run_session``),
+        merging their LLM requests into shared ``Backend.submit``
+        batches. ``budget_cap`` mirrors a loop that breaks at a local
+        cap before each evaluation (ABACUS's per-phase sub-budgets):
+        everything past the cap resolves to None, hits included.
+        Results are bit-identical for any ``self.workers``.
+
+        NOTE: ``MOARSearch._evaluate_many`` implements the same
+        plan/dedupe/fallback/commit shape under *different* budget
+        semantics (errors free, no cap-break) — a fix to the session
+        replay logic here likely applies there too."""
+        cap = self.budget if budget_cap is None else budget_cap
+        hashes = [pipeline_hash(p) for p in pipelines]
+        # plan: replay sequential accounting to decide what executes
+        # (duplicate hashes within the batch: only the first runs — the
+        # second would have been a free cache hit sequentially)
+        t_sim = self.t
+        seen = set(self.cache)
+        plan: List[str] = []
+        jobs: List[Tuple[PipelineConfig, Any]] = []
+        job_of: List[Optional[int]] = []
+        for p, h in zip(pipelines, hashes):
+            if budget_cap is not None and t_sim >= cap:
+                plan.append("skip")
+                job_of.append(None)
+                continue
+            if h in seen:
+                plan.append("hit")
+                job_of.append(None)
+                continue
+            if t_sim >= self.budget:
+                plan.append("skip")
+                job_of.append(None)
+                continue
+            plan.append("run")
+            job_of.append(len(jobs))
+            jobs.append((p, self.workload.sample))
+            seen.add(h)
+            t_sim += 1
+        session = self.executor.run_session(jobs, workers=self.workers) \
+            if jobs else []
+        # commit in plan order. The budget guards re-check what the plan
+        # already replayed: they only bite in the corner where a
+        # duplicate's leader failed and the sequential fallback consumed
+        # budget the plan didn't account for — commit must then skip
+        # exactly what the sequential loop would have skipped.
+        out: List[Optional[PlanPoint]] = []
+        for p, h, what, ji, note in zip(pipelines, hashes, plan, job_of,
+                                        notes):
+            if what == "skip" or \
+                    (budget_cap is not None and self.t >= cap):
+                out.append(None)
+                continue
+            if h in self.cache:  # plan-time hit, or a duplicate committed
+                self.cache_hits += 1  # earlier in this very batch
+                acc, cost = self.cache[h]
+                pt = PlanPoint(p, acc, cost, note)
+                self.evaluated.append(pt)
+                out.append(pt)
+                continue
+            if what == "hit":
+                # planned as a hit of an entry that a preceding duplicate
+                # was expected to commit but didn't (it failed): evaluate
+                # sequentially, exactly as the replayed loop would have
+                # (evaluate() enforces self.budget itself)
+                out.append(self.evaluate(p, note))
+                continue
+            if self.t >= self.budget:
+                out.append(None)
+                continue
+            res = session[ji]
+            if res.error is not None:
+                self.t += 1
+                out.append(None)
+                continue
+            acc = self.workload.score(res.docs, self.workload.sample)
+            self.cache[h] = (acc, res.stats.cost)
+            self.t += 1
+            pt = PlanPoint(p, acc, res.stats.cost, note)
+            self.evaluated.append(pt)
+            out.append(pt)
+        return out
 
     def optimize(self, pipeline: Optional[PipelineLike] = None,
                  workload: Optional[Workload] = None,

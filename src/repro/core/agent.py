@@ -67,6 +67,19 @@ class AgentContext:
         self.docs_read = 0
         self._doc_iter = 0
 
+    def with_attempt(self, attempt: int) -> "AgentContext":
+        """Retry-specific view of the context: same tools, documents, and
+        statistics, but an attempt-salted seed — a failed instantiation
+        retries with fresh seeded choices instead of deterministically
+        re-proposing the identical (invalid) parameters. Attempt 0 is the
+        context itself, so single-shot behaviour is unchanged."""
+        if attempt == 0:
+            return self
+        return AgentContext(self.sample_docs, self.workload_tags,
+                            seed=self.seed + 7919 * attempt,
+                            model_stats=self.model_stats,
+                            objective=self.objective)
+
     # -- tools ---------------------------------------------------------------
 
     def read_next_doc(self) -> Optional[Dict]:
@@ -221,11 +234,16 @@ class AgentPolicy:
                     target: Target, ctx: AgentContext
                     ) -> List[Dict[str, Any]]:
         """Stage 2: loads the full schema/example and produces validated
-        parameter sets (retrying on validation failure)."""
+        parameter sets — every candidate pipeline of a rewrite is
+        instantiated up front, so the search can evaluate the whole set
+        in one batched round. Validation failures retry under an
+        attempt-salted context (:meth:`AgentContext.with_attempt`), so a
+        retry genuinely explores different parameters."""
         last_err = None
         for attempt in range(self.max_retries):
             try:
-                candidates = directive.instantiate(ctx, pipeline, target)
+                candidates = directive.instantiate(ctx.with_attempt(attempt),
+                                                   pipeline, target)
             except Exception as e:  # noqa: BLE001
                 last_err = e
                 continue

@@ -11,17 +11,22 @@ T = TypeVar("T")
 
 
 def dominates(a, b) -> bool:
-    """a dominates b: at least as good on both axes, strictly better acc
-    at no higher cost (Def. 2.1 operationalized)."""
-    return a.acc > b.acc and a.cost <= b.cost
+    """a dominates b (Def. 2.1): at least as good on both axes (acc >=,
+    cost <=) and strictly better on at least one. Tie-domination matters:
+    a point with *equal* accuracy at strictly lower cost dominates, so
+    the frontier does not retain strictly-more-expensive duplicates of
+    the same accuracy."""
+    return (a.acc >= b.acc and a.cost <= b.cost
+            and (a.acc > b.acc or a.cost < b.cost))
 
 
 def pareto_set(points: Sequence[T]) -> List[T]:
-    """{P : no P' with a(P') > a(P) and c(P') <= c(P)} (Def. 2.1)."""
+    """{P : no P' dominating P} (Def. 2.1, via :func:`dominates`).
+    Exact (cost, acc) duplicates do not dominate each other, so both
+    survive — frontier reports dedup them for display."""
     out = []
     for p in points:
-        if not any(q is not p and q.acc > p.acc and q.cost <= p.cost
-                   for q in points):
+        if not any(q is not p and dominates(q, p) for q in points):
             out.append(p)
     return out
 

@@ -12,13 +12,27 @@ Error handling (§4.3.3): instantiation failures retry inside the policy
 and then discard; transient execution failures discard without retry; both
 decrement the selected node's visit counts so failures don't inflate them.
 Identical pipelines reuse cached measurements.
+
+Parallelism: the search is a deterministic plan/execute/commit round
+engine. Each round (a) selects up to ``round_width`` leaves under
+virtual-loss UCT — every selection bumps visit counts along its path
+before the next selection runs, so concurrent selections diverge instead
+of piling onto one node; (b) instantiates every candidate pipeline up
+front, seeding the agent from a monotonic *attempt counter* (never the
+stalling budget counter); (c) evaluates the whole candidate set through
+one cross-pipeline dispatch session (``Executor.run_session``), which
+merges sibling candidates' LLM requests into shared ``Backend.submit``
+batches; and (d) commits results into the tree in canonical plan order.
+The planned round is a function of search state only and the session is
+bit-identical to sequential evaluation, so ``workers=N`` yields
+bit-identical frontiers, ``dstats``, and budget accounting to
+``workers=1`` — workers is pure execution parallelism.
 """
 
 from __future__ import annotations
 
 import math
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -75,6 +89,11 @@ def widening_cap(visits: int) -> int:
     return max(2, int(1 + math.sqrt(visits)))
 
 
+# leaves selected per round (virtual-loss UCT fan-out). An algorithm
+# constant, deliberately NOT derived from ``workers`` — see MOARSearch.
+DEFAULT_ROUND_WIDTH = 4
+
+
 @dataclass
 class SearchResult:
     root: Node
@@ -85,9 +104,37 @@ class SearchResult:
     wall_s: float
     history: List[Dict[str, Any]] = field(default_factory=list)
     cache_stats: Dict[str, Any] = field(default_factory=dict)
+    # round-engine accounting: rounds run, configured width/workers, and
+    # the executor's merged-dispatch counters
+    parallel_stats: Dict[str, Any] = field(default_factory=dict)
 
     def best(self) -> Node:
         return max(self.evaluated, key=lambda n: n.acc)
+
+
+@dataclass
+class _PlannedCandidate:
+    """One candidate pipeline of a planned rewrite, fixed at plan time."""
+
+    pipeline: PipelineConfig
+    hash: str
+    free: bool  # tier-1 hit at plan time: costs no budget to commit
+
+
+@dataclass
+class _PlannedRewrite:
+    """One (node, directive) rewrite planned for a round: all candidate
+    pipelines are instantiated up front; evaluation happens in the
+    round's shared dispatch session; commit runs in plan order."""
+
+    node: Node
+    directive: Directive
+    candidates: List[_PlannedCandidate]
+    attempt: int
+
+    @property
+    def budget_need(self) -> int:
+        return sum(1 for c in self.candidates if not c.free)
 
 
 class MOARSearch:
@@ -103,6 +150,7 @@ class MOARSearch:
         models: Optional[List[str]] = None,
         max_models: int = 12,  # C_m (paper footnote 2)
         workers: int = 1,
+        round_width: Optional[int] = None,
         fail_prob: float = 0.0,
         reward: str = "contribution",   # | "hypervolume" (ablation, §4.2)
         progressive_widening: bool = True,  # ablation: uncapped branching
@@ -112,7 +160,15 @@ class MOARSearch:
         self.budget = budget
         self.seed = seed
         self.models = (models or model_names())[:max_models]
-        self.workers = workers
+        # round_width is an *algorithm* knob: how many leaves each round
+        # selects under virtual-loss UCT. workers is an *execution* knob:
+        # how many of the round's candidate evaluations run concurrently
+        # in the dispatch session. Keeping them independent is what makes
+        # workers=N bit-identical to workers=1 — the planned rounds are a
+        # function of search state only. (workers > round-candidate count
+        # simply leaves the extra slots idle.)
+        self.workers = max(1, workers)
+        self.round_width = round_width if round_width else DEFAULT_ROUND_WIDTH
         # two-tier evaluation cache (paper §4.3.3 measurement reuse):
         # tier 1 — self.cache, keyed by pipeline hash (identical candidate
         # = free); tier 2 — the executor's content-addressed call cache
@@ -128,6 +184,12 @@ class MOARSearch:
         self.cache_hits = 0
         self.evaluated: List[Node] = []
         self.t = 0
+        # monotonic attempt counter: seeds every rewrite attempt. The
+        # budget counter t stalls on cache hits, so seeding from it made
+        # consecutive guard-loop iterations re-propose the identical
+        # rewrite; attempts is bumped per planned rewrite, hit or miss.
+        self.attempts = 0
+        self.rounds = 0
         self.errors = 0
         self.reward = reward
         self.progressive_widening = progressive_widening
@@ -146,12 +208,57 @@ class MOARSearch:
         self.cache[h] = (acc, stats.cost)
         return acc, stats.cost, False
 
-    def _add_node(self, pipeline, parent, action, kind) -> Optional[Node]:
-        try:
-            acc, cost, cached = self._evaluate(pipeline)
-        except TransientLLMError:
-            self.errors += 1
-            return None
+    def _evaluate_many(self, pipelines: List[PipelineConfig]
+                       ) -> List[Tuple[Optional[float], Optional[float],
+                                       bool, Optional[Exception]]]:
+        """Batched counterpart of :meth:`_evaluate`: one entry per input,
+        ``(acc, cost, cached, error)``. Pipeline-hash (tier-1) hits are
+        resolved at plan time; the rest evaluate through ONE dispatch
+        session, whose results commit into the tier-1 cache in canonical
+        order — exactly the order sequential ``_evaluate`` calls would
+        have used, so workers only changes wall-clock. Duplicate hashes
+        within the batch execute once; the second commits as a tier-1
+        hit, same as it would have sequentially (if the first errored,
+        the second evaluates on its own, also matching the replay)."""
+        hashes = [pipeline_hash(p) for p in pipelines]
+        job_of: List[Optional[int]] = []
+        jobs: List[Tuple[PipelineConfig, Any]] = []
+        planned = set(self.cache)
+        for p, h in zip(pipelines, hashes):
+            if h in planned:
+                job_of.append(None)
+            else:
+                job_of.append(len(jobs))
+                jobs.append((p, self.workload.sample))
+                planned.add(h)
+        session = self.executor.run_session(jobs, workers=self.workers) \
+            if jobs else []
+        out = []
+        for p, h, ji in zip(pipelines, hashes, job_of):
+            if h in self.cache:  # plan-time hit, or committed earlier here
+                self.cache_hits += 1
+                acc, cost = self.cache[h]
+                out.append((acc, cost, True, None))
+                continue
+            if ji is None:
+                # duplicate whose leader errored: evaluate sequentially,
+                # exactly as the replayed _evaluate chain would
+                try:
+                    out.append(self._evaluate(p) + (None,))
+                except TransientLLMError as e:
+                    out.append((None, None, False, e))
+                continue
+            res = session[ji]
+            if res.error is not None:
+                out.append((None, None, False, res.error))
+                continue
+            acc = self.workload.score(res.docs, self.workload.sample)
+            self.cache[h] = (acc, res.stats.cost)
+            out.append((acc, res.stats.cost, False, None))
+        return out
+
+    def _commit_node(self, pipeline, parent, action, kind, acc, cost,
+                     cached: bool) -> Node:
         node = Node(pipeline=pipeline, acc=acc, cost=cost, parent=parent,
                     last_action=action, last_kind=kind,
                     depth=(parent.depth + 1 if parent else 0),
@@ -162,6 +269,15 @@ class MOARSearch:
             self.t += 1
         self.evaluated.append(node)
         return node
+
+    def _add_node(self, pipeline, parent, action, kind) -> Optional[Node]:
+        try:
+            acc, cost, cached = self._evaluate(pipeline)
+        except TransientLLMError:
+            self.errors += 1
+            return None
+        return self._commit_node(pipeline, parent, action, kind, acc, cost,
+                                 cached)
 
     def cache_stats(self) -> Dict[str, Any]:
         """Hit accounting for both evaluation-cache tiers."""
@@ -179,7 +295,11 @@ class MOARSearch:
             if root is not None:
                 break
         assert root is not None, "initial pipeline failed to evaluate"
-        # model variants of P0 as children
+        # model variants of P0 as children: plan the whole sweep up front
+        # (clamped to the remaining budget BEFORE the first evaluation),
+        # evaluate it as one batched session, commit in model order
+        variants: List[Tuple[str, PipelineConfig]] = []
+        budget_left = self.budget - self.t
         for m in self.models:
             variant = clone_pipeline(p0)
             changed = False
@@ -189,20 +309,37 @@ class MOARSearch:
                     changed = True
             if not changed:
                 continue
-            node = self._add_node(variant, root, f"model_sub({m})", "model")
-            if node is not None:
-                self.model_stats.acc[m] = node.acc
-                self.model_stats.cost[m] = node.cost
-            if self.t >= self.budget:
-                break
-        # frontier members spawn one accuracy- and one cost-targeted rewrite
+            if pipeline_hash(variant) not in self.cache:
+                if budget_left <= 0:
+                    break
+                budget_left -= 1
+            variants.append((m, variant))
+        results = self._evaluate_many([v for _, v in variants])
+        for (m, variant), (acc, cost, cached, err) in zip(variants, results):
+            if err is not None:
+                self.errors += 1
+                continue
+            node = self._commit_node(variant, root, f"model_sub({m})",
+                                     "model", acc, cost, cached)
+            self.model_stats.acc[m] = node.acc
+            self.model_stats.cost[m] = node.cost
+        # frontier members spawn one accuracy- and one cost-targeted
+        # rewrite — planned as one round, evaluated in one session
         frontier = pareto.pareto_set([root] + root.children)
+        planned: List[_PlannedRewrite] = []
+        budget_left = self.budget - self.t
         for node in list(frontier):
             for objective in ("improve accuracy",
                               "reduce cost while preserving accuracy"):
-                if self.t >= self.budget:
+                if budget_left <= 0:
                     break
-                self._rewrite_and_evaluate(node, objective_override=objective)
+                pr = self._plan_rewrite(node, budget_left,
+                                        objective_override=objective)
+                if pr is None:
+                    continue
+                planned.append(pr)
+                budget_left -= pr.budget_need
+        self._execute_and_commit(planned)
         # disable non-frontier model variants from future selection
         for child in root.children:
             if child not in frontier:
@@ -291,12 +428,22 @@ class MOARSearch:
             return "reduce cost while preserving accuracy"
         return "improve accuracy"
 
-    def _rewrite_and_evaluate(self, node: Node,
-                              objective_override: Optional[str] = None
-                              ) -> Optional[Node]:
+    def _plan_rewrite(self, node: Node, budget_left: int,
+                      objective_override: Optional[str] = None
+                      ) -> Optional[_PlannedRewrite]:
+        """Stage (b) of a round: choose a directive for ``node`` and
+        instantiate ALL its candidate pipelines up front. The agent seed
+        derives from the monotonic attempt counter — a cache hit leaves
+        the budget counter t unchanged, so seeding from t re-proposed the
+        identical rewrite forever. Candidates are clamped to
+        ``budget_left`` BEFORE the first evaluation (tier-1 hits are
+        free and don't count). Returns None (and rolls back the
+        selection's visit bump) when nothing is plannable."""
+        attempt = self.attempts
+        self.attempts += 1
         objective = objective_override or self._objective_for(node)
         ctx = AgentContext(self.workload.sample, self.workload.tags,
-                           seed=self.seed + 31 * self.t,
+                           seed=self.seed + 31 * attempt,
                            model_stats=self.model_stats,
                            objective=objective)
         allowed = self._prune(node, applicable(node.pipeline))
@@ -319,33 +466,63 @@ class MOARSearch:
         if not directive.param_sensitive:
             param_sets = param_sets[:1]
 
-        best: Optional[Node] = None
-        candidates: List[Node] = []
+        candidates: List[_PlannedCandidate] = []
+        need = 0
         for params in param_sets:
-            if self.t >= self.budget and candidates:
-                break
             try:
                 new_pipeline = directive.apply(node.pipeline, target, params)
                 validate_pipeline(new_pipeline)
-            except Exception:  # noqa: BLE001 — bad rewrite, retry next params
+            except Exception:  # noqa: BLE001 — bad rewrite, try next params
                 self.errors += 1
                 continue
-            child = self._add_node(new_pipeline, node,
-                                   f"{directive.name}", directive.kind)
-            if child is not None:
-                candidates.append(child)
+            h = pipeline_hash(new_pipeline)
+            free = h in self.cache
+            if not free:
+                if need >= budget_left:
+                    break
+                need += 1
+            candidates.append(_PlannedCandidate(new_pipeline, h, free))
         if not candidates:
             self._unbump(node)
             return None
-        best = max(candidates, key=lambda n: n.acc)
-        # non-best candidates stay evaluated (count toward B, contribute to
-        # the frontier) but are not extended further
-        for c in candidates:
-            if c is not best:
-                c.disabled = True
-        self.dstats.update(directive.name, best.acc - node.acc,
-                           best.cost - node.cost)
-        return best
+        return _PlannedRewrite(node=node, directive=directive,
+                               candidates=candidates, attempt=attempt)
+
+    def _execute_and_commit(self, planned: List[_PlannedRewrite]) -> None:
+        """Stages (c)+(d) of a round: evaluate every planned candidate
+        through one cross-pipeline dispatch session, then commit results
+        into the tree in canonical plan order — node creation, budget
+        accounting, best-candidate selection, and directive statistics
+        all happen exactly as a sequential walk of the plan would."""
+        if not planned:
+            return
+        flat = [c for pr in planned for c in pr.candidates]
+        results = self._evaluate_many([c.pipeline for c in flat])
+        i = 0
+        for pr in planned:
+            new_nodes: List[Node] = []
+            for cand in pr.candidates:
+                acc, cost, cached, err = results[i]
+                i += 1
+                if err is not None:
+                    self.errors += 1
+                    continue
+                child = self._commit_node(cand.pipeline, pr.node,
+                                          f"{pr.directive.name}",
+                                          pr.directive.kind, acc, cost,
+                                          cached)
+                new_nodes.append(child)
+            if not new_nodes:
+                self._unbump(pr.node)
+                continue
+            best = max(new_nodes, key=lambda n: n.acc)
+            # non-best candidates stay evaluated (count toward B,
+            # contribute to the frontier) but are not extended further
+            for c in new_nodes:
+                if c is not best:
+                    c.disabled = True
+            self.dstats.update(pr.directive.name, best.acc - pr.node.acc,
+                               best.cost - pr.node.cost)
 
     # -- main loop (Algorithm 1) ---------------------------------------------------------
 
@@ -356,18 +533,30 @@ class MOARSearch:
         guard = 0
         while self.t < self.budget and guard < self.budget * 6:
             guard += 1
-            if self.workers > 1:
-                selected = []
-                for _ in range(min(self.workers, self.budget - self.t)):
-                    selected.append(self._select(root))
-                with ThreadPoolExecutor(max_workers=self.workers) as pool:
-                    list(pool.map(self._rewrite_and_evaluate, selected))
-            else:
+            # plan: select up to round_width leaves under virtual-loss
+            # UCT (_select bumps visits along the path, so the next
+            # selection sees the loss and diverges) and instantiate every
+            # candidate, clamped to the remaining budget
+            planned: List[_PlannedRewrite] = []
+            budget_left = self.budget - self.t
+            for _ in range(self.round_width):
+                if budget_left <= 0:
+                    break
                 node = self._select(root)
-                self._rewrite_and_evaluate(node)
+                pr = self._plan_rewrite(node, budget_left)
+                if pr is None:
+                    continue
+                planned.append(pr)
+                budget_left -= pr.budget_need
+            # execute + commit: one dispatch session, canonical order
+            self._execute_and_commit(planned)
+            if planned:
+                self.rounds += 1
             front = pareto.pareto_set(self.evaluated)
             history.append({
                 "t": self.t,
+                "round": self.rounds,
+                "planned": sum(len(pr.candidates) for pr in planned),
                 "frontier_size": len(front),
                 "best_acc": max(n.acc for n in self.evaluated),
             })
@@ -394,6 +583,13 @@ class MOARSearch:
             wall_s=time.time() - t0,
             history=history,
             cache_stats=self.cache_stats(),
+            parallel_stats={
+                "workers": self.workers,
+                "round_width": self.round_width,
+                "rounds": self.rounds,
+                "attempts": self.attempts,
+                **self.executor.dispatch_stats,
+            },
         )
 
     # -- unified Optimizer protocol (repro.pipeline) -----------------------------------
@@ -421,9 +617,13 @@ class MOARSearch:
         self.call_cache.clear()
         self.evaluated = []
         self.t = 0
+        self.attempts = 0
+        self.rounds = 0
         self.errors = 0
         self.model_stats = ModelStats()
         self.dstats = DirectiveStats()
+        for k in self.executor.dispatch_stats:
+            self.executor.dispatch_stats[k] = 0
         res = self.run()
 
         def point(n: Node) -> PlanPoint:
@@ -441,6 +641,7 @@ class MOARSearch:
             errors=res.errors,
             native=res,
             cache_stats=res.cache_stats,
+            parallel_stats=res.parallel_stats,
         )
 
     # -- held-out evaluation ----------------------------------------------------------

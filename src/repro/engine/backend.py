@@ -121,11 +121,18 @@ def default_equijoin(op: Dict[str, Any], doc: Document
 
 class SimBackend:
     # Backend-protocol batching hint: the simulator is a pure function of
-    # (seed, doc, op) so batching buys nothing — invoke one at a time.
-    preferred_batch_size = 1
+    # (seed, doc, op), so any chunking yields identical results — but
+    # cross-pipeline dispatch sessions merge sibling candidates' request
+    # streams, and a real batched endpoint amortizes per-call overhead
+    # across the chunk. Advertise a real batch so merged (mixed-pipeline,
+    # mixed-op) stages ride fewer ``submit`` round-trips.
+    preferred_batch_size = 16
     # results depend only on (seed, domain, op, doc): the executor's
     # content-addressed call cache may memoize invocations
     deterministic = True
+    # ...and submit holds no mutable state, so a dispatch session may
+    # keep several chunks of a merged stage in flight at once
+    concurrent_submit = True
 
     def __init__(self, seed: int = 0, domain: str = "generic",
                  cards: Optional[Dict[str, ModelCard]] = None):
@@ -522,8 +529,13 @@ class JaxBackend:
     """
 
     # Backend-protocol batching hint: real decoding amortizes prefill
-    # across requests (continuous batcher slot count).
-    preferred_batch_size = 4
+    # across requests. Chunks may exceed the decode slot count — the
+    # continuous batcher queues the overflow and admits as slots retire,
+    # so merged mixed-pipeline stages from a dispatch session still
+    # drain in one ``run_until_drained`` sweep per model.
+    preferred_batch_size = 8
+    # fixed decode-batch width of the continuous batcher
+    DECODE_SLOTS = 4
     # NOT memoizable: the fixed-slot batcher pads every slot to the max
     # active length, so a request's decoded tokens depend on which other
     # requests share its chunk — caching would freeze one batch
@@ -619,7 +631,7 @@ class JaxBackend:
             from repro.serving.scheduler import ContinuousBatcher
             cfg, params = self._model(model)
             b = ContinuousBatcher(
-                params, cfg, num_slots=self.preferred_batch_size,
+                params, cfg, num_slots=self.DECODE_SLOTS,
                 max_len=self.MAX_PROMPT_TOKENS + self.max_new_tokens + 8,
                 eos_id=-1)  # match generate(): no early EOS stop
             self._batchers[model] = b

@@ -25,6 +25,23 @@ and hands them to :meth:`Executor.dispatch`, which
   aborting the whole pipeline evaluation; a request that keeps failing
   for ``max_attempts`` attempts aborts the evaluation as before.
 
+Cross-pipeline dispatch sessions (:meth:`Executor.run_session`) evaluate
+several candidate pipelines as one *stage-aligned* round: each pipeline
+runs its operator loop on its own worker thread, but every ``dispatch``
+call posts its request batch to the session coordinator instead of the
+backend. When every live evaluation of the group is either blocked in
+``dispatch`` or finished, the coordinator merges the posted batches — in
+canonical (job index, request index) order — into shared
+``Backend.submit`` chunks, so sibling candidates' LLM calls ride one
+request stream instead of dispatching one pipeline at a time. The
+two-tier cache semantics are preserved: all cache/stat mutation happens
+on the coordinator thread under the ``CallCache`` lock, lookups run in
+canonical order, and identical in-flight requests are answered by one
+backend call. Failure injection is keyed per job (each job owns the
+``run`` counter it would have drawn sequentially), so a session is
+bit-identical to evaluating its jobs one after another with ``run`` —
+``workers`` only changes wall-clock, never results.
+
 Returns (output documents, ExecutionStats) where stats carry the paper's
 cost model: $ cost = sum over LLM ops of tokens x model token price; code
 and auxiliary operators cost $0 (paper §2.3). Latency (calls x
@@ -39,8 +56,10 @@ error-handling path (paper §4.3.3) in tests.
 from __future__ import annotations
 
 import copy
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.models_catalog import catalog
 from repro.data.documents import Dataset, content_hash
@@ -141,6 +160,10 @@ class CallCache:
         self.data: Dict[str, Tuple[Any, Any]] = {}
         self.hits = 0
         self.misses = 0
+        # dispatch sessions funnel all cache traffic through the single
+        # coordinator thread, but the cache object is also shared across
+        # executors (MOAR + baselines) — guard mutation regardless
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
         return len(self.data)
@@ -151,20 +174,24 @@ class CallCache:
         return self.hits / total if total else 0.0
 
     def lookup(self, key: str) -> Optional[Tuple[Any, Any]]:
-        entry = self.data.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        return copy.deepcopy(entry)
+        with self._lock:
+            entry = self.data.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return copy.deepcopy(entry)
 
     def store(self, key: str, value: Any, usage: Any) -> None:
-        self.data[key] = copy.deepcopy((value, usage))
+        entry = copy.deepcopy((value, usage))
+        with self._lock:
+            self.data[key] = entry
 
     def clear(self) -> None:
-        self.data.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self.data.clear()
+            self.hits = 0
+            self.misses = 0
 
 
 def evaluation_cache_stats(pipeline_hits: int, pipeline_entries: int,
@@ -191,6 +218,80 @@ _UNSET = object()
 UNCACHED_KINDS = frozenset({"resolve"})
 
 
+@dataclass
+class SessionResult:
+    """Outcome of one job of a dispatch session: the output documents and
+    stats of a successful evaluation, or the ``TransientLLMError`` that
+    aborted it (``docs`` is None then)."""
+
+    docs: Optional[Dataset]
+    stats: ExecutionStats
+    error: Optional[Exception] = None
+
+
+@dataclass
+class _SessionJob:
+    """One pipeline evaluation inside a dispatch session. Doubles as the
+    job thread's channel to the coordinator: ``dispatch`` posts request
+    batches here and blocks until the merged stage answers them."""
+
+    index: int
+    config: Any
+    docs: Dataset
+    run_no: int
+    stats: ExecutionStats = field(default_factory=ExecutionStats)
+    out: Optional[Dataset] = None
+    exc: Optional[Exception] = None
+    done: bool = False
+    cond: Any = None
+    # stage barrier state (guarded by ``cond``)
+    posted: Optional[Tuple[List[OpRequest], ExecutionStats]] = None
+    reply: Optional[List[Any]] = None
+    reply_exc: Optional[Exception] = None
+    aborted: bool = False  # coordinator died; fail fast instead of parking
+    # merged-stage scratch (coordinator thread only)
+    stage_results: List[Any] = field(default_factory=list)
+    stage_usages: List[Any] = field(default_factory=list)
+    stage_keys: List[Optional[str]] = field(default_factory=list)
+    stage_error: Optional[Exception] = None
+
+    def rendezvous(self, requests: List[OpRequest], stats: ExecutionStats
+                   ) -> List[Any]:
+        """Called from the job thread inside ``dispatch``: park the batch
+        at the stage barrier and wait for the coordinator's answer."""
+        with self.cond:
+            if self.aborted:
+                raise RuntimeError("dispatch session aborted")
+            self.posted = (requests, stats)
+            self.reply = None
+            self.reply_exc = None
+            self.cond.notify_all()
+            while self.posted is not None and not self.aborted:
+                self.cond.wait()
+            if self.aborted:
+                self.posted = None
+                raise RuntimeError("dispatch session aborted")
+            if self.reply_exc is not None:
+                exc = self.reply_exc
+                self.reply_exc = None
+                raise exc
+            reply = self.reply
+            self.reply = None
+            return reply
+
+
+@dataclass
+class _StageEntry:
+    """One unanswered request of a merged stage, with its per-entry retry
+    attempt counter (a follower promoted to leader restarts at 0)."""
+
+    job: _SessionJob
+    li: int
+    req: OpRequest
+    key: Optional[str]
+    attempt: int = 0
+
+
 class Executor:
     def __init__(self, backend, *, fail_prob: float = 0.0, seed: int = 0,
                  workers: int = 3, call_cache: Optional[CallCache] = None,
@@ -205,6 +306,19 @@ class Executor:
         self._cache_enabled = is_deterministic(self.backend)
         self._backend_fp = backend_fingerprint(self.backend)
         self._run_counter = 0  # transient failures vary across retries
+        # per-thread evaluation context: the run number owning the current
+        # op loop (failure-injection key) and, inside a dispatch session,
+        # the job whose coordinator channel dispatch() must post to
+        self._tl = threading.local()
+        # set by run_session for the duration of a session: how many of a
+        # merged stage's chunks may be in flight at once (backends opt in
+        # via ``concurrent_submit``)
+        self._session_concurrency = 1
+        # observability for benchmarks / SearchResult.parallel_stats
+        self.dispatch_stats: Dict[str, int] = {
+            "submit_calls": 0, "sessions": 0, "session_jobs": 0,
+            "merged_stages": 0, "merged_requests": 0,
+        }
 
     # -- shared infrastructure for operator implementations -------------------
 
@@ -218,9 +332,12 @@ class Executor:
 
     # -- batched request dispatch ---------------------------------------------
 
-    def _fails(self, req: OpRequest, attempt: int) -> bool:
+    def _fails(self, req: OpRequest, attempt: int,
+               run_no: Optional[int] = None) -> bool:
+        if run_no is None:
+            run_no = getattr(self._tl, "run_no", self._run_counter)
         return self.fail_prob > 0 and \
-            _hash01(self.seed, "apifail", self._run_counter,
+            _hash01(self.seed, "apifail", run_no,
                     req.op.get("name"), req.key, attempt) < self.fail_prob
 
     def _cache_key(self, req: OpRequest, op_fps: Dict[int, str]) -> str:
@@ -252,7 +369,14 @@ class Executor:
         float accumulation is bit-identical whatever the hit pattern,
         chunking, or retry schedule. Raises ``TransientLLMError`` only
         after a request exhausts ``max_attempts``.
+
+        Inside a dispatch session (``run_session``) this call instead
+        posts the batch to the session coordinator, which merges it with
+        the sibling evaluations' batches at the same stage boundary.
         """
+        job = getattr(self._tl, "channel", None)
+        if job is not None:
+            return job.rendezvous(requests, stats)
         results: List[Any] = [_UNSET] * len(requests)
         usages: List[Any] = [None] * len(requests)
         keys: List[Optional[str]] = [None] * len(requests)
@@ -284,6 +408,7 @@ class Executor:
             for start in range(0, len(live), self.batch_hint):
                 chunk = live[start:start + self.batch_hint]
                 try:
+                    self.dispatch_stats["submit_calls"] += 1
                     outs = self.backend.submit([requests[i] for i in chunk])
                 except TransientBackendError as e:
                     # the documented contract allows raising instead of
@@ -329,12 +454,8 @@ class Executor:
 
     # -- entry point -----------------------------------------------------------
 
-    def run(self, pipeline: PipelineLike, docs: Dataset
-            ) -> Tuple[Dataset, ExecutionStats]:
-        config = as_config(pipeline)
-        validate_pipeline(config)
-        self._run_counter += 1
-        stats = ExecutionStats()
+    def _execute_ops(self, config, docs: Dataset, stats: ExecutionStats
+                     ) -> Dataset:
         cur = list(docs)
         for op in config["operators"]:
             spec = operator_spec(op["type"])
@@ -344,4 +465,326 @@ class Executor:
         stats.latency_s /= max(self.workers, 1)
         for entry in stats.per_op.values():
             entry.latency_s /= max(self.workers, 1)
+        return cur
+
+    def run(self, pipeline: PipelineLike, docs: Dataset
+            ) -> Tuple[Dataset, ExecutionStats]:
+        config = as_config(pipeline)
+        validate_pipeline(config)
+        self._run_counter += 1
+        self._tl.run_no = self._run_counter
+        stats = ExecutionStats()
+        cur = self._execute_ops(config, docs, stats)
         return cur, stats
+
+    # -- cross-pipeline dispatch session ---------------------------------------
+
+    def run_session(self, jobs: List[Tuple[PipelineLike, Dataset]], *,
+                    workers: int = 1) -> List["SessionResult"]:
+        """Evaluate several pipelines as one batched round.
+
+        With ``workers == 1`` the jobs evaluate one after another —
+        sequential dispatch, the reference semantics. With
+        ``workers > 1`` the whole set advances *stage-aligned*: every
+        evaluation runs its operator loop on its own thread, each
+        ``dispatch`` call blocks at the session barrier, and once all
+        live evaluations are blocked (or finished) the coordinator
+        answers the merged batch through shared ``Backend.submit``
+        chunks (:meth:`_process_stage`). ``workers`` caps the backend
+        round-trips in flight at once — the transport budget the old
+        one-thread-per-candidate design would have used — not the number
+        of evaluations advancing together.
+
+        Results are bit-identical to calling :meth:`run` on each job in
+        order, for any ``workers``: each job owns the run number it would
+        have drawn sequentially (failure injection is keyed by it), all
+        cache traffic happens on the coordinator thread in canonical
+        (job index, request index) order, and a deterministic backend
+        answers a request identically whatever chunk carries it.
+        Per-job transient failures come back as ``SessionResult.error``
+        (the sibling jobs are unaffected); non-transient errors re-raise
+        in the caller after the group drains, exactly as ``run`` would.
+        """
+        configs = []
+        for pipeline, _ in jobs:
+            config = as_config(pipeline)
+            validate_pipeline(config)
+            configs.append(config)
+        # reserve the run numbers a sequential caller would have drawn
+        base = self._run_counter
+        self._run_counter += len(jobs)
+        self.dispatch_stats["sessions"] += 1
+        self.dispatch_stats["session_jobs"] += len(jobs)
+        session = [_SessionJob(index=i, config=config, docs=list(docs),
+                               run_no=base + i + 1)
+                   for i, (config, (_, docs)) in
+                   enumerate(zip(configs, jobs))]
+        # workers=1: strictly sequential. workers>1: one stage-aligned
+        # group over the whole set (bounded so a huge batch cannot spawn
+        # unbounded stacks), with `workers` submits in flight at once.
+        group_size = 1 if workers <= 1 else max(workers,
+                                                min(len(session), 64))
+        self._session_concurrency = max(1, workers)
+        try:
+            for start in range(0, len(session), group_size):
+                group = session[start:start + group_size]
+                if len(group) == 1:
+                    self._run_job_inline(group[0])
+                else:
+                    self._run_group(group)
+        finally:
+            self._session_concurrency = 1
+        out = []
+        for job in session:
+            if job.exc is not None and \
+                    not isinstance(job.exc, TransientLLMError):
+                raise job.exc
+            out.append(SessionResult(docs=job.out, stats=job.stats,
+                                     error=job.exc))
+        return out
+
+    def _run_job_inline(self, job: "_SessionJob") -> None:
+        """Single-member group: plain sequential evaluation (the
+        reference semantics) under the job's reserved run number."""
+        self._tl.run_no = job.run_no
+        try:
+            job.out = self._execute_ops(job.config, job.docs, job.stats)
+        except TransientLLMError as e:
+            job.exc = e
+
+    def _run_group(self, group: List["_SessionJob"]) -> None:
+        cond = threading.Condition()
+        for job in group:
+            job.cond = cond
+        threads = [threading.Thread(target=self._job_main, args=(job,),
+                                    name=f"repro-eval-{job.index}",
+                                    daemon=True)
+                   for job in group]
+        for t in threads:
+            t.start()
+        try:
+            with cond:
+                while True:
+                    live = [j for j in group if not j.done]
+                    if not live:
+                        break
+                    if all(j.posted is not None for j in live):
+                        stage = [j for j in live if j.posted is not None]
+                        self._process_stage(stage)
+                        for j in stage:
+                            j.posted = None
+                        cond.notify_all()
+                    else:
+                        cond.wait()
+        except BaseException:
+            # coordinator died: nobody will answer the barrier again —
+            # mark the group aborted (parked jobs raise out of
+            # rendezvous; jobs still computing fail at their next
+            # dispatch) so no thread is left blocked forever, then
+            # re-raise the coordinator's error
+            with cond:
+                for j in group:
+                    j.aborted = True
+                cond.notify_all()
+            for t in threads:
+                t.join()
+            raise
+        for t in threads:
+            t.join()
+
+    def _job_main(self, job: "_SessionJob") -> None:
+        self._tl.run_no = job.run_no
+        self._tl.channel = job
+        try:
+            job.out = self._execute_ops(job.config, job.docs, job.stats)
+        except Exception as e:  # noqa: BLE001 — re-raised by run_session
+            job.exc = e
+        finally:
+            self._tl.channel = None
+            with job.cond:
+                job.done = True
+                job.cond.notify_all()
+
+    def _submit_chunk(self, chunk: List["_StageEntry"]
+                      ) -> Union[List[Any], TransientBackendError]:
+        """One ``Backend.submit`` round-trip; a transient chunk-level
+        failure is returned (not raised) so the coordinator can apply
+        retry bookkeeping in canonical order."""
+        try:
+            return self.backend.submit([e.req for e in chunk])
+        except TransientBackendError as e:
+            return e
+
+    def _process_stage(self, stage: List["_SessionJob"]) -> None:
+        """Answer one merged stage: the posted request batches of every
+        group member currently blocked in ``dispatch``.
+
+        Canonical order is (job index, request index) — the order a
+        sequential evaluation would have issued them. Cache lookups run
+        first in that order; the remaining misses are grouped by cache
+        key (identical in-flight requests across sibling candidates are
+        answered by ONE backend call — the sequential run would have
+        answered the duplicates from the cache) and submitted in
+        ``preferred_batch_size`` chunks. Failure injection is evaluated
+        only for each key group's leader, under the leader's job run
+        number and per-entry attempt counter, so a job sees exactly the
+        draws it would have seen sequentially; when a leader's job
+        aborts, the next entry takes over with its own attempt counter
+        from zero — again matching the sequential replay.
+        """
+        self.dispatch_stats["merged_stages"] += 1
+        op_fps: Dict[int, str] = {}
+        pending: List[_StageEntry] = []
+        for job in stage:
+            requests, _ = job.posted
+            n = len(requests)
+            self.dispatch_stats["merged_requests"] += n
+            job.stage_results = [_UNSET] * n
+            job.stage_usages = [None] * n
+            job.stage_keys = [None] * n
+            job.stage_error = None
+            for li, req in enumerate(requests):
+                if self._cache_enabled and req.kind not in UNCACHED_KINDS:
+                    key = self._cache_key(req, op_fps)
+                    job.stage_keys[li] = key
+                    hit = self.call_cache.lookup(key)
+                    if hit is not None:
+                        job.stage_results[li], job.stage_usages[li] = hit
+                        continue
+                pending.append(_StageEntry(job, li, req, job.stage_keys[li]))
+
+        while pending:
+            pending = [e for e in pending if e.job.stage_error is None]
+            # group by key; keyless entries never share a backend call
+            leaders: List[_StageEntry] = []
+            groups: Dict[str, List[_StageEntry]] = {}
+            for e in pending:
+                if e.key is not None and e.key in groups:
+                    groups[e.key].append(e)
+                    continue
+                if e.key is not None:
+                    groups[e.key] = [e]
+                leaders.append(e)
+            next_pending: List[_StageEntry] = []
+            live: List[_StageEntry] = []
+            for e in leaders:
+                if self._fails(e.req, e.attempt, e.job.run_no):
+                    if e.attempt + 1 >= self.max_attempts:
+                        e.job.stage_error = TransientLLMError(
+                            f"simulated API failure in "
+                            f"{e.req.op.get('name')} (gave up after "
+                            f"{e.attempt + 1} attempts)")
+                        # followers restart with their own attempt draws,
+                        # as they would had the jobs run one by one
+                        if e.key is not None:
+                            next_pending.extend(groups[e.key][1:])
+                        continue
+                    e.attempt += 1
+                    e.job.stats.retries += 1
+                    next_pending.append(e)
+                    if e.key is not None:
+                        next_pending.extend(groups[e.key][1:])
+                    continue
+                live.append(e)
+            chunks: List[List[_StageEntry]] = []
+            for start in range(0, len(live), self.batch_hint):
+                chunk = live[start:start + self.batch_hint]
+                chunk = [e for e in chunk if e.job.stage_error is None]
+                if chunk:
+                    chunks.append(chunk)
+            # pure backends (``concurrent_submit``) may answer the
+            # stage's chunks in flight simultaneously — results are
+            # still committed below in canonical chunk order, so
+            # concurrency changes wall-clock only
+            self.dispatch_stats["submit_calls"] += len(chunks)
+            conc = min(self._session_concurrency, len(chunks))
+            if conc > 1 and getattr(self.backend, "concurrent_submit",
+                                    False):
+                with ThreadPoolExecutor(max_workers=conc) as pool:
+                    answers = list(pool.map(self._submit_chunk, chunks))
+            else:
+                answers = [self._submit_chunk(c) for c in chunks]
+            for chunk, outs in zip(chunks, answers):
+                if isinstance(outs, TransientBackendError):
+                    for entry in chunk:
+                        if entry.attempt + 1 >= self.max_attempts:
+                            entry.job.stage_error = TransientLLMError(
+                                f"backend failure persisted for "
+                                f"{entry.attempt + 1} attempts: {outs}")
+                            # followers belong to OTHER jobs: they retry
+                            # with their own draws, as the sequential
+                            # replay would after the leader's job died
+                            if entry.key is not None:
+                                next_pending.extend(groups[entry.key][1:])
+                        else:
+                            entry.attempt += 1
+                            entry.job.stats.retries += 1
+                            next_pending.append(entry)
+                            if entry.key is not None:
+                                next_pending.extend(groups[entry.key][1:])
+                    continue
+                if len(outs) != len(chunk):
+                    raise RuntimeError(
+                        f"{type(self.backend).__name__}.submit returned "
+                        f"{len(outs)} results for {len(chunk)} requests")
+                for entry, res in zip(chunk, outs):
+                    if entry.job.stage_error is not None:
+                        # the job died on an earlier chunk of this round:
+                        # sequential dispatch would have raised before
+                        # submitting this chunk, so its results must not
+                        # enter the cache or reach followers — they
+                        # re-issue for their own jobs instead
+                        if entry.key is not None:
+                            next_pending.extend(groups[entry.key][1:])
+                        continue
+                    if res.error is not None:
+                        if isinstance(res.error, TransientBackendError):
+                            if entry.attempt + 1 < self.max_attempts:
+                                entry.attempt += 1
+                                entry.job.stats.retries += 1
+                                next_pending.append(entry)
+                                if entry.key is not None:
+                                    next_pending.extend(
+                                        groups[entry.key][1:])
+                                continue
+                            entry.job.stage_error = TransientLLMError(
+                                f"{entry.req.op.get('name')}: transient "
+                                f"backend failure persisted for "
+                                f"{entry.attempt + 1} attempts: "
+                                f"{res.error}")
+                            if entry.key is not None:
+                                next_pending.extend(groups[entry.key][1:])
+                            continue
+                        entry.job.stage_error = res.error
+                        # followers re-issue the request themselves (and
+                        # will surface the same non-transient error for
+                        # their own jobs, as sequential dispatch would)
+                        if entry.key is not None:
+                            next_pending.extend(groups[entry.key][1:])
+                        continue
+                    usage = res.usage if res.usage is not None else Usage()
+                    if entry.key is not None:
+                        self.call_cache.store(entry.key, res.value, usage)
+                        followers = groups[entry.key][1:]
+                    else:
+                        followers = []
+                    for f in [entry] + followers:
+                        # followers replay the stored record, exactly as
+                        # their sequential cache hit would have
+                        value = res.value if f is entry else \
+                            copy.deepcopy(res.value)
+                        f.job.stage_results[f.li] = value
+                        f.job.stage_usages[f.li] = copy.deepcopy(usage) \
+                            if f is not entry else usage
+            pending = next_pending
+
+        for job in stage:
+            if job.stage_error is not None:
+                job.reply_exc = job.stage_error
+                continue
+            requests, stats = job.posted
+            assert not any(r is _UNSET for r in job.stage_results)
+            for req, usage in zip(requests, job.stage_usages):
+                stats.charge(req.op["name"], req.op.get("model", ""), usage,
+                             self.backend)
+            job.reply = job.stage_results

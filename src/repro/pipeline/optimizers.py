@@ -49,6 +49,11 @@ class SearchResult:
     # two-tier evaluation-cache accounting: pipeline-hash tier (identical
     # candidates) + content-addressed call tier (shared-prefix reuse)
     cache_stats: Dict[str, Any] = field(default_factory=dict)
+    # round-engine accounting (optimizers that evaluate candidate sets
+    # through dispatch sessions): workers, round width, rounds run, and
+    # the executor's merged-dispatch counters (submit_calls,
+    # merged_stages, merged_requests). Empty for purely sequential runs.
+    parallel_stats: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def name(self) -> str:  # BaselineResult compatibility

@@ -24,6 +24,11 @@ Optional backend attributes the executor consults:
   content-addressed call cache. Backends that never declare it are NOT
   cached — silently memoizing a sampling or stateful backend would
   distort search;
+- ``concurrent_submit``: declare ``True`` when ``submit`` is thread-safe
+  (no mutable per-call state), allowing a cross-pipeline dispatch
+  session to keep several chunks of a merged stage in flight at once.
+  Stateful substrates (e.g. a continuous batcher) must leave this unset
+  — their chunks are submitted serially;
 - ``fingerprint()``: stable identity of the backend's behaviour (e.g.
   ``("sim", seed, domain)``), used to key the call cache. Without it the
   cache falls back to the instance id — still correct, never shared
