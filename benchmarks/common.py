@@ -10,11 +10,11 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor
-from repro.engine.operators import LLM_TYPES, models_used, op_types
+from repro.engine.operators import models_used, op_types
 from repro.engine.workloads import WORKLOADS
 from repro.pipeline import optimizer_names, run_optimizer
 

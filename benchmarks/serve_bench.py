@@ -1,0 +1,181 @@
+"""Online serving benchmark: coalesced micro-batching vs per-request.
+
+A seeded open-loop load generator (Poisson arrivals at ``--rps``) replays
+the same request schedule against two ``PipelineServer`` configurations:
+
+- **coalesced**: micro-batching window + ``Executor.run_session``
+  merged dispatch, so concurrent requests' stage batches share
+  ``Backend.submit`` chunks;
+- **per-request**: ``max_batch=1`` — every request executes alone, one
+  submit round trip per stage per request.
+
+The backend is the deterministic SimBackend behind a
+``VirtualLatencyBackend``: each submit charges a round-trip latency to a
+shared ``VirtualClock`` instead of sleeping, modeling a remote batched
+LLM endpoint where the per-call round trip dominates. Everything —
+outputs, usage accounting, latency percentiles, throughput — is
+bit-for-bit reproducible, which is what lets CI gate on the speedup.
+
+Asserts: per-document outputs and usage accounting are identical across
+modes, and coalesced throughput is >= ``--min-speedup`` (default 2x) the
+per-request baseline. ``--json`` writes the report artifact the CI
+bench-regression job uploads.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from typing import Any, Dict, List, Tuple
+
+from repro.engine.backend import SimBackend
+from repro.engine.workloads import WORKLOADS
+from repro.serving.pipeline_server import (PipelineServer, ServeTicket,
+                                           VirtualClock,
+                                           VirtualLatencyBackend)
+
+
+def poisson_arrivals(workload, n: int, rps: float, seed: int
+                     ) -> List[Tuple[float, Dict[str, Any]]]:
+    """Open-loop schedule: n docs (cycled from the workload sample,
+    re-keyed so every request is a distinct document) with seeded
+    exponential inter-arrival gaps."""
+    rng = random.Random(seed)
+    sample = workload.sample
+    t, out = 0.0, []
+    for i in range(n):
+        t += rng.expovariate(rps)
+        out.append((t, dict(sample[i % len(sample)], id=f"r{i}")))
+    return out
+
+
+def run_mode(workload, arrivals, *, max_batch: int, workers: int,
+             base_ms: float, per_request_ms: float, window_ms: float,
+             max_inflight: int, slo_ms: float, seed: int
+             ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        SimBackend(seed=seed, domain=workload.domain), clock,
+        base_s=base_ms / 1000.0, per_request_s=per_request_ms / 1000.0,
+        preferred_batch_size=64)
+    server = PipelineServer(workload.initial_pipeline, backend,
+                            max_inflight=max_inflight, max_batch=max_batch,
+                            batch_window_s=window_ms / 1000.0,
+                            workers=workers, clock=clock,
+                            slo_s=slo_ms / 1000.0)
+    tickets = server.run_trace(arrivals)
+    return tickets, server.report()
+
+
+def _usage_fp(tickets: List[ServeTicket]) -> Dict[str, Tuple]:
+    return {tk.doc["id"]: (tk.stats.cost, tk.stats.llm_calls,
+                           tk.stats.in_tokens, tk.stats.out_tokens)
+            for tk in tickets}
+
+
+def bench(workload_name: str, *, n: int, rps: float, seed: int,
+          base_ms: float, per_request_ms: float, window_ms: float,
+          max_batch: int, workers: int, max_inflight: int, slo_ms: float,
+          min_speedup: float) -> Dict[str, Any]:
+    w = WORKLOADS[workload_name]()
+    arrivals = poisson_arrivals(w, n, rps, seed)
+    print(f"== {workload_name}: {n} requests @ {rps:.0f} rps, "
+          f"{base_ms:.0f}ms/submit round trip, window {window_ms:.0f}ms, "
+          f"max_batch {max_batch} ==")
+    modes = {
+        "coalesced": dict(max_batch=max_batch, workers=workers),
+        "per_request": dict(max_batch=1, workers=1),
+    }
+    tickets, reports = {}, {}
+    for label, kw in modes.items():
+        tks, rep = run_mode(w, arrivals, base_ms=base_ms,
+                            per_request_ms=per_request_ms,
+                            window_ms=window_ms, max_inflight=max_inflight,
+                            slo_ms=slo_ms, seed=seed, **kw)
+        tickets[label], reports[label] = tks, rep
+        lat = rep["latency_s"]
+        print(f"  {label:12s}: {rep['throughput_rps']:7.1f} req/s  "
+              f"latency p50 {1000 * lat['p50']:6.1f}ms "
+              f"p95 {1000 * lat['p95']:6.1f}ms  "
+              f"{rep['batches']:3d} batches "
+              f"(mean {rep['mean_batch_size']:4.1f})  "
+              f"{rep['dispatch']['submit_calls']:4d} submits  "
+              f"SLO {100 * rep['slo']['attainment']:5.1f}%")
+
+    out_c = {tk.doc["id"]: tk.docs for tk in tickets["coalesced"]}
+    out_s = {tk.doc["id"]: tk.docs for tk in tickets["per_request"]}
+    assert out_c == out_s, "coalesced serving changed per-document outputs"
+    assert _usage_fp(tickets["coalesced"]) == _usage_fp(
+        tickets["per_request"]), "usage accounting diverged across modes"
+    assert all(tk.error is None for tk in tickets["coalesced"])
+
+    speedup = (reports["coalesced"]["throughput_rps"]
+               / max(reports["per_request"]["throughput_rps"], 1e-12))
+    print(f"  speedup: {speedup:.2f}x throughput, outputs bit-identical")
+    assert speedup >= min_speedup, \
+        (f"coalesced serving regressed: {speedup:.2f}x < required "
+         f"{min_speedup:.2f}x")
+    return {
+        "workload": workload_name,
+        "requests": n,
+        "rps": rps,
+        "seed": seed,
+        "latency_model": {"base_ms": base_ms,
+                          "per_request_ms": per_request_ms},
+        "speedup": speedup,
+        "min_speedup": min_speedup,
+        "coalesced": reports["coalesced"],
+        "per_request": reports["per_request"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run for CI (still gates the speedup "
+                         "floor — virtual time is deterministic)")
+    ap.add_argument("--workloads", nargs="*", default=None)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rps", type=float, default=150.0)
+    ap.add_argument("--base-ms", type=float, default=50.0,
+                    help="per-submit round-trip latency of the modeled "
+                         "endpoint")
+    ap.add_argument("--per-request-ms", type=float, default=2.0,
+                    help="marginal in-batch request latency")
+    ap.add_argument("--window-ms", type=float, default=20.0)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--max-inflight", type=int, default=64)
+    ap.add_argument("--slo-ms", type=float, default=2000.0)
+    ap.add_argument("--min-speedup", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the report artifact (BENCH_serve.json)")
+    args = ap.parse_args()
+    if args.smoke:
+        names = args.workloads or ["cuad"]
+        kw = dict(n=24, rps=200.0, base_ms=50.0, per_request_ms=2.0,
+                  window_ms=20.0, max_batch=16, workers=4, max_inflight=64,
+                  slo_ms=2000.0, min_speedup=args.min_speedup,
+                  seed=args.seed)
+    else:
+        names = args.workloads or ["cuad", "medec"]
+        kw = dict(n=args.requests, rps=args.rps, base_ms=args.base_ms,
+                  per_request_ms=args.per_request_ms,
+                  window_ms=args.window_ms, max_batch=args.max_batch,
+                  workers=args.workers, max_inflight=args.max_inflight,
+                  slo_ms=args.slo_ms, min_speedup=args.min_speedup,
+                  seed=args.seed)
+    results = [bench(name, **kw) for name in names]
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serve", "results": results}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,39 +1,95 @@
-"""Serve a semantic-operator pipeline against REAL JAX model decoding.
+"""Optimize a pipeline with MOAR, then serve the winning plan online.
 
-Two parts:
-1. Continuous-batching serving demo: batched requests stream through the
-   fixed-slot scheduler (prefill + per-step decode with KV caches).
-2. A semantic map operator executed by the JaxBackend — every document
-   triggers real tokenization + prefill + autoregressive decoding on a
-   reduced-config model from the pool, with token-level cost accounting
-   priced by the roofline-derived catalog.
+The paper's loop ends at plan selection; this example continues to the
+ROADMAP's north star — serving the optimized plan to live traffic:
+
+1. MOAR searches the rewrite space and returns a Pareto frontier
+   (``SearchResult``); we take the best plan.
+2. ``PipelineServer`` serves that plan to an open-loop Poisson request
+   stream in *virtual time*: concurrent requests coalesce through the
+   micro-batching window into shared ``Backend.submit`` chunks, and the
+   run is compared against one-request-at-a-time execution —
+   bit-identical outputs, several times the throughput.
+3. The same server fronts REAL JAX decoding: ``JaxBackend`` requests
+   ride the fixed-slot continuous batcher (prefill + per-step decode
+   with KV caches) on a reduced-config model from the pool.
 
   PYTHONPATH=src python examples/serve_pipeline.py
 """
 
-from repro.core.models_catalog import catalog
-from repro.engine.backend import JaxBackend
-from repro.engine.executor import Executor
+import random
+from dataclasses import replace
+
+from repro.engine.backend import SimBackend
 from repro.engine.workloads import WORKLOADS
 from repro.launch.serve import serve_demo
+from repro.pipeline import get_optimizer
+from repro.serving.pipeline_server import (PipelineServer, VirtualClock,
+                                           VirtualLatencyBackend)
+
+BUDGET = 12
+N_REQUESTS = 32
+RPS = 120.0
+
+
+def serve_trace(plan, workload, *, max_batch: int, workers: int,
+                seed: int = 0):
+    """Serve ``plan`` to a seeded Poisson request stream in virtual
+    time; returns (tickets, stats report)."""
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        SimBackend(seed=0, domain=workload.domain), clock,
+        base_s=0.04, per_request_s=0.002, preferred_batch_size=64)
+    server = PipelineServer(plan, backend, max_inflight=64,
+                            max_batch=max_batch, batch_window_s=0.02,
+                            workers=workers, clock=clock, slo_s=0.5)
+    rng = random.Random(seed)
+    t, arrivals = 0.0, []
+    for i in range(N_REQUESTS):
+        t += rng.expovariate(RPS)
+        arrivals.append((t, dict(workload.sample[i % len(workload.sample)],
+                                 id=f"r{i}")))
+    tickets = server.run_trace(arrivals)
+    return tickets, server.report()
 
 
 def main():
-    print("== model pool M (prices derived from roofline analysis) ==")
-    for card in catalog().values():
-        print(" ", card.describe())
+    print("== 1. optimize with MOAR ==")
+    workload = WORKLOADS["cuad"]()
+    # a trimmed D_o keeps the demo snappy; drop `replace` for the full run
+    workload = replace(workload, docs=workload.docs[:24])
+    backend = SimBackend(seed=0, domain=workload.domain)
+    search = get_optimizer("moar")(workload, backend, budget=BUDGET,
+                                   seed=0, workers=4)
+    result = search.optimize()
+    best = result.best()
+    print(f"searched {result.budget_used} evaluations -> best plan "
+          f"acc={best.acc:.3f} at ${best.cost:.4f} "
+          f"({len(result.frontier)} frontier points)")
 
-    print("\n== continuous-batching decode (llama3.2-1b reduced) ==")
-    serve_demo("llama3.2-1b", requests=6, slots=3, max_new=8)
+    print("\n== 2. serve the winning plan (open-loop Poisson, "
+          "virtual time) ==")
+    reports = {}
+    for label, (max_batch, workers) in {"coalesced": (8, 4),
+                                        "per-request": (1, 1)}.items():
+        tickets, rep = serve_trace(best.pipeline, workload,
+                                   max_batch=max_batch, workers=workers)
+        reports[label] = rep
+        lat, qw = rep["latency_s"], rep["queue_wait_s"]
+        print(f"  {label:12s}: {rep['throughput_rps']:6.1f} req/s | "
+              f"p50 {1000 * lat['p50']:6.1f}ms "
+              f"p95 {1000 * lat['p95']:6.1f}ms "
+              f"(queue p95 {1000 * qw['p95']:6.1f}ms) | "
+              f"{rep['dispatch']['submit_calls']} submits | "
+              f"SLO(500ms) {100 * rep['slo']['attainment']:.0f}%")
+    speedup = (reports["coalesced"]["throughput_rps"]
+               / reports["per-request"]["throughput_rps"])
+    print(f"  coalescing buys {speedup:.1f}x throughput at identical "
+          f"per-document outputs")
 
-    print("\n== semantic map over documents via JaxBackend ==")
-    workload = WORKLOADS["medec"]()
-    backend = JaxBackend(seed=0, max_new_tokens=6)
-    executor = Executor(backend)
-    out, stats = executor.run(workload.initial_pipeline, workload.sample[:3])
-    print(f"processed {len(out)} docs with real decoding: "
-          f"{stats.llm_calls} LLM calls, {stats.in_tokens} input tokens, "
-          f"cost ${stats.cost:.6f}")
+    print("\n== 3. real JAX decoding through the same serving stack ==")
+    serve_demo("llama3.2-1b", requests=4, slots=2, max_new=4,
+               workload="medec")
 
 
 if __name__ == "__main__":

@@ -23,3 +23,6 @@ OPTIMIZERS = {
     "lotus": Lotus,
     "simple_agent": SimpleAgent,
 }
+
+__all__ = ["BaselineResult", "EvalPoint", "DocETLV1", "Abacus", "Lotus",
+           "SimpleAgent", "OPTIMIZERS"]

@@ -18,9 +18,9 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from repro.baselines.common import BaseOptimizer, EvalPoint
+from repro.baselines.common import BaseOptimizer
 from repro.core import pareto
-from repro.core.agent import AgentContext, AgentPolicy
+from repro.core.agent import AgentContext
 from repro.core.directives import BY_NAME
 from repro.core.models_catalog import model_names
 from repro.engine.operators import LLM_TYPES, clone_pipeline, \

@@ -15,15 +15,15 @@ from __future__ import annotations
 
 import hashlib
 
+from repro.baselines.common import BaseOptimizer
+from repro.core.agent import AgentContext, AgentPolicy
+from repro.core.directives import BY_NAME
+from repro.engine.operators import clone_pipeline, validate_pipeline
+
 
 def _h01(*parts) -> float:
     h = hashlib.blake2s("|".join(str(p) for p in parts).encode()).digest()
     return int.from_bytes(h[:8], "little") / 2**64
-
-from repro.baselines.common import BaseOptimizer
-from repro.core.agent import AgentContext, AgentPolicy
-from repro.core.directives import BY_NAME, Target
-from repro.engine.operators import clone_pipeline, validate_pipeline
 
 # V1's accuracy-oriented directive subset
 V1_DIRECTIVES = [

@@ -11,7 +11,6 @@ it evaluated is reported — exactly the paper's setup.
 from __future__ import annotations
 
 import hashlib
-import json
 
 from repro.baselines.common import BaseOptimizer
 from repro.core.models_catalog import model_names

@@ -15,7 +15,6 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 

@@ -20,7 +20,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.directives import BY_NAME, Directive, Target
+from repro.core.directives import Directive, Target
 from repro.core.models_catalog import DEFAULT_MODEL, ModelCard, catalog
 from repro.data.documents import Dataset, doc_text
 from repro.engine.operators import LLM_TYPES, PipelineConfig

@@ -5,7 +5,7 @@ Points are any objects with ``.cost`` and ``.acc`` attributes.
 
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Sequence, TypeVar
+from typing import Iterable, List, Sequence, TypeVar
 
 T = TypeVar("T")
 

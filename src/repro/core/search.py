@@ -39,8 +39,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core import pareto
 from repro.core.agent import (AgentContext, AgentPolicy, DirectiveStats,
                               ModelStats)
-from repro.core.directives import BY_NAME, DIRECTIVES, Directive, Target, \
-    applicable
+from repro.core.directives import Directive, Target, applicable
 from repro.core.models_catalog import model_names
 from repro.engine.executor import (CallCache, Executor, TransientLLMError,
                                    evaluation_cache_stats)

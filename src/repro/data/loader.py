@@ -9,7 +9,7 @@ any mesh size (elastic rescaling re-slices the same global batch).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

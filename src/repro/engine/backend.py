@@ -47,9 +47,8 @@ implementations and keep v1 compatibility via ``LegacyBackendAdapter``.
 from __future__ import annotations
 
 import hashlib
-import math
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.models_catalog import ModelCard, catalog
@@ -216,7 +215,6 @@ class SimBackend:
     def _present_facts(self, doc: Document) -> List[Dict[str, Any]]:
         """Facts whose evidence sentence survives in the current text."""
         text = doc_text(doc)
-        nw = max(word_count(text), 1)
         out = []
         for f in doc.get("_facts", []):
             idx = text.find(f["value"])
@@ -534,7 +532,9 @@ class JaxBackend:
     # so merged mixed-pipeline stages from a dispatch session still
     # drain in one ``run_until_drained`` sweep per model.
     preferred_batch_size = 8
-    # fixed decode-batch width of the continuous batcher
+    # fixed decode-batch width of the continuous batcher (default; the
+    # constructor's ``decode_slots`` overrides per instance — serving
+    # hosts size it to their traffic via ``--slots``)
     DECODE_SLOTS = 4
     # NOT memoizable: the fixed-slot batcher pads every slot to the max
     # active length, so a request's decoded tokens depend on which other
@@ -545,7 +545,8 @@ class JaxBackend:
     # prompt truncation: the serving path tokenizes at most this many ids
     MAX_PROMPT_TOKENS = 96
 
-    def __init__(self, seed: int = 0, max_new_tokens: int = 8):
+    def __init__(self, seed: int = 0, max_new_tokens: int = 8,
+                 decode_slots: Optional[int] = None):
         import jax
         from repro.configs import get_config
         from repro.models import api
@@ -554,12 +555,21 @@ class JaxBackend:
         self._jax = jax
         self.seed = seed
         self.max_new_tokens = max_new_tokens
+        if decode_slots is not None:
+            self.DECODE_SLOTS = max(1, int(decode_slots))
         self._params = {}
         self._batchers: Dict[str, Any] = {}
         self.cards = catalog()
 
     def fingerprint(self) -> Tuple[Any, ...]:
-        return ("jax", self.seed, self.max_new_tokens)
+        return ("jax", self.seed, self.max_new_tokens, self.DECODE_SLOTS)
+
+    def close(self) -> None:
+        """Backend lifecycle hook (``backend_close``): drop the model
+        params and per-model batchers so device buffers are reclaimable
+        once a serving host shuts down."""
+        self._batchers.clear()
+        self._params.clear()
 
     def _model(self, name: str):
         if name not in self._params:

@@ -95,10 +95,14 @@ def run_code_map(spec: CodeSpec, doc: Document) -> Dict[str, Any]:
         keep = set()
         if kind == "regex_extract":
             pat = re.compile(spec["pattern"], re.I)
-            match = lambda s: pat.search(s) is not None
+
+            def match(s):
+                return pat.search(s) is not None
         else:
             kws = [k.lower() for k in spec["keywords"]]
-            match = lambda s: any(k in s.lower() for k in kws)
+
+            def match(s):
+                return any(k in s.lower() for k in kws)
         for i, s in enumerate(sents):
             if match(s):
                 for j in range(max(0, i - window), min(len(sents), i + window + 1)):

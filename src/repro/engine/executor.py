@@ -480,7 +480,8 @@ class Executor:
     # -- cross-pipeline dispatch session ---------------------------------------
 
     def run_session(self, jobs: List[Tuple[PipelineLike, Dataset]], *,
-                    workers: int = 1) -> List["SessionResult"]:
+                    workers: int = 1, capture_errors: bool = False
+                    ) -> List["SessionResult"]:
         """Evaluate several pipelines as one batched round.
 
         With ``workers == 1`` the jobs evaluate one after another —
@@ -503,7 +504,11 @@ class Executor:
         answers a request identically whatever chunk carries it.
         Per-job transient failures come back as ``SessionResult.error``
         (the sibling jobs are unaffected); non-transient errors re-raise
-        in the caller after the group drains, exactly as ``run`` would.
+        in the caller after the group drains, exactly as ``run`` would —
+        unless ``capture_errors`` is set, in which case *every* per-job
+        failure is returned as ``SessionResult.error`` so one bad
+        request cannot take down its siblings (the serving layer's
+        isolation contract: ``repro.serving.pipeline_server``).
         """
         configs = []
         for pipeline, _ in jobs:
@@ -529,27 +534,36 @@ class Executor:
             for start in range(0, len(session), group_size):
                 group = session[start:start + group_size]
                 if len(group) == 1:
-                    self._run_job_inline(group[0])
+                    self._run_job_inline(group[0],
+                                         capture_errors=capture_errors)
                 else:
                     self._run_group(group)
         finally:
             self._session_concurrency = 1
         out = []
         for job in session:
-            if job.exc is not None and \
+            if job.exc is not None and not capture_errors and \
                     not isinstance(job.exc, TransientLLMError):
                 raise job.exc
             out.append(SessionResult(docs=job.out, stats=job.stats,
                                      error=job.exc))
         return out
 
-    def _run_job_inline(self, job: "_SessionJob") -> None:
+    def _run_job_inline(self, job: "_SessionJob", *,
+                        capture_errors: bool = False) -> None:
         """Single-member group: plain sequential evaluation (the
-        reference semantics) under the job's reserved run number."""
+        reference semantics) under the job's reserved run number. With
+        ``capture_errors`` even non-transient failures land in
+        ``job.exc`` — a single-job batch must isolate a poisoned
+        request exactly like a merged group does."""
         self._tl.run_no = job.run_no
         try:
             job.out = self._execute_ops(job.config, job.docs, job.stats)
         except TransientLLMError as e:
+            job.exc = e
+        except Exception as e:  # noqa: BLE001 — re-raised by run_session
+            if not capture_errors:
+                raise
             job.exc = e
 
     def _run_group(self, group: List["_SessionJob"]) -> None:

@@ -25,15 +25,18 @@ them (an op asking for 41 tags at once is "harder" than one asking for 3).
 from __future__ import annotations
 
 import copy
-from typing import Any, Dict, List
+from typing import List
 
 from repro.data.documents import content_hash
 from repro.engine import builtin_ops  # noqa: F401 — registers Table 7 ops
 from repro.pipeline.model import Op, Pipeline, as_config  # noqa: F401
 from repro.pipeline.spec import (KIND_AUX, KIND_CODE, KIND_LLM, OpConfig,
-                                 PipelineConfig, PipelineValidationError,
-                                 TypeView, is_llm_type, operator_spec,
+                                 PipelineConfig, TypeView, is_llm_type,
                                  validate_op, validate_pipeline_config)
+# compatibility re-exports: the registry surface moved to
+# repro.pipeline.spec in PR 1; old import sites keep working
+from repro.pipeline.spec import (PipelineValidationError,  # noqa: F401
+                                 operator_spec)  # noqa: F401
 
 # live registry views: custom registrations are immediately members
 SEMANTIC_TYPES = TypeView(KIND_LLM)

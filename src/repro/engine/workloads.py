@@ -16,8 +16,8 @@ exactly the paper's split.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List
 
 from repro.core.models_catalog import DEFAULT_MODEL
 from repro.data.documents import Dataset, Document

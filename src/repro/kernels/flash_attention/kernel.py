@@ -20,8 +20,6 @@ logit softcap (gemma2/grok-1), GQA/MQA.
 from __future__ import annotations
 
 import functools
-import math
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -102,9 +100,9 @@ def _flash_kernel(
 
     @pl.when(ik == nk - 1)
     def _finalize():
-        l = l_ref[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = l_ref[...]
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, 0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 def flash_attention_gqa(

@@ -79,9 +79,9 @@ def _decode_kernel(
 
     @pl.when(isb == nsb - 1)
     def _done():
-        l = l_ref[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = l_ref[...]
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 def flash_decode_gqa(

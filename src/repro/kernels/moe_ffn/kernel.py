@@ -14,8 +14,6 @@ only the tiles of the experts it owns (expert-parallel friendly).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -12,7 +12,6 @@ sharding-policy overrides); hillclimb iterations override them via
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -23,7 +22,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES, ShapeSpec, cache_len_for, skip_reason
 from repro.launch import sharding as shd
-from repro.launch.mesh import data_axes_of
 from repro.models import api
 from repro.models.config import ModelConfig
 from repro.serving.decode import make_serve_step

@@ -21,7 +21,7 @@ import json
 import time
 import traceback
 
-import jax
+import jax  # noqa: F401 — initialize under XLA_FLAGS before model code
 
 from repro.configs import get_config, list_archs
 from repro.configs.shapes import SHAPE_NAMES, skip_reason

@@ -17,7 +17,7 @@ import argparse
 import json
 from typing import Any, Callable, Dict, Optional
 
-import jax
+import jax  # noqa: F401 — initialize under XLA_FLAGS before model code
 
 from repro.launch.dryrun import run_cell
 from repro.launch.mesh import make_production_mesh

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro.launch.hlo_analysis import HLOCosts, analyze
 from repro.models.config import ModelConfig
@@ -77,7 +77,6 @@ class RooflineReport:
         if self.flops > 0:
             self.useful_ratio = self.model_flops_global / (
                 self.flops * self.n_devices)
-        live = self.argument_bytes + self.output_bytes + self.temp_bytes
         # donated args alias outputs; count args + temps as resident
         self.peak_fraction_of_hbm = (self.argument_bytes + self.temp_bytes) \
             / HW["hbm_bytes"]

@@ -1,52 +1,120 @@
-"""Serving driver: continuous-batching inference on a reduced config.
+"""Serving driver: an optimized pipeline under live traffic.
+
+Routes real decoding traffic through the online serving stack:
+``PipelineServer`` admission/micro-batching on top of ``JaxBackend``,
+whose generation chunks ride the persistent continuous batcher
+(``serving/scheduler.py``) — so concurrent requests coalesce twice:
+merged ``Backend.submit`` chunks at the dispatch layer, shared decode
+slots at the model layer.
+
+The served plan is a *registry-validated* pipeline (the workload's
+initial plan with every LLM op pointed at ``--arch``), not a hardcoded
+request mix: swap in any ``SearchResult.best().pipeline`` the optimizer
+produced.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-      --requests 8 --slots 4
+      --requests 8 --slots 4 --rps 0
 """
 
 from __future__ import annotations
 
 import argparse
+import random
 import time
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
-import numpy as np
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline.model import as_config
+from repro.serving.pipeline_server import PipelineServer, ServeTicket
 
-from repro.configs import get_config
-from repro.models import api
-from repro.serving.scheduler import ContinuousBatcher
+
+def pipeline_for(workload, arch: str) -> Dict[str, Any]:
+    """The workload's initial plan with every LLM operator pointed at
+    ``arch`` — validated against the operator registry by the server."""
+    config = as_config(workload.initial_pipeline)
+    ops = [dict(op, model=arch) if "model" in op else dict(op)
+           for op in config["operators"]]
+    return {"name": f"{config['name']}@{arch}", "operators": ops}
 
 
 def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
-               max_new: int = 16, seed: int = 0, verbose: bool = True):
-    cfg = get_config(arch, reduced=True)
-    params = api.init_params(jax.random.PRNGKey(seed), cfg)
-    batcher = ContinuousBatcher(params, cfg, num_slots=slots, max_len=128)
-    rng = np.random.default_rng(seed)
-    t0 = time.time()
-    for i in range(requests):
-        prompt = rng.integers(3, cfg.vocab_size, size=rng.integers(4, 16))
-        batcher.submit(prompt.astype(np.int32), max_new_tokens=max_new)
-    finished = batcher.run_until_drained()
-    dt = time.time() - t0
-    total_tokens = sum(len(r.generated) for r in finished)
+               max_new: int = 8, rps: float = 0.0, workload: str = "medec",
+               max_batch: Optional[int] = None, workers: int = 2,
+               seed: int = 0, verbose: bool = True
+               ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
+    """End-to-end online serving demo on real JAX decoding.
+
+    Submits ``requests`` documents against the workload's pipeline —
+    open-loop Poisson pacing at ``rps`` requests/s (``rps=0``: all at
+    once) — drains, and returns ``(tickets, stats report)``. ``--slots``
+    sizes the continuous batcher's decode batch; ``max_batch`` (default
+    ``2 * slots``) sizes the server's coalescing window so one merged
+    chunk keeps the decode slots saturated with overflow queued.
+    """
+    from repro.engine.backend import JaxBackend  # jax import is heavy
+
+    w = WORKLOADS[workload]()
+    plan = pipeline_for(w, arch)
+    backend = JaxBackend(seed=seed, max_new_tokens=max_new,
+                         decode_slots=slots)
+    max_batch = max_batch or max(1, 2 * slots)
+    server = PipelineServer(plan, backend, max_inflight=4 * max_batch,
+                            max_batch=max_batch, batch_window_s=0.01,
+                            workers=workers, seed=seed)
+    docs = [dict(w.sample[i % len(w.sample)], id=f"r{i}")
+            for i in range(requests)]
+    rng = random.Random(seed)
+    t0 = time.monotonic()
+    server.start()
+    try:
+        tickets = []
+        for doc in docs:
+            if rps > 0:
+                time.sleep(rng.expovariate(rps))
+            tickets.append(server.submit(doc))
+        server.drain()
+    finally:
+        server.shutdown(close_backend=True)
+    report = server.report(elapsed_s=time.monotonic() - t0)
     if verbose:
-        for r in finished:
-            print(f"  req {r.uid}: prompt {len(r.prompt)} toks -> "
-                  f"{len(r.generated)} generated")
-        print(f"[serve] {len(finished)} requests, {total_tokens} tokens in "
-              f"{dt:.1f}s ({total_tokens/dt:.1f} tok/s)")
-    return finished
+        for tk in tickets:
+            n_out = len(tk.docs) if tk.docs is not None else 0
+            st = tk.stats
+            print(f"  req {tk.rid}: {n_out} output docs in "
+                  f"{tk.latency_s:.2f}s (queue {tk.queue_wait_s:.2f}s) "
+                  f"{st.in_tokens if st else 0} in-toks "
+                  f"{st.out_tokens if st else 0} out-toks")
+        lat = report["latency_s"]
+        print(f"[serve] {report['completed']}/{report['requests']} requests "
+              f"in {report['elapsed_s']:.1f}s "
+              f"({report['throughput_rps']:.2f} req/s) | "
+              f"latency p50 {lat['p50']:.2f}s p95 {lat['p95']:.2f}s | "
+              f"{report['batches']} batches "
+              f"(mean size {report['mean_batch_size']:.1f}) | "
+              f"{report['dispatch']['submit_calls']} submit calls")
+    return tickets, report
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-slot width of the continuous batcher")
+    ap.add_argument("--rps", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate (0: all at once)")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--workload", default="medec",
+                    choices=sorted(WORKLOADS))
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    serve_demo(args.arch, requests=args.requests, slots=args.slots)
+    serve_demo(args.arch, requests=args.requests, slots=args.slots,
+               rps=args.rps, max_new=args.max_new, workload=args.workload,
+               max_batch=args.max_batch, workers=args.workers,
+               seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -190,7 +190,8 @@ def opt_pspecs(cfg: ModelConfig, opt_shape, param_specs):
     # param_specs is a pytree of P congruent with params; map against the
     # opt_shape leaves (ShapeDtypeStructs)
     import jax as _jax
-    is_p = lambda x: isinstance(x, P)
+    def is_p(x):
+        return isinstance(x, P)
     vr = _jax.tree.map(vr_spec, param_specs, opt_shape.m, opt_shape.vr,
                        is_leaf=is_p)
     vc = _jax.tree.map(vc_spec, param_specs, opt_shape.m, opt_shape.vc,

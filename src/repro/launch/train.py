@@ -30,7 +30,6 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.loader import LMBatchLoader
 from repro.models import api
-from repro.training.adamw import init_opt_state
 from repro.training.train_step import TrainHyper, make_opt_init, make_train_step
 
 

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-import jax
-
 from repro.models.config import ModelConfig
 from repro.models import encdec, transformer
 

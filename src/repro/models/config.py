@@ -11,8 +11,8 @@ Configs are frozen dataclasses so they can be hashed into jit static args.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -183,7 +183,6 @@ class ModelConfig:
         if self.family == "ssm":
             per_layer = ssm + 2 * D
         elif self.family == "hybrid":
-            n_attn = (self.num_layers // max(self.hybrid_attn_every, 1)) or 1
             # shared attention block weights are counted once
             return (L * (ssm + 2 * D) + attn + mlp + 4 * D + emb)
         else:

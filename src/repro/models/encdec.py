@@ -13,7 +13,7 @@ systems behaviour (shapes, FLOPs, collectives) this framework studies.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig, layer_is_local
+from repro.models.config import ModelConfig
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M

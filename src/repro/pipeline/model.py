@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass, field, replace as _dc_replace
-from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
+from typing import Any, List, Mapping, Tuple, Union
 
 from repro.data.documents import content_hash
 from repro.pipeline.spec import (OpConfig, PipelineConfig, operator_spec,

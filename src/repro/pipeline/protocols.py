@@ -32,7 +32,11 @@ Optional backend attributes the executor consults:
 - ``fingerprint()``: stable identity of the backend's behaviour (e.g.
   ``("sim", seed, domain)``), used to key the call cache. Without it the
   cache falls back to the instance id — still correct, never shared
-  across instances.
+  across instances;
+- ``close()``: release long-lived substrate state (model params, a
+  persistent continuous batcher, connection pools). Long-running hosts
+  — ``repro.serving.pipeline_server.PipelineServer`` at shutdown — call
+  :func:`backend_close`, which invokes the hook when present.
 
 Backwards compatibility: any object exposing the v1 per-document surface
 (``run_map``/``run_filter``/``run_reduce``/``run_extract``/
@@ -191,6 +195,20 @@ def check_backend(backend: Any) -> Any:
             f"protocol: missing submit (v2) and legacy "
             f"{', '.join(missing)}")
     return LegacyBackendAdapter(backend)
+
+
+def backend_close(backend: Any) -> None:
+    """Invoke the backend's optional ``close()`` lifecycle hook.
+
+    Serving hosts own their backend for the lifetime of the process;
+    shutdown routes through here so substrates with real state to
+    release (persistent batchers, device buffers, connections) get the
+    callback while stateless backends need not define one. Adapter
+    wrappers forward via ``__getattr__``, so the inner hook still runs.
+    """
+    close = getattr(backend, "close", None)
+    if callable(close):
+        close()
 
 
 def batch_hint(backend: Any) -> int:

@@ -26,7 +26,7 @@ call — no edits to ``engine/executor.py`` or ``engine/operators.py``.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import (Any, Callable, Dict, FrozenSet, Iterator, List, Optional,
                     Tuple)
 

@@ -7,8 +7,7 @@ greedy by default; temperature sampling threads a PRNG key.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,6 @@ cost model consume.
 
 from __future__ import annotations
 
-from typing import Dict
-
 import jax
 
 from repro.models import api

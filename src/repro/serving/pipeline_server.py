@@ -1,0 +1,677 @@
+"""Online pipeline serving: concurrent requests over one optimized plan.
+
+``PipelineServer`` is the layer between a finished optimization run and
+live traffic: it takes the winning :class:`~repro.pipeline.Pipeline`
+(``SearchResult.best().pipeline``) plus a ``Backend`` and serves
+*independent single-document requests* against it under concurrency.
+
+Design:
+
+- **Admission queue.** ``submit`` grants one of ``max_inflight`` slots
+  (queued + executing requests). A saturated server applies
+  backpressure: blocking submit waits for a slot, ``block=False`` (or a
+  timeout) raises :class:`ServerSaturated` — the caller sheds load
+  instead of growing an unbounded queue.
+- **Micro-batching window.** The serving loop opens a
+  ``batch_window_s`` window when the first request of a batch arrives,
+  coalescing up to ``max_batch`` waiting requests. The batch is then
+  driven through ``Executor.run_session`` — the same merged-dispatch
+  machinery that batches sibling *search candidates* — so concurrent
+  requests' LLM calls at the same pipeline stage share
+  ``Backend.submit`` chunks: an 8-request batch over a 3-LLM-op plan
+  pays ~3 round trips, not 24. Results are bit-identical to per-request
+  execution (``run_session``'s contract), so coalescing is purely a
+  throughput/latency decision.
+- **SLO accounting.** Every request is timestamped at submit /
+  admission / batch start / completion; :class:`ServerStats` reports
+  p50/p95/p99 latency split into queue wait vs execute time, token and
+  cost totals, batch-size distribution, and SLO attainment against an
+  optional ``slo_s`` target.
+- **Graceful drain.** ``shutdown(drain=True)`` stops admission,
+  finishes every queued and in-flight request, then joins the loop
+  thread; ``drain=False`` cancels queued requests (their tickets carry
+  :class:`ServerClosed`) while the executing batch still completes.
+
+Determinism: throughput numbers on a wall clock are not reproducible,
+so the server also runs **virtual-time traces**: ``run_trace`` replays a
+seeded open-loop arrival schedule against a :class:`VirtualClock` that
+only a latency-modeled backend (:class:`VirtualLatencyBackend`)
+advances. Same arrivals + same seed -> bit-identical outputs *and*
+bit-identical latency/throughput stats, which is what
+``benchmarks/serve_bench.py`` and the CI bench-regression gate assert.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.data.documents import Dataset, Document
+from repro.engine.executor import CallCache, ExecutionStats, Executor
+from repro.engine.operators import validate_pipeline
+from repro.pipeline.model import PipelineLike, as_config
+from repro.pipeline.protocols import backend_close, batch_hint
+
+
+class ServerClosed(RuntimeError):
+    """The server no longer accepts (or cancelled) this request."""
+
+
+class ServerSaturated(RuntimeError):
+    """All ``max_inflight`` admission slots are taken (backpressure)."""
+
+
+# -- clocks -----------------------------------------------------------------
+
+
+class MonotonicClock:
+    """Wall-clock time source for live serving (``time.monotonic``)."""
+
+    virtual = False
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class VirtualClock:
+    """Deterministic logical clock for reproducible serving traces.
+
+    Nothing advances it implicitly: a latency-modeled backend charges
+    round-trip time via :meth:`advance`, and the trace driver jumps to
+    arrival times via :meth:`advance_to`. Two runs with the same
+    arrival schedule and backend therefore read identical timestamps.
+    """
+
+    virtual = True
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        with self._lock:
+            self._t += max(0.0, float(dt))
+            return self._t
+
+    def advance_to(self, t: float) -> float:
+        with self._lock:
+            self._t = max(self._t, float(t))
+            return self._t
+
+
+class VirtualLatencyBackend:
+    """Latency model over any deterministic backend.
+
+    Each ``submit`` advances a :class:`VirtualClock` by
+    ``base_s + per_request_s * len(batch)`` — the shape of a remote
+    batched LLM endpoint, where the per-call round trip dominates and
+    marginal requests are cheap — then delegates to the wrapped
+    backend, so *results* are bit-identical to the unwrapped substrate
+    while *time* is fully modeled. Round trips serialize on the clock
+    (``concurrent_submit = False``), keeping virtual timelines
+    single-valued.
+    """
+
+    concurrent_submit = False
+
+    def __init__(self, inner: Any, clock: VirtualClock, *,
+                 base_s: float = 0.05, per_request_s: float = 0.0,
+                 preferred_batch_size: Optional[int] = None):
+        self.inner = inner
+        self.clock = clock
+        self.base_s = base_s
+        self.per_request_s = per_request_s
+        self.preferred_batch_size = (
+            preferred_batch_size if preferred_batch_size is not None
+            else batch_hint(inner))
+
+    def __getattr__(self, name: str) -> Any:
+        # deterministic / fingerprint / usage_cost / run_* pass through
+        return getattr(self.inner, name)
+
+    def __repr__(self) -> str:
+        return (f"VirtualLatencyBackend({self.inner!r}, "
+                f"base={self.base_s}, per_req={self.per_request_s})")
+
+    def submit(self, requests):
+        self.clock.advance(self.base_s + self.per_request_s * len(requests))
+        return self.inner.submit(requests)
+
+
+# -- per-request accounting -------------------------------------------------
+
+
+@dataclass
+class ServeTicket:
+    """Handle for one submitted document: resolves to the pipeline's
+    output documents for it (``docs``), its :class:`ExecutionStats`, or
+    a per-request ``error`` — plus the timestamps SLO accounting uses.
+    """
+
+    rid: int
+    doc: Document
+    submitted_at: float
+    admitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    docs: Optional[Dataset] = None
+    stats: Optional[ExecutionStats] = None
+    error: Optional[Exception] = None
+    _event: threading.Event = field(default_factory=threading.Event,
+                                    repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> Dataset:
+        """Block until served; return the output documents or raise the
+        request's error."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not finished")
+        if self.error is not None:
+            raise self.error
+        return self.docs
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.started_at - self.submitted_at
+
+    @property
+    def execute_s(self) -> float:
+        return self.finished_at - self.started_at
+
+
+@dataclass(frozen=True)
+class RequestRecord:
+    """Immutable accounting row of one finished request."""
+
+    rid: int
+    submitted_at: float
+    started_at: float
+    finished_at: float
+    ok: bool
+    batch_size: int
+    llm_calls: int = 0
+    in_tokens: int = 0
+    out_tokens: int = 0
+    cost: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.started_at - self.submitted_at
+
+    @property
+    def execute_s(self) -> float:
+        return self.finished_at - self.started_at
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile over pre-sorted values (deterministic —
+    no interpolation, so virtual-clock traces reproduce exactly)."""
+    if not sorted_vals:
+        return 0.0
+    n = len(sorted_vals)
+    rank = max(1, math.ceil(q / 100.0 * n))  # 1-indexed nearest rank
+    return sorted_vals[min(rank, n) - 1]
+
+
+def _dist(vals: List[float]) -> Dict[str, float]:
+    s = sorted(vals)
+    return {
+        "p50": _percentile(s, 50), "p95": _percentile(s, 95),
+        "p99": _percentile(s, 99),
+        "mean": sum(s) / len(s) if s else 0.0,
+        "max": s[-1] if s else 0.0,
+    }
+
+
+class ServerStats:
+    """Aggregated serving accounting, reported as one dict.
+
+    Collects a :class:`RequestRecord` per finished request plus
+    admission outcomes (rejected / cancelled) and batch sizes;
+    :meth:`report` derives throughput, p50/p95/p99 of latency split
+    into queue wait vs execute time, token/cost totals, and SLO
+    attainment. All counters are guarded — the serving loop and caller
+    threads observe concurrently.
+    """
+
+    def __init__(self, opened_at: float = 0.0):
+        self.opened_at = opened_at
+        self.records: List[RequestRecord] = []
+        self.batch_sizes: List[int] = []
+        self.rejected = 0
+        self.cancelled = 0
+        self._lock = threading.Lock()
+
+    def observe(self, record: RequestRecord) -> None:
+        with self._lock:
+            self.records.append(record)
+
+    def observe_batch(self, size: int) -> None:
+        with self._lock:
+            self.batch_sizes.append(size)
+
+    def count_rejected(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def count_cancelled(self, n: int = 1) -> None:
+        with self._lock:
+            self.cancelled += n
+
+    def report(self, *, elapsed_s: Optional[float] = None,
+               slo_s: Optional[float] = None,
+               extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        with self._lock:
+            records = list(self.records)
+            batches = list(self.batch_sizes)
+            rejected, cancelled = self.rejected, self.cancelled
+        completed = [r for r in records if r.ok]
+        failed = [r for r in records if not r.ok]
+        if elapsed_s is None:
+            end = max((r.finished_at for r in records),
+                      default=self.opened_at)
+            elapsed_s = end - self.opened_at
+        lat = [r.latency_s for r in completed]
+        rep: Dict[str, Any] = {
+            "requests": len(records),
+            "completed": len(completed),
+            "failed": len(failed),
+            "rejected": rejected,
+            "cancelled": cancelled,
+            "batches": len(batches),
+            "mean_batch_size": (sum(batches) / len(batches)
+                                if batches else 0.0),
+            "max_batch_size": max(batches, default=0),
+            "elapsed_s": elapsed_s,
+            "throughput_rps": (len(completed) / elapsed_s
+                               if elapsed_s > 0 else 0.0),
+            "latency_s": _dist(lat),
+            "queue_wait_s": _dist([r.queue_wait_s for r in completed]),
+            "execute_s": _dist([r.execute_s for r in completed]),
+            "llm_calls": sum(r.llm_calls for r in records),
+            "in_tokens": sum(r.in_tokens for r in records),
+            "out_tokens": sum(r.out_tokens for r in records),
+            "cost": sum(r.cost for r in records),
+        }
+        if slo_s is not None:
+            violations = sum(1 for v in lat if v > slo_s)
+            rep["slo"] = {
+                "slo_s": slo_s,
+                "violations": violations,
+                "attainment": (1.0 - violations / len(lat)) if lat else 1.0,
+            }
+        if extra:
+            rep.update(extra)
+        return rep
+
+
+# -- the server -------------------------------------------------------------
+
+
+class PipelineServer:
+    """Serve one optimized pipeline to concurrent single-document
+    requests (see module docstring for the design).
+
+    Two drive modes share the same batch-execution path:
+
+    - **threaded** (live traffic): :meth:`start` spawns the serving
+      loop; :meth:`submit` returns a :class:`ServeTicket`;
+      :meth:`shutdown` drains. Timestamps come from ``clock``
+      (``MonotonicClock`` by default).
+    - **virtual-time trace** (benchmarks/tests): :meth:`run_trace`
+      replays an ``(arrival_time, doc)`` schedule deterministically
+      against a :class:`VirtualClock` shared with a latency-modeled
+      backend — no threads, reproducible stats.
+
+    ``workers`` is forwarded to ``Executor.run_session``: it caps how
+    many merged-stage chunks ride the backend concurrently, exactly as
+    in parallel search. ``max_batch=1`` degenerates to one-request-at-
+    a-time execution — the baseline the serving benchmark beats.
+    """
+
+    def __init__(self, pipeline: PipelineLike, backend: Any, *,
+                 max_inflight: int = 32, max_batch: int = 8,
+                 batch_window_s: float = 0.005, workers: int = 4,
+                 seed: int = 0, fail_prob: float = 0.0,
+                 slo_s: Optional[float] = None, clock: Any = None,
+                 executor: Optional[Executor] = None,
+                 call_cache: Optional[CallCache] = None):
+        self._config = as_config(pipeline)
+        validate_pipeline(self._config)
+        if max_batch > max_inflight:
+            raise ValueError(f"max_batch={max_batch} exceeds "
+                             f"max_inflight={max_inflight}")
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.executor = executor if executor is not None else Executor(
+            backend, seed=seed, fail_prob=fail_prob, call_cache=call_cache)
+        self.max_inflight = max(1, max_inflight)
+        self.max_batch = max(1, max_batch)
+        self.batch_window_s = max(0.0, batch_window_s)
+        self.workers = max(1, workers)
+        self.slo_s = slo_s
+        self.stats = ServerStats(opened_at=self.clock.now())
+        self._cond = threading.Condition()
+        self._queue: Deque[ServeTicket] = deque()
+        self._inflight = 0
+        self._closed = False
+        self._drain_on_close = True
+        self._thread: Optional[threading.Thread] = None
+        self._rid = 0
+
+    # -- shared batch execution ---------------------------------------------
+
+    def _make_ticket(self, doc: Document, submitted_at: float) -> ServeTicket:
+        self._rid += 1
+        return ServeTicket(rid=self._rid, doc=doc, submitted_at=submitted_at)
+
+    def _execute_batch(self, batch: List[ServeTicket]) -> None:
+        """Run one coalesced batch through a cross-pipeline dispatch
+        session: every request is an independent single-document job, so
+        sibling requests' stage batches merge into shared
+        ``Backend.submit`` chunks while outputs stay bit-identical to
+        per-request execution."""
+        start = self.clock.now()
+        for tk in batch:
+            tk.started_at = start
+        jobs: List[Tuple[Any, Dataset]] = [(self._config, [tk.doc])
+                                           for tk in batch]
+        workers = self.workers if len(batch) > 1 else 1
+        results = self.executor.run_session(jobs, workers=workers,
+                                            capture_errors=True)
+        end = self.clock.now()
+        self.stats.observe_batch(len(batch))
+        for tk, res in zip(batch, results):
+            tk.docs = res.docs
+            tk.stats = res.stats
+            tk.error = res.error
+            tk.finished_at = end
+            st = res.stats or ExecutionStats()
+            self.stats.observe(RequestRecord(
+                rid=tk.rid, submitted_at=tk.submitted_at,
+                started_at=tk.started_at, finished_at=tk.finished_at,
+                ok=res.error is None, batch_size=len(batch),
+                llm_calls=st.llm_calls, in_tokens=st.in_tokens,
+                out_tokens=st.out_tokens, cost=st.cost))
+            tk._event.set()
+
+    # -- threaded mode -------------------------------------------------------
+
+    def start(self) -> "PipelineServer":
+        with self._cond:
+            if self._closed:
+                raise ServerClosed("server already shut down")
+            if self._thread is not None:
+                return self
+            # the throughput clock starts when serving starts, not when
+            # the server object was built
+            self.stats.opened_at = self.clock.now()
+            self._thread = threading.Thread(target=self._loop,
+                                            name="repro-pipeline-server",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def __enter__(self) -> "PipelineServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    def submit(self, doc: Document, *, block: bool = True,
+               timeout: Optional[float] = None) -> ServeTicket:
+        """Admit one document. Blocks while all ``max_inflight`` slots
+        are taken (bounded by ``timeout``); ``block=False`` raises
+        :class:`ServerSaturated` immediately instead — admission
+        pressure is the caller's signal to shed load."""
+        if self._thread is None:
+            raise RuntimeError("server not started (call start() or use "
+                               "run_trace for virtual-time serving)")
+        submitted = self.clock.now()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                if self._closed:
+                    raise ServerClosed("server is shutting down")
+                if self._inflight < self.max_inflight:
+                    break
+                if not block:
+                    self.stats.count_rejected()
+                    raise ServerSaturated(
+                        f"{self.max_inflight} requests in flight")
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    self.stats.count_rejected()
+                    raise ServerSaturated(
+                        f"no admission slot within {timeout}s")
+                self._cond.wait(remaining)
+            tk = self._make_ticket(doc, submitted)
+            tk.admitted_at = self.clock.now()
+            self._inflight += 1
+            self._queue.append(tk)
+            self._cond.notify_all()
+        return tk
+
+    def serve(self, docs: Sequence[Document],
+              timeout: Optional[float] = None) -> List[ServeTicket]:
+        """Convenience: submit every document (blocking admission) and
+        wait for all tickets."""
+        tickets = [self.submit(d) for d in docs]
+        for tk in tickets:
+            tk.wait(timeout)
+        return tickets
+
+    def _cancel_queued_locked(self) -> bool:
+        """Under ``_cond``: if a non-drain shutdown was requested,
+        resolve every queued ticket with :class:`ServerClosed` and
+        report True (the loop must exit)."""
+        if not (self._closed and not self._drain_on_close):
+            return False
+        cancelled = list(self._queue)
+        self._queue.clear()
+        self._inflight -= len(cancelled)
+        self.stats.count_cancelled(len(cancelled))
+        self._cond.notify_all()
+        now = self.clock.now()
+        for tk in cancelled:
+            # stamp the cancellation time so the latency properties
+            # measure time-to-resolution instead of going negative
+            tk.started_at = now
+            tk.finished_at = now
+            tk.error = ServerClosed("cancelled at shutdown")
+            tk._event.set()
+        return True
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed:
+                    self._cond.wait()
+                if not self._queue:
+                    break  # closed and nothing left to serve
+                if self._cancel_queued_locked():
+                    break
+                # micro-batch window: the first waiting request opens it;
+                # more requests coalesce until the window closes or the
+                # batch fills (shutdown closes it early)
+                if self.batch_window_s > 0 and \
+                        len(self._queue) < self.max_batch:
+                    close_at = time.monotonic() + self.batch_window_s
+                    while len(self._queue) < self.max_batch and \
+                            not self._closed:
+                        left = close_at - time.monotonic()
+                        if left <= 0:
+                            break
+                        self._cond.wait(left)
+                # a non-drain shutdown that arrived during the window
+                # cancels the batch we were about to form
+                if self._cancel_queued_locked():
+                    break
+                take = min(self.max_batch, len(self._queue))
+                batch = [self._queue.popleft() for _ in range(take)]
+            try:
+                self._execute_batch(batch)
+            finally:
+                with self._cond:
+                    self._inflight -= len(batch)
+                    self._cond.notify_all()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until no request is queued or executing."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._inflight > 0:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cond.wait(remaining)
+        return True
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None,
+                 close_backend: bool = False) -> bool:
+        """Stop admission and stop the serving loop. ``drain=True``
+        serves every queued request first; ``drain=False`` cancels the
+        queue (tickets resolve with :class:`ServerClosed`) — the batch
+        already executing always completes either way.
+
+        Returns whether the serving loop actually stopped within
+        ``timeout``. A False return means a batch is still executing:
+        the backend is then NOT closed (``close_backend`` only applies
+        to a stopped loop — closing under an in-flight batch would pull
+        live state out from under it); call again to finish.
+        """
+        with self._cond:
+            self._closed = True
+            self._drain_on_close = drain
+            self._cond.notify_all()
+            thread = self._thread
+        stopped = True
+        if thread is not None:
+            thread.join(timeout)
+            stopped = not thread.is_alive()
+        if close_backend and stopped:
+            backend_close(self.executor.backend)
+        return stopped
+
+    # -- virtual-time trace mode ---------------------------------------------
+
+    def run_trace(self, arrivals: Sequence[Tuple[float, Document]]
+                  ) -> List[ServeTicket]:
+        """Replay an open-loop arrival schedule in virtual time.
+
+        ``arrivals`` is a list of ``(arrival_time, doc)``. The
+        simulation reproduces the threaded server's semantics — bounded
+        admission, micro-batch window, serial batch execution — but all
+        waiting is a clock jump and all execution time is whatever the
+        latency-modeled backend charges, so the resulting tickets and
+        :class:`ServerStats` are bit-for-bit reproducible. Requires a
+        :class:`VirtualClock` (shared with the backend); refuses to run
+        next to a live serving loop.
+        """
+        if self._thread is not None:
+            raise RuntimeError("run_trace needs exclusive use of the "
+                               "server (threaded loop is running)")
+        if not getattr(self.clock, "virtual", False):
+            raise TypeError("run_trace requires a VirtualClock (pass "
+                            "clock=VirtualClock() and share it with a "
+                            "VirtualLatencyBackend)")
+        clock = self.clock
+        pending: Deque[Tuple[float, Document]] = deque(
+            sorted(((float(t), d) for t, d in arrivals),
+                   key=lambda td: td[0]))
+        waiting: Deque[ServeTicket] = deque()  # arrived, no slot free
+        queue: Deque[ServeTicket] = deque()    # admitted
+        tickets: List[ServeTicket] = []
+        inflight = 0
+
+        def admit(tk: ServeTicket, at: float) -> None:
+            nonlocal inflight
+            tk.admitted_at = at
+            inflight += 1
+            queue.append(tk)
+
+        def intake(until: float) -> None:
+            """Arrivals due by ``until`` enter the admission flow: take
+            a free slot at their arrival time or park in ``waiting``."""
+            while pending and pending[0][0] <= until:
+                t, doc = pending.popleft()
+                tk = self._make_ticket(doc, submitted_at=t)
+                tickets.append(tk)
+                if inflight < self.max_inflight:
+                    admit(tk, at=t)
+                else:
+                    waiting.append(tk)
+
+        def drain_waiting() -> None:
+            while waiting and inflight < self.max_inflight:
+                admit(waiting.popleft(), at=clock.now())
+
+        while pending or waiting or queue:
+            if not queue and not waiting:
+                # idle: jump to the next arrival
+                clock.advance_to(pending[0][0])
+            intake(clock.now())
+            drain_waiting()
+            if not queue:
+                continue
+            # the batch window opens when the (serial) serving loop
+            # picks the queue up — for a backlogged queue that is the
+            # previous batch's finish time, not the requests'
+            # mid-execution admission times — and in-window arrivals
+            # join until the batch fills
+            window_open = max(queue[0].admitted_at, clock.now())
+            window_close = window_open + self.batch_window_s
+            while (len(queue) < self.max_batch
+                   and inflight < self.max_inflight
+                   and pending and pending[0][0] <= window_close):
+                t, doc = pending.popleft()
+                clock.advance_to(t)
+                tk = self._make_ticket(doc, submitted_at=t)
+                tickets.append(tk)
+                admit(tk, at=t)
+            if len(queue) < self.max_batch:
+                # a live server cannot know no further request is coming:
+                # it always waits the window out
+                clock.advance_to(window_close)
+            take = min(self.max_batch, len(queue))
+            batch = [queue.popleft() for _ in range(take)]
+            self._execute_batch(batch)  # the backend advances the clock
+            # arrivals during execution found the admission queue open;
+            # the batch's slots free only at its finish time
+            intake(clock.now())
+            inflight -= len(batch)
+            drain_waiting()
+        return tickets
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self, *, elapsed_s: Optional[float] = None) -> Dict[str, Any]:
+        """The :class:`ServerStats` report plus the executor's merged-
+        dispatch counters (submit calls, merged stages/requests) — the
+        coalescing evidence next to the latency evidence."""
+        return self.stats.report(
+            elapsed_s=elapsed_s, slo_s=self.slo_s,
+            extra={"dispatch": dict(self.executor.dispatch_stats)})

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +95,7 @@ class ContinuousBatcher:
     def _uniform_len(self) -> int:
         """The batch cache tracks one length; slots prefix-pad to align.
         We conservatively use the max active length."""
-        return max([l for l in self._slot_len], default=0)
+        return max(self._slot_len, default=0)
 
     def step(self) -> int:
         """One scheduler tick: admit, decode one token for every active

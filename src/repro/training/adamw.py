@@ -21,7 +21,8 @@ class AdamWState(NamedTuple):
 
 
 def init_opt_state(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),

@@ -12,7 +12,7 @@ Distributed-optimization features (per DESIGN.md):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -5,11 +5,10 @@ scoreability."""
 import pytest
 
 from repro.core.agent import AgentContext
-from repro.core.directives import DIRECTIVES, applicable
+from repro.core.directives import DIRECTIVES
 from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor
-from repro.engine.operators import (describe, output_fields,
-                                    validate_pipeline)
+from repro.engine.operators import output_fields, validate_pipeline
 from repro.engine.workloads import WORKLOADS
 
 WLS = {name: ctor() for name, ctor in WORKLOADS.items()}

@@ -2,7 +2,7 @@
 
 import pytest
 
-from repro.engine.backend import SimBackend, Usage
+from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor, TransientLLMError
 from repro.engine.operators import make_pipeline, validate_pipeline, \
     PipelineValidationError
@@ -113,7 +113,6 @@ def test_workload_scorers_bounds():
     for name, ctor in WORKLOADS.items():
         w = ctor()
         assert w.score([], w.sample) == 0.0
-        docs = w.sample
         assert len(w.sample) == 40 and len(w.test) == 100
 
 

@@ -1,0 +1,331 @@
+"""Online pipeline serving: PipelineServer semantics and accounting.
+
+The contracts under test:
+
+- **Coalescing is invisible.** Micro-batched serving through
+  ``Executor.run_session`` returns bit-identical per-document outputs
+  and usage accounting to one-request-at-a-time execution — and to a
+  plain ``Executor.run`` on each document.
+- **SLO accounting is exact.** Under a ``VirtualClock`` + latency-
+  modeled backend, every timestamp (queue wait, execute time, latency
+  percentiles, throughput) is a deterministic arithmetic consequence of
+  the arrival schedule — asserted to the float.
+- **Lifecycle.** Graceful drain serves every queued request;
+  non-drain shutdown cancels the queue but finishes the in-flight
+  batch; a saturated admission queue rejects (``block=False``) or
+  blocks callers; one poisoned request fails alone.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.workloads import WORKLOADS
+from repro.serving.pipeline_server import (PipelineServer, ServerClosed,
+                                           ServerSaturated, VirtualClock,
+                                           VirtualLatencyBackend)
+
+CUAD = WORKLOADS["cuad"]()
+MEDEC = WORKLOADS["medec"]()
+
+
+def _docs(workload, n, prefix="r"):
+    # distinct ids so requests are distinct documents (no call-cache
+    # aliasing between "different" requests carrying the same doc)
+    return [dict(workload.sample[i % len(workload.sample)],
+                 id=f"{prefix}{i}") for i in range(n)]
+
+
+def _usage_fp(ticket):
+    st = ticket.stats
+    return (st.cost, st.llm_calls, st.in_tokens, st.out_tokens,
+            st.latency_s)
+
+
+def _trace_server(workload, *, max_batch, workers, base_s=0.05,
+                  window_s=0.02, max_inflight=32, slo_s=None):
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        SimBackend(seed=0, domain=workload.domain), clock, base_s=base_s,
+        preferred_batch_size=64)
+    server = PipelineServer(workload.initial_pipeline, backend,
+                            max_inflight=max_inflight, max_batch=max_batch,
+                            batch_window_s=window_s, workers=workers,
+                            clock=clock, slo_s=slo_s)
+    return server
+
+
+# -- equivalence ---------------------------------------------------------------
+
+
+def test_coalesced_matches_sequential_and_direct_run():
+    docs = _docs(CUAD, 12)
+    arrivals = [(0.005 * i, d) for i, d in enumerate(docs)]
+
+    coal = _trace_server(CUAD, max_batch=6, workers=3)
+    tks_c = coal.run_trace(arrivals)
+    seq = _trace_server(CUAD, max_batch=1, workers=1)
+    tks_s = seq.run_trace(arrivals)
+
+    assert [t.doc["id"] for t in tks_c] == [t.doc["id"] for t in tks_s]
+    for tc, ts in zip(tks_c, tks_s):
+        assert tc.error is None and ts.error is None
+        assert tc.docs == ts.docs
+        assert _usage_fp(tc) == _usage_fp(ts)
+
+    # ...and both match a plain Executor.run per document
+    ex = Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0)
+    for tc in tks_c:
+        out, stats = ex.run(CUAD.initial_pipeline, [tc.doc])
+        assert tc.docs == out
+        assert _usage_fp(tc) == (stats.cost, stats.llm_calls,
+                                 stats.in_tokens, stats.out_tokens,
+                                 stats.latency_s)
+
+    # coalescing actually coalesced: fewer submit round trips
+    assert coal.executor.dispatch_stats["submit_calls"] < \
+        seq.executor.dispatch_stats["submit_calls"]
+    assert coal.executor.dispatch_stats["merged_stages"] > 0
+
+
+def test_trace_is_reproducible():
+    docs = _docs(CUAD, 8)
+    arrivals = [(0.01 * i, d) for i, d in enumerate(docs)]
+    reports = []
+    for _ in range(2):
+        srv = _trace_server(CUAD, max_batch=4, workers=2, slo_s=1.0)
+        srv.run_trace(arrivals)
+        reports.append(srv.report())
+    assert reports[0] == reports[1]
+
+
+# -- SLO accounting under the virtual clock -----------------------------------
+
+
+def test_slo_stats_exact_under_virtual_clock():
+    docs = _docs(MEDEC, 3)
+    srv = _trace_server(MEDEC, max_batch=4, workers=2, base_s=0.1,
+                        window_s=0.05, slo_s=0.14)
+    # r0 opens the window at t=0, r1 joins in-window, r2 arrives after
+    # the first batch started and is served alone
+    tks = srv.run_trace([(0.0, docs[0]), (0.02, docs[1]), (0.2, docs[2])])
+    r0, r1, r2 = tks
+
+    # batch 1: window 0 -> 0.05, one merged submit of 0.1s -> done 0.15
+    assert r0.started_at == pytest.approx(0.05)
+    assert r0.finished_at == pytest.approx(0.15)
+    assert r0.queue_wait_s == pytest.approx(0.05)
+    assert r0.execute_s == pytest.approx(0.1)
+    assert r0.latency_s == pytest.approx(0.15)
+    assert r1.queue_wait_s == pytest.approx(0.03)
+    assert r1.latency_s == pytest.approx(0.13)
+    # batch 2: idle jump to 0.2, window to 0.25, done 0.35
+    assert r2.started_at == pytest.approx(0.25)
+    assert r2.finished_at == pytest.approx(0.35)
+    assert r2.latency_s == pytest.approx(0.15)
+
+    rep = srv.report()
+    assert rep["requests"] == rep["completed"] == 3
+    assert rep["batches"] == 2
+    assert rep["mean_batch_size"] == pytest.approx(1.5)
+    assert rep["elapsed_s"] == pytest.approx(0.35)
+    assert rep["throughput_rps"] == pytest.approx(3 / 0.35)
+    assert rep["latency_s"]["p50"] == pytest.approx(0.15)
+    assert rep["latency_s"]["p99"] == pytest.approx(0.15)
+    assert rep["queue_wait_s"]["p50"] == pytest.approx(0.05)
+    assert rep["execute_s"]["max"] == pytest.approx(0.1)
+    # SLO 140ms: the two 150ms requests violate
+    assert rep["slo"]["violations"] == 2
+    assert rep["slo"]["attainment"] == pytest.approx(1 / 3)
+    # tokens/cost roll up from per-request ExecutionStats
+    assert rep["in_tokens"] == sum(t.stats.in_tokens for t in tks)
+    assert rep["cost"] == pytest.approx(sum(t.stats.cost for t in tks))
+
+
+def test_admission_cap_delays_in_trace():
+    """max_inflight binds: a request arriving while both slots are
+    executing is admitted only when the batch retires."""
+    docs = _docs(MEDEC, 3)
+    srv = _trace_server(MEDEC, max_batch=2, workers=2, base_s=0.1,
+                        window_s=0.0, max_inflight=2)
+    tks = srv.run_trace([(0.0, docs[0]), (0.0, docs[1]), (0.01, docs[2])])
+    r2 = tks[2]
+    assert r2.submitted_at == pytest.approx(0.01)
+    assert r2.admitted_at == pytest.approx(0.1)   # slot freed at 0.1
+    assert r2.started_at == pytest.approx(0.1)
+    assert r2.latency_s == pytest.approx(0.19)
+    assert all(t.error is None for t in tks)
+
+
+def test_run_trace_requires_virtual_clock():
+    backend = SimBackend(seed=0, domain=MEDEC.domain)
+    srv = PipelineServer(MEDEC.initial_pipeline, backend)
+    with pytest.raises(TypeError, match="VirtualClock"):
+        srv.run_trace([(0.0, MEDEC.sample[0])])
+
+
+# -- lifecycle: drain, cancel, backpressure ------------------------------------
+
+
+class SlowBackend(SimBackend):
+    """SimBackend plus a real per-submit delay (threaded-mode tests)."""
+
+    def __init__(self, *args, delay_s=0.02, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.delay_s = delay_s
+
+    def submit(self, requests):
+        time.sleep(self.delay_s)
+        return super().submit(requests)
+
+
+class GateBackend(SimBackend):
+    """Blocks every submit until the test releases the gate."""
+
+    concurrent_submit = False
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def submit(self, requests):
+        self.entered.set()
+        assert self.gate.wait(10), "test never released the gate"
+        return super().submit(requests)
+
+
+def test_drain_on_shutdown_serves_inflight_and_queued():
+    docs = _docs(MEDEC, 8)
+    srv = PipelineServer(MEDEC.initial_pipeline,
+                         SlowBackend(seed=0, domain=MEDEC.domain),
+                         max_inflight=8, max_batch=2, batch_window_s=0.001,
+                         workers=2)
+    srv.start()
+    tickets = [srv.submit(d) for d in docs]
+    # most requests are still queued or executing at shutdown time
+    srv.shutdown(drain=True)
+    assert all(tk.done for tk in tickets)
+    assert all(tk.error is None and tk.docs for tk in tickets)
+    rep = srv.report()
+    assert rep["completed"] == 8 and rep["cancelled"] == 0
+    with pytest.raises(ServerClosed):
+        srv.submit(docs[0])
+
+
+def test_shutdown_without_drain_cancels_queue():
+    be = GateBackend(seed=0, domain=MEDEC.domain)
+    docs = _docs(MEDEC, 4)
+    srv = PipelineServer(MEDEC.initial_pipeline, be, max_inflight=8,
+                         max_batch=2, batch_window_s=0.5, workers=2)
+    srv.start()
+    tickets = [srv.submit(d) for d in docs]
+    assert be.entered.wait(10)  # first batch of 2 is executing
+    stopper = threading.Thread(
+        target=lambda: srv.shutdown(drain=False))
+    stopper.start()
+    be.gate.set()
+    stopper.join(10)
+    assert not stopper.is_alive()
+    for tk in tickets[:2]:       # the in-flight batch still completed
+        assert tk.error is None and tk.docs
+    for tk in tickets[2:]:       # the queued requests were cancelled
+        assert isinstance(tk.error, ServerClosed)
+        with pytest.raises(ServerClosed):
+            tk.result(timeout=1)
+    rep = srv.report()
+    assert rep["completed"] == 2 and rep["cancelled"] == 2
+
+
+def test_shutdown_during_window_cancels_batch_being_formed():
+    """A non-drain shutdown arriving while the loop is waiting out the
+    micro-batch window cancels the queued requests instead of executing
+    them (the 'stop now' contract)."""
+    docs = _docs(MEDEC, 3)
+    srv = PipelineServer(MEDEC.initial_pipeline,
+                         SimBackend(seed=0, domain=MEDEC.domain),
+                         max_inflight=8, max_batch=8, batch_window_s=1.0,
+                         workers=2)
+    srv.start()
+    tickets = [srv.submit(d) for d in docs]
+    time.sleep(0.05)  # loop is now parked in the window wait
+    srv.shutdown(drain=False, timeout=10)
+    assert all(isinstance(tk.error, ServerClosed) for tk in tickets)
+    rep = srv.report()
+    assert rep["completed"] == 0 and rep["cancelled"] == 3
+
+
+def test_admission_backpressure_threaded():
+    be = GateBackend(seed=0, domain=MEDEC.domain)
+    docs = _docs(MEDEC, 3)
+    srv = PipelineServer(MEDEC.initial_pipeline, be, max_inflight=2,
+                         max_batch=2, batch_window_s=0.001, workers=2)
+    srv.start()
+    t0, t1 = srv.submit(docs[0]), srv.submit(docs[1])
+    assert be.entered.wait(10)
+    # both slots taken: non-blocking and bounded-wait submits shed load
+    with pytest.raises(ServerSaturated):
+        srv.submit(docs[2], block=False)
+    with pytest.raises(ServerSaturated):
+        srv.submit(docs[2], timeout=0.05)
+    be.gate.set()
+    assert t0.result(timeout=10) and t1.result(timeout=10)
+    t2 = srv.submit(docs[2])     # slots free again: blocking submit works
+    assert t2.result(timeout=10)
+    srv.shutdown()
+    rep = srv.report()
+    assert rep["rejected"] == 2 and rep["completed"] == 3
+
+
+# -- per-request failure isolation ---------------------------------------------
+
+
+class PoisonBackend(SimBackend):
+    """Fails any request whose document carries ``_poison`` — as a
+    per-request OpResult error, the way a real endpoint rejects one
+    item of a batch."""
+
+    def submit(self, requests):
+        from repro.pipeline.protocols import OpResult
+        out = super().submit(requests)
+        for i, req in enumerate(requests):
+            doc = req.doc if req.doc is not None else {}
+            if doc.get("_poison"):
+                out[i] = OpResult(error=ValueError("poisoned request"))
+        return out
+
+
+def test_poisoned_request_fails_alone():
+    docs = _docs(MEDEC, 4)
+    docs[1] = dict(docs[1], _poison=True)
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        PoisonBackend(seed=0, domain=MEDEC.domain), clock, base_s=0.01)
+    srv = PipelineServer(MEDEC.initial_pipeline, backend, max_batch=4,
+                         batch_window_s=0.05, workers=2, clock=clock)
+    tks = srv.run_trace([(0.0, d) for d in docs])
+    assert isinstance(tks[1].error, ValueError)
+    for tk in (tks[0], tks[2], tks[3]):
+        assert tk.error is None and tk.docs
+    rep = srv.report()
+    assert rep["completed"] == 3 and rep["failed"] == 1
+
+
+def test_poisoned_request_fails_alone_per_request_mode():
+    """Error isolation must also hold for single-job batches
+    (max_batch=1 — the inline run_session path)."""
+    docs = _docs(MEDEC, 3)
+    docs[1] = dict(docs[1], _poison=True)
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        PoisonBackend(seed=0, domain=MEDEC.domain), clock, base_s=0.01)
+    srv = PipelineServer(MEDEC.initial_pipeline, backend, max_batch=1,
+                         batch_window_s=0.0, workers=1, clock=clock)
+    tks = srv.run_trace([(0.0, d) for d in docs])
+    assert isinstance(tks[1].error, ValueError)
+    assert tks[0].error is None and tks[2].error is None
+    rep = srv.report()
+    assert rep["completed"] == 2 and rep["failed"] == 1
