@@ -229,6 +229,12 @@ class SessionResult:
     error: Optional[Exception] = None
 
 
+class SessionAborted(RuntimeError):
+    """The dispatch-session coordinator died before answering this job's
+    stage barrier — a placeholder; the coordinator's own exception is the
+    root cause and replaces this one in ``SessionResult.error``."""
+
+
 @dataclass
 class _SessionJob:
     """One pipeline evaluation inside a dispatch session. Doubles as the
@@ -261,7 +267,7 @@ class _SessionJob:
         at the stage barrier and wait for the coordinator's answer."""
         with self.cond:
             if self.aborted:
-                raise RuntimeError("dispatch session aborted")
+                raise SessionAborted("dispatch session aborted")
             self.posted = (requests, stats)
             self.reply = None
             self.reply_exc = None
@@ -270,7 +276,7 @@ class _SessionJob:
                 self.cond.wait()
             if self.aborted:
                 self.posted = None
-                raise RuntimeError("dispatch session aborted")
+                raise SessionAborted("dispatch session aborted")
             if self.reply_exc is not None:
                 exc = self.reply_exc
                 self.reply_exc = None
@@ -505,10 +511,13 @@ class Executor:
         Per-job transient failures come back as ``SessionResult.error``
         (the sibling jobs are unaffected); non-transient errors re-raise
         in the caller after the group drains, exactly as ``run`` would —
-        unless ``capture_errors`` is set, in which case *every* per-job
-        failure is returned as ``SessionResult.error`` so one bad
-        request cannot take down its siblings (the serving layer's
-        isolation contract: ``repro.serving.pipeline_server``).
+        unless ``capture_errors`` is set, in which case *every* failure —
+        per-job ones and coordinator-level ones (``Backend.submit``
+        raising on the coordinator thread takes its whole group down) —
+        is returned as ``SessionResult.error`` so one bad request or one
+        dead round trip cannot take down its siblings or the caller (the
+        serving layer's isolation contract:
+        ``repro.serving.pipeline_server``).
         """
         configs = []
         for pipeline, _ in jobs:
@@ -536,8 +545,22 @@ class Executor:
                 if len(group) == 1:
                     self._run_job_inline(group[0],
                                          capture_errors=capture_errors)
-                else:
+                    continue
+                try:
                     self._run_group(group)
+                except Exception as e:  # noqa: BLE001 — charged per job
+                    if not capture_errors:
+                        raise
+                    # the coordinator died (e.g. Backend.submit raised a
+                    # non-transient error): completed jobs keep their
+                    # results, every job the abort took down carries the
+                    # root cause instead of the SessionAborted
+                    # placeholder, and later groups still run
+                    for job in group:
+                        if job.out is None and (
+                                job.exc is None
+                                or isinstance(job.exc, SessionAborted)):
+                            job.exc = e
         finally:
             self._session_concurrency = 1
         out = []

@@ -51,7 +51,8 @@ from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.data.documents import Dataset, Document
-from repro.engine.executor import CallCache, ExecutionStats, Executor
+from repro.engine.executor import (CallCache, ExecutionStats, Executor,
+                                   SessionResult)
 from repro.engine.operators import validate_pipeline
 from repro.pipeline.model import PipelineLike, as_config
 from repro.pipeline.protocols import backend_close, batch_hint
@@ -378,6 +379,11 @@ class PipelineServer:
         self._drain_on_close = True
         self._thread: Optional[threading.Thread] = None
         self._rid = 0
+        # dispatch counters already on the executor when this serving
+        # episode opened; report() subtracts them so a shared or reused
+        # executor doesn't leak foreign submit counts into the report
+        self._dispatch_base: Dict[str, int] = dict(
+            self.executor.dispatch_stats)
 
     # -- shared batch execution ---------------------------------------------
 
@@ -397,8 +403,17 @@ class PipelineServer:
         jobs: List[Tuple[Any, Dataset]] = [(self._config, [tk.doc])
                                            for tk in batch]
         workers = self.workers if len(batch) > 1 else 1
-        results = self.executor.run_session(jobs, workers=workers,
-                                            capture_errors=True)
+        try:
+            results = self.executor.run_session(jobs, workers=workers,
+                                                capture_errors=True)
+        except Exception as e:  # noqa: BLE001 — resolved per ticket
+            # run_session(capture_errors=True) converts backend and
+            # coordinator failures into per-job errors; this net is the
+            # last resort so that *no* exception can leave tickets
+            # unresolved (result() hanging forever) or kill the serving
+            # loop thread
+            results = [SessionResult(docs=None, stats=ExecutionStats(),
+                                     error=e) for _ in batch]
         end = self.clock.now()
         self.stats.observe_batch(len(batch))
         for tk, res in zip(batch, results):
@@ -418,6 +433,14 @@ class PipelineServer:
     # -- threaded mode -------------------------------------------------------
 
     def start(self) -> "PipelineServer":
+        # the threaded loop waits out the micro-batch window and submit
+        # deadlines on time.monotonic(); a VirtualClock would silently
+        # mix virtual timestamps with wall-clock waits — fail fast and
+        # point at the trace mode instead (mirrors run_trace's guard)
+        if getattr(self.clock, "virtual", False):
+            raise TypeError("threaded serving requires a real-time clock "
+                            "(MonotonicClock); use run_trace for "
+                            "VirtualClock serving")
         with self._cond:
             if self._closed:
                 raise ServerClosed("server already shut down")
@@ -426,6 +449,7 @@ class PipelineServer:
             # the throughput clock starts when serving starts, not when
             # the server object was built
             self.stats.opened_at = self.clock.now()
+            self._dispatch_base = dict(self.executor.dispatch_stats)
             self._thread = threading.Thread(target=self._loop,
                                             name="repro-pipeline-server",
                                             daemon=True)
@@ -582,14 +606,24 @@ class PipelineServer:
                   ) -> List[ServeTicket]:
         """Replay an open-loop arrival schedule in virtual time.
 
-        ``arrivals`` is a list of ``(arrival_time, doc)``. The
-        simulation reproduces the threaded server's semantics — bounded
-        admission, micro-batch window, serial batch execution — but all
-        waiting is a clock jump and all execution time is whatever the
+        ``arrivals`` is a list of ``(arrival_time, doc)``; arrival times
+        are relative to the trace's start (the shared clock's position
+        at the call), so schedules can always start at 0. The simulation
+        reproduces the threaded server's semantics — bounded admission,
+        micro-batch window, serial batch execution — but all waiting is
+        a clock jump and all execution time is whatever the
         latency-modeled backend charges, so the resulting tickets and
         :class:`ServerStats` are bit-for-bit reproducible. Requires a
         :class:`VirtualClock` (shared with the backend); refuses to run
         next to a live serving loop.
+
+        Traces on one server share the executor's ``CallCache``: with a
+        deterministic backend, requests already answered in an earlier
+        trace are served from cache without touching ``Backend.submit``
+        — i.e. without being charged model latency. That measures a
+        warm-cache server, which is what re-tracing one server means;
+        for fresh-cache numbers build a fresh server per trace (as
+        ``benchmarks/serve_bench.py`` does).
         """
         if self._thread is not None:
             raise RuntimeError("run_trace needs exclusive use of the "
@@ -598,9 +632,19 @@ class PipelineServer:
             raise TypeError("run_trace requires a VirtualClock (pass "
                             "clock=VirtualClock() and share it with a "
                             "VirtualLatencyBackend)")
+        # each trace is a fresh serving episode: stats, request ids, the
+        # dispatch-counter baseline, and the time origin restart so
+        # back-to-back traces report independently instead of
+        # accumulating the prior trace's records, submits, or elapsed
+        # clock into this trace's numbers (call-cache state deliberately
+        # carries over — see above)
         clock = self.clock
+        origin = clock.now()
+        self.stats = ServerStats(opened_at=origin)
+        self._rid = 0
+        self._dispatch_base = dict(self.executor.dispatch_stats)
         pending: Deque[Tuple[float, Document]] = deque(
-            sorted(((float(t), d) for t, d in arrivals),
+            sorted(((origin + float(t), d) for t, d in arrivals),
                    key=lambda td: td[0]))
         waiting: Deque[ServeTicket] = deque()  # arrived, no slot free
         queue: Deque[ServeTicket] = deque()    # admitted
@@ -669,9 +713,13 @@ class PipelineServer:
     # -- reporting -----------------------------------------------------------
 
     def report(self, *, elapsed_s: Optional[float] = None) -> Dict[str, Any]:
-        """The :class:`ServerStats` report plus the executor's merged-
-        dispatch counters (submit calls, merged stages/requests) — the
-        coalescing evidence next to the latency evidence."""
+        """The :class:`ServerStats` report plus the merged-dispatch
+        counters (submit calls, merged stages/requests) of *this serving
+        episode* — deltas since start()/run_trace, so the coalescing
+        evidence sits next to the latency evidence it belongs to even on
+        a reused executor."""
+        dispatch = {k: v - self._dispatch_base.get(k, 0)
+                    for k, v in self.executor.dispatch_stats.items()}
         return self.stats.report(
             elapsed_s=elapsed_s, slo_s=self.slo_s,
-            extra={"dispatch": dict(self.executor.dispatch_stats)})
+            extra={"dispatch": dispatch})

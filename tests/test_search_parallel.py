@@ -209,6 +209,43 @@ def test_run_session_follower_survives_leader_error():
     assert CountsCalls.submits == 1, "identical requests share one call"
 
 
+def test_run_session_capture_errors_contains_coordinator_failure():
+    """A non-transient exception out of ``Backend.submit`` hits the
+    coordinator thread, not a job thread. ``capture_errors=True`` must
+    charge it to every job of the dead group as ``SessionResult.error``
+    (the serving isolation contract); without it, it re-raises as
+    before."""
+    from repro.engine.operators import make_pipeline
+
+    p = make_pipeline("t", [
+        {"name": "m", "type": "map", "prompt": "q", "model": "llama3.2-1b",
+         "output_schema": {"xs": "list"}}])
+    docs = [{"id": "d0", "text": "body"}]
+
+    class DeadSocket:
+        deterministic = True
+        preferred_batch_size = 8
+
+        def fingerprint(self):
+            return ("dead",)
+
+        def usage_cost(self, model, usage):
+            return 0.0
+
+        def submit(self, requests):
+            raise ConnectionError("socket closed")
+
+    with pytest.raises(ConnectionError):
+        Executor(DeadSocket()).run_session([(p, docs), (p, docs)],
+                                           workers=2)
+    results = Executor(DeadSocket()).run_session(
+        [(p, docs), (p, docs)], workers=2, capture_errors=True)
+    assert len(results) == 2
+    for r in results:
+        assert isinstance(r.error, ConnectionError)
+        assert r.docs is None
+
+
 def test_job_death_mid_stage_leaves_cache_identical_to_sequential():
     """When a job dies on an early chunk of a stage, results of its
     later (already-submitted) chunks must not enter the call cache —

@@ -167,6 +167,46 @@ def test_run_trace_requires_virtual_clock():
         srv.run_trace([(0.0, MEDEC.sample[0])])
 
 
+def test_start_requires_real_time_clock():
+    """The threaded loop waits on time.monotonic(); starting it over a
+    VirtualClock must fail fast instead of mixing timelines."""
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        SimBackend(seed=0, domain=MEDEC.domain), clock)
+    srv = PipelineServer(MEDEC.initial_pipeline, backend, clock=clock)
+    with pytest.raises(TypeError, match="run_trace"):
+        srv.start()
+
+
+def test_run_trace_twice_reports_fresh_stats():
+    """Back-to-back traces on one server report independently: stats,
+    request ids, the dispatch-counter baseline, and the time origin all
+    reset, so a second trace (over distinct documents — the shared call
+    cache answers repeats without model latency by design) reports
+    exactly what a fresh server would."""
+    srv = _trace_server(CUAD, max_batch=2, workers=2)
+    srv.run_trace([(0.01 * i, d) for i, d in enumerate(_docs(CUAD, 4))])
+    first = srv.report()
+    assert first["requests"] == first["completed"] == 4
+
+    arrivals2 = [(0.01 * i, d) for i, d in
+                 enumerate(_docs(CUAD, 2, prefix="s"))]
+    tks = srv.run_trace(arrivals2)
+    rep = srv.report()
+    assert [t.rid for t in tks] == [1, 2]
+
+    fresh = _trace_server(CUAD, max_batch=2, workers=2)
+    fresh.run_trace(arrivals2)
+    want = fresh.report()
+    # ticket timestamps sit at the shared clock's position, but every
+    # reported metric — latency/queue-wait/elapsed/throughput and the
+    # dispatch coalescing counters — matches a fresh server (approx:
+    # the shifted time origin costs one float rounding)
+    assert rep.keys() == want.keys()
+    for key, want_val in want.items():
+        assert rep[key] == pytest.approx(want_val), key
+
+
 # -- lifecycle: drain, cancel, backpressure ------------------------------------
 
 
@@ -312,6 +352,95 @@ def test_poisoned_request_fails_alone():
         assert tk.error is None and tk.docs
     rep = srv.report()
     assert rep["completed"] == 3 and rep["failed"] == 1
+
+
+class DownOnceBackend(SimBackend):
+    """First submit raises a non-transient ConnectionError — the shape
+    of a dead socket, hitting the dispatch coordinator thread rather
+    than coming back as a per-request OpResult error; later submits
+    succeed."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._down_lock = threading.Lock()
+        self.tripped = False
+
+    def submit(self, requests):
+        with self._down_lock:
+            if not self.tripped:
+                self.tripped = True
+                raise ConnectionError("backend connection dropped")
+        return super().submit(requests)
+
+
+def test_backend_outage_fails_batch_tickets_in_trace():
+    """A coordinator-level submit failure in a coalesced batch resolves
+    every ticket of that batch with the root cause; the next batch is
+    served normally."""
+    docs = _docs(MEDEC, 6)
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        DownOnceBackend(seed=0, domain=MEDEC.domain), clock, base_s=0.01)
+    srv = PipelineServer(MEDEC.initial_pipeline, backend, max_batch=4,
+                         batch_window_s=0.05, workers=2, clock=clock)
+    tks = srv.run_trace([(0.0, d) for d in docs])
+    for tk in tks[:4]:
+        assert isinstance(tk.error, ConnectionError)
+        with pytest.raises(ConnectionError):
+            tk.result(timeout=1)
+    for tk in tks[4:]:
+        assert tk.error is None and tk.docs
+    rep = srv.report()
+    assert rep["failed"] == 4 and rep["completed"] == 2
+
+
+def test_backend_outage_does_not_kill_serving_loop_threaded():
+    """Regression: a ConnectionError out of Backend.submit on a
+    coalesced batch (max_batch>1) used to propagate out of run_session,
+    kill the loop thread, and hang every ticket's result() forever. The
+    batch's tickets must fail with the root cause and the loop must keep
+    serving."""
+    docs = _docs(MEDEC, 8)
+    be = DownOnceBackend(seed=0, domain=MEDEC.domain)
+    # the long window only binds until the batch fills (max_batch=4):
+    # both submit waves fill it, so batches are deterministic
+    srv = PipelineServer(MEDEC.initial_pipeline, be, max_inflight=8,
+                         max_batch=4, batch_window_s=5.0, workers=2)
+    srv.start()
+    first = [srv.submit(d) for d in docs[:4]]
+    for tk in first:
+        with pytest.raises(ConnectionError):
+            tk.result(timeout=10)
+    second = [srv.submit(d) for d in docs[4:]]
+    for tk in second:
+        assert tk.result(timeout=10)
+    srv.shutdown()
+    rep = srv.report()
+    assert rep["failed"] == 4 and rep["completed"] == 4
+
+
+def test_execute_batch_last_resort_net(monkeypatch):
+    """Belt and braces: even if run_session itself raises despite
+    capture_errors, tickets resolve with the error instead of hanging
+    and the serving loop survives."""
+    docs = _docs(MEDEC, 2)
+    srv = PipelineServer(MEDEC.initial_pipeline,
+                         SimBackend(seed=0, domain=MEDEC.domain),
+                         max_batch=2, batch_window_s=1.0, workers=2)
+
+    def boom(*args, **kwargs):
+        raise RuntimeError("executor bug")
+
+    monkeypatch.setattr(srv.executor, "run_session", boom)
+    srv.start()
+    tks = [srv.submit(d) for d in docs]
+    for tk in tks:
+        with pytest.raises(RuntimeError, match="executor bug"):
+            tk.result(timeout=10)
+    assert srv._thread.is_alive()
+    srv.shutdown()
+    rep = srv.report()
+    assert rep["failed"] == 2
 
 
 def test_poisoned_request_fails_alone_per_request_mode():
