@@ -21,8 +21,24 @@ modes, and coalesced throughput is >= ``--min-speedup`` (default 2x) the
 per-request baseline. ``--json`` writes the report artifact the CI
 bench-regression job uploads.
 
+``--tenants N`` switches to the multi-tenant benchmark instead: N
+heterogeneous tenants (one workload pipeline each, weighted) share one
+``MultiPipelineServer``. Two gates, both deterministic:
+
+- **cross-tenant coalescing**: the merged trace's outputs and usage are
+  bit-identical to serving each tenant alone on its own server, and the
+  coalesced throughput is >= ``--min-speedup`` x the sequential
+  time-shared baseline (per-tenant servers on the same backend budget,
+  summed elapsed time);
+- **weighted fairness**: on a saturated burst, deficit-round-robin
+  shares of the first half of served requests match the weighted
+  expectation within one DRR cycle (the scheduler's granularity), and
+  no tenant misses the first scheduling cycle.
+
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --tenants 3 \\
+      --json BENCH_serve_multitenant.json
 """
 
 from __future__ import annotations
@@ -30,10 +46,12 @@ from __future__ import annotations
 import argparse
 import json
 import random
+from collections import Counter
 from typing import Any, Dict, List, Tuple
 
 from repro.engine.backend import SimBackend
 from repro.engine.workloads import WORKLOADS
+from repro.serving.multi_server import MultiPipelineServer, TenantSpec
 from repro.serving.pipeline_server import (PipelineServer, ServeTicket,
                                            VirtualClock,
                                            VirtualLatencyBackend)
@@ -133,14 +151,202 @@ def bench(workload_name: str, *, n: int, rps: float, seed: int,
     }
 
 
+# -- multi-tenant ------------------------------------------------------------
+
+# tenant roster: heterogeneous plans (1-3 operator stages) so the
+# cross-pipeline merge is real, weights deliberately uneven
+TENANT_WORKLOADS = ["cuad", "medec", "sustainability", "blackvault",
+                    "biodex", "game_reviews"]
+TENANT_WEIGHTS = [4.0, 2.0, 1.0, 2.0, 1.0, 1.0]
+
+
+def _tenant_specs(n: int) -> List[TenantSpec]:
+    if not 1 <= n <= len(TENANT_WORKLOADS):
+        raise SystemExit(f"--tenants must be 1..{len(TENANT_WORKLOADS)}")
+    return [TenantSpec(name, WORKLOADS[name]().initial_pipeline,
+                       weight=TENANT_WEIGHTS[i])
+            for i, name in enumerate(TENANT_WORKLOADS[:n])]
+
+
+def _mt_backend(clock: VirtualClock, *, base_ms: float,
+                per_request_ms: float, seed: int) -> VirtualLatencyBackend:
+    # one shared domain: all tenants ride the same backend instance
+    return VirtualLatencyBackend(
+        SimBackend(seed=seed, domain="generic"), clock,
+        base_s=base_ms / 1000.0, per_request_s=per_request_ms / 1000.0,
+        preferred_batch_size=64)
+
+
+def _tenant_arrivals(specs: List[TenantSpec], n_per_tenant: int,
+                     rps: float, seed: int
+                     ) -> List[Tuple[float, str, Dict[str, Any]]]:
+    """Merge per-tenant seeded Poisson streams into one schedule."""
+    out: List[Tuple[float, str, Dict[str, Any]]] = []
+    for spec in specs:
+        sample = WORKLOADS[spec.name]().sample
+        # str seeds hash via sha512 in random.seed — stable across runs
+        rng = random.Random(f"{seed}:{spec.name}")
+        t = 0.0
+        for i in range(n_per_tenant):
+            t += rng.expovariate(rps / len(specs))
+            out.append((t, spec.name,
+                        dict(sample[i % len(sample)],
+                             id=f"{spec.name}-r{i}")))
+    out.sort(key=lambda a: (a[0], a[1]))
+    return out
+
+
+def _mt_usage_fp(tickets: List[ServeTicket]) -> Dict[str, Tuple]:
+    return {tk.doc["id"]: (tk.stats.cost, tk.stats.llm_calls,
+                           tk.stats.in_tokens, tk.stats.out_tokens)
+            for tk in tickets}
+
+
+def bench_multitenant(n_tenants: int, *, n_per_tenant: int, rps: float,
+                      seed: int, base_ms: float, per_request_ms: float,
+                      window_ms: float, max_batch: int, workers: int,
+                      max_inflight: int, slo_ms: float,
+                      min_speedup: float) -> Dict[str, Any]:
+    specs = _tenant_specs(n_tenants)
+    names = [s.name for s in specs]
+    arrivals = _tenant_arrivals(specs, n_per_tenant, rps, seed)
+    print(f"== multi-tenant: {n_tenants} tenants x {n_per_tenant} "
+          f"requests @ {rps:.0f} rps total, {base_ms:.0f}ms/submit, "
+          f"window {window_ms:.0f}ms, max_batch {max_batch} ==")
+
+    # -- phase 1: cross-tenant coalescing vs per-tenant sequential ----------
+    clock = VirtualClock()
+    server = MultiPipelineServer(
+        specs, _mt_backend(clock, base_ms=base_ms,
+                           per_request_ms=per_request_ms, seed=seed),
+        max_inflight=max_inflight, max_batch=max_batch,
+        batch_window_s=window_ms / 1000.0, workers=workers, clock=clock,
+        slo_s=slo_ms / 1000.0)
+    tickets = server.run_trace(arrivals)
+    coal = server.report()
+    assert all(tk.error is None for tk in tickets)
+
+    # baseline: the same backend budget time-shared tenant by tenant —
+    # each tenant alone on its own single-plan server, elapsed summed
+    seq_elapsed, seq_completed, seq_submits = 0.0, 0, 0
+    for spec in specs:
+        sub = [(t, d) for t, name, d in arrivals if name == spec.name]
+        t0 = sub[0][0] if sub else 0.0
+        sub = [(t - t0, d) for t, d in sub]  # tenant-local time origin
+        c2 = VirtualClock()
+        solo = PipelineServer(
+            spec.pipeline,
+            _mt_backend(c2, base_ms=base_ms,
+                        per_request_ms=per_request_ms, seed=seed),
+            max_inflight=max_inflight, max_batch=max_batch,
+            batch_window_s=window_ms / 1000.0, workers=workers,
+            clock=c2, slo_s=slo_ms / 1000.0)
+        solo_tks = solo.run_trace(sub)
+        rep = solo.report()
+        seq_elapsed += rep["elapsed_s"]
+        seq_completed += rep["completed"]
+        seq_submits += rep["dispatch"]["submit_calls"]
+        mine = [tk for tk in tickets if tk.tenant == spec.name]
+        assert {tk.doc["id"]: tk.docs for tk in mine} == \
+            {tk.doc["id"]: tk.docs for tk in solo_tks}, \
+            f"cross-tenant coalescing changed {spec.name}'s outputs"
+        assert _mt_usage_fp(mine) == _mt_usage_fp(solo_tks), \
+            f"usage accounting diverged for {spec.name}"
+
+    seq_rps = seq_completed / seq_elapsed if seq_elapsed > 0 else 0.0
+    speedup = coal["throughput_rps"] / max(seq_rps, 1e-12)
+    print(f"  coalesced   : {coal['throughput_rps']:7.1f} req/s  "
+          f"{coal['batches']:3d} batches "
+          f"(mean {coal['mean_batch_size']:4.1f})  "
+          f"{coal['dispatch']['submit_calls']:4d} submits")
+    print(f"  sequential  : {seq_rps:7.1f} req/s  "
+          f"{seq_submits:4d} submits (per-tenant servers, summed time)")
+    print(f"  speedup: {speedup:.2f}x throughput, outputs bit-identical "
+          f"across {n_tenants} tenants")
+    assert speedup >= min_speedup, \
+        (f"cross-tenant coalescing regressed: {speedup:.2f}x < required "
+         f"{min_speedup:.2f}x")
+
+    # -- phase 2: weighted fairness on a saturated burst --------------------
+    burst_n = max(3 * max_batch, 12)
+    # the startup assertion below ("every tenant rides the first batch")
+    # presumes one batch can hold a full DRR cycle — size it to the
+    # roster's quantum sum (weight / min_weight per tenant)
+    min_w = min(s.weight for s in specs)
+    cycle = int(sum(s.weight / min_w for s in specs) + 0.5)
+    fair_batch = max(max_batch, cycle)
+    clock_b = VirtualClock()
+    server_b = MultiPipelineServer(
+        specs, _mt_backend(clock_b, base_ms=base_ms,
+                           per_request_ms=per_request_ms, seed=seed),
+        max_inflight=len(specs) * burst_n + 1, max_batch=fair_batch,
+        batch_window_s=0.0, workers=workers, clock=clock_b)
+    samples = {spec.name: WORKLOADS[spec.name]().sample for spec in specs}
+    burst = [(0.0, spec.name,
+              dict(samples[spec.name][i % len(samples[spec.name])],
+                   id=f"{spec.name}-b{i}"))
+             for spec in specs for i in range(burst_n)]
+    btks = server_b.run_trace(burst)
+    assert all(tk.error is None for tk in btks)
+    order = sorted(btks, key=lambda tk: (tk.started_at, tk.rid))
+    half = order[:len(order) // 2]
+    shares = Counter(tk.tenant for tk in half)
+    total_w = sum(s.weight for s in specs)
+    expected = {s.name: len(half) * s.weight / total_w for s in specs}
+    fairness = {name: {"served": shares.get(name, 0),
+                       "expected": expected[name]}
+                for name in names}
+    for name in names:
+        got, want = shares.get(name, 0), expected[name]
+        # DRR serves whole quanta, so shares can deviate from the ideal
+        # by at most one cycle's worth of requests — a collapse toward
+        # equal shares overshoots this band and fails the gate
+        assert abs(got - want) <= cycle, \
+            (f"weighted-fair admission violated for {name}: served "
+             f"{got} of first {len(half)}, expected ~{want:.1f} "
+             f"(tolerance: one DRR cycle = {cycle})")
+    first_start = order[0].started_at
+    for name in names:
+        first = min(tk.started_at for tk in order if tk.tenant == name)
+        assert first == first_start, f"tenant {name} starved at startup"
+    print(f"  fairness: first-half shares "
+          f"{ {n: shares.get(n, 0) for n in names} } vs weights "
+          f"{ {s.name: s.weight for s in specs} } — OK, starvation-free")
+
+    return {
+        "tenants": {s.name: s.weight for s in specs},
+        "requests_per_tenant": n_per_tenant,
+        "rps": rps,
+        "seed": seed,
+        "latency_model": {"base_ms": base_ms,
+                          "per_request_ms": per_request_ms},
+        "speedup": speedup,
+        "min_speedup": min_speedup,
+        "coalesced": coal,
+        "sequential": {"throughput_rps": seq_rps,
+                       "elapsed_s": seq_elapsed,
+                       "completed": seq_completed,
+                       "submit_calls": seq_submits},
+        "fairness": fairness,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fast run for CI (still gates the speedup "
                          "floor — virtual time is deterministic)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="run the multi-tenant benchmark with N tenants "
+                         "instead of the single-plan one (gates "
+                         "cross-tenant coalescing + weighted fairness)")
     ap.add_argument("--workloads", nargs="*", default=None)
     ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--rps", type=float, default=150.0)
+    ap.add_argument("--rps", type=float, default=None,
+                    help="open-loop arrival rate (default: 150 for the "
+                         "single-plan bench; 20 x N for --tenants N — "
+                         "sparse per-tenant traffic is the regime the "
+                         "cross-tenant gate measures)")
     ap.add_argument("--base-ms", type=float, default=50.0,
                     help="per-submit round-trip latency of the modeled "
                          "endpoint")
@@ -156,6 +362,32 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the report artifact (BENCH_serve.json)")
     args = ap.parse_args()
+    if args.tenants:
+        if args.smoke:
+            # sparse per-tenant traffic (20 rps/tenant at 3 tenants):
+            # the regime where per-tenant batches are small and merging
+            # across tenants pays — 2.5x measured vs the 2x floor
+            kw = dict(n_per_tenant=16, rps=60.0, base_ms=50.0,
+                      per_request_ms=2.0, window_ms=20.0, max_batch=16,
+                      workers=4, max_inflight=96, slo_ms=2000.0,
+                      min_speedup=args.min_speedup, seed=args.seed)
+        else:
+            kw = dict(n_per_tenant=args.requests,
+                      rps=(args.rps if args.rps is not None
+                           else 20.0 * args.tenants),
+                      base_ms=args.base_ms,
+                      per_request_ms=args.per_request_ms,
+                      window_ms=args.window_ms, max_batch=args.max_batch,
+                      workers=args.workers,
+                      max_inflight=args.max_inflight, slo_ms=args.slo_ms,
+                      min_speedup=args.min_speedup, seed=args.seed)
+        result = bench_multitenant(args.tenants, **kw)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"bench": "serve_multitenant",
+                           "results": [result]}, f, indent=2)
+            print(f"wrote {args.json}")
+        return
     if args.smoke:
         names = args.workloads or ["cuad"]
         kw = dict(n=24, rps=200.0, base_ms=50.0, per_request_ms=2.0,
@@ -164,7 +396,9 @@ def main():
                   seed=args.seed)
     else:
         names = args.workloads or ["cuad", "medec"]
-        kw = dict(n=args.requests, rps=args.rps, base_ms=args.base_ms,
+        kw = dict(n=args.requests,
+                  rps=args.rps if args.rps is not None else 150.0,
+                  base_ms=args.base_ms,
                   per_request_ms=args.per_request_ms,
                   window_ms=args.window_ms, max_batch=args.max_batch,
                   workers=args.workers, max_inflight=args.max_inflight,

@@ -546,7 +546,10 @@ class JaxBackend:
     MAX_PROMPT_TOKENS = 96
 
     def __init__(self, seed: int = 0, max_new_tokens: int = 8,
-                 decode_slots: Optional[int] = None):
+                 decode_slots: Optional[int] = None,
+                 clock: Optional[Any] = None):
+        import time
+
         import jax
         from repro.configs import get_config
         from repro.models import api
@@ -557,6 +560,15 @@ class JaxBackend:
         self.max_new_tokens = max_new_tokens
         if decode_slots is not None:
             self.DECODE_SLOTS = max(1, int(decode_slots))
+        # threaded into each ContinuousBatcher so request timestamps can
+        # participate in a host's (possibly virtual) timeline; accepts a
+        # bare callable or a serving-layer clock object (.now())
+        if clock is None:
+            self.clock = time.time
+        elif callable(getattr(clock, "now", None)):
+            self.clock = clock.now
+        else:
+            self.clock = clock
         self._params = {}
         self._batchers: Dict[str, Any] = {}
         self.cards = catalog()
@@ -643,7 +655,8 @@ class JaxBackend:
             b = ContinuousBatcher(
                 params, cfg, num_slots=self.DECODE_SLOTS,
                 max_len=self.MAX_PROMPT_TOKENS + self.max_new_tokens + 8,
-                eos_id=-1)  # match generate(): no early EOS stop
+                eos_id=-1,  # match generate(): no early EOS stop
+                clock=self.clock)
             self._batchers[model] = b
         return b
 

@@ -245,6 +245,7 @@ class _SessionJob:
     config: Any
     docs: Dataset
     run_no: int
+    tag: Optional[str] = None
     stats: ExecutionStats = field(default_factory=ExecutionStats)
     out: Optional[Dataset] = None
     exc: Optional[Exception] = None
@@ -325,6 +326,11 @@ class Executor:
             "submit_calls": 0, "sessions": 0, "session_jobs": 0,
             "merged_stages": 0, "merged_requests": 0,
         }
+        # per-tag session accounting (run_session(tags=...)): multi-tenant
+        # serving hosts label each job with its tenant so coalescing
+        # evidence can be attributed per tenant. Mutated only on the
+        # session caller thread (the coordinator runs inline there).
+        self.tag_stats: Dict[str, Dict[str, int]] = {}
 
     # -- shared infrastructure for operator implementations -------------------
 
@@ -363,6 +369,12 @@ class Executor:
         stats.charge(req.op["name"], req.op.get("model", ""), usage,
                      self.backend)
 
+    def _count_tag(self, tag: Optional[str], key: str, n: int = 1) -> None:
+        if tag is None:
+            return
+        entry = self.tag_stats.setdefault(tag, {"jobs": 0, "requests": 0})
+        entry[key] = entry.get(key, 0) + n
+
     def dispatch(self, requests: List[OpRequest], stats: ExecutionStats
                  ) -> List[Any]:
         """Answer a batch of operator invocations, in request order.
@@ -383,6 +395,10 @@ class Executor:
         job = getattr(self._tl, "channel", None)
         if job is not None:
             return job.rendezvous(requests, stats)
+        # inline (single-member-group) session jobs dispatch directly on
+        # the caller thread; attribute their request volume to the tag
+        self._count_tag(getattr(self._tl, "tag", None), "requests",
+                        len(requests))
         results: List[Any] = [_UNSET] * len(requests)
         usages: List[Any] = [None] * len(requests)
         keys: List[Optional[str]] = [None] * len(requests)
@@ -486,7 +502,8 @@ class Executor:
     # -- cross-pipeline dispatch session ---------------------------------------
 
     def run_session(self, jobs: List[Tuple[PipelineLike, Dataset]], *,
-                    workers: int = 1, capture_errors: bool = False
+                    workers: int = 1, capture_errors: bool = False,
+                    tags: Optional[List[Optional[str]]] = None
                     ) -> List["SessionResult"]:
         """Evaluate several pipelines as one batched round.
 
@@ -518,7 +535,15 @@ class Executor:
         dead round trip cannot take down its siblings or the caller (the
         serving layer's isolation contract:
         ``repro.serving.pipeline_server``).
+
+        ``tags`` optionally labels each job (e.g. with its serving
+        tenant); per-tag job/request counts accumulate in
+        :attr:`tag_stats` so a multi-tenant host can attribute the
+        merged dispatch volume per tenant.
         """
+        if tags is not None and len(tags) != len(jobs):
+            raise ValueError(f"tags length {len(tags)} != jobs "
+                             f"length {len(jobs)}")
         configs = []
         for pipeline, _ in jobs:
             config = as_config(pipeline)
@@ -530,9 +555,12 @@ class Executor:
         self.dispatch_stats["sessions"] += 1
         self.dispatch_stats["session_jobs"] += len(jobs)
         session = [_SessionJob(index=i, config=config, docs=list(docs),
-                               run_no=base + i + 1)
+                               run_no=base + i + 1,
+                               tag=None if tags is None else tags[i])
                    for i, (config, (_, docs)) in
                    enumerate(zip(configs, jobs))]
+        for job in session:
+            self._count_tag(job.tag, "jobs")
         # workers=1: strictly sequential. workers>1: one stage-aligned
         # group over the whole set (bounded so a huge batch cannot spawn
         # unbounded stacks), with `workers` submits in flight at once.
@@ -580,6 +608,7 @@ class Executor:
         ``job.exc`` — a single-job batch must isolate a poisoned
         request exactly like a merged group does."""
         self._tl.run_no = job.run_no
+        self._tl.tag = job.tag
         try:
             job.out = self._execute_ops(job.config, job.docs, job.stats)
         except TransientLLMError as e:
@@ -588,6 +617,8 @@ class Executor:
             if not capture_errors:
                 raise
             job.exc = e
+        finally:
+            self._tl.tag = None
 
     def _run_group(self, group: List["_SessionJob"]) -> None:
         cond = threading.Condition()
@@ -676,6 +707,7 @@ class Executor:
             requests, _ = job.posted
             n = len(requests)
             self.dispatch_stats["merged_requests"] += n
+            self._count_tag(job.tag, "requests", n)
             job.stage_results = [_UNSET] * n
             job.stage_usages = [None] * n
             job.stage_keys = [None] * n

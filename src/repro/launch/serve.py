@@ -12,9 +12,18 @@ initial plan with every LLM op pointed at ``--arch``), not a hardcoded
 request mix: swap in any ``SearchResult.best().pipeline`` the optimizer
 produced.
 
+``--tenants`` switches to the multi-tenant host: a comma-separated
+``name=workload[:weight]`` roster (e.g.
+``legal=cuad:2,medical=medec``) served by one ``MultiPipelineServer``
+over one shared ``JaxBackend`` — different tenants' requests coalesce
+into the same submit chunks and decode slots, admission is
+weighted-fair across the roster.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --requests 8 --slots 4 --rps 0
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+      --tenants legal=cuad:2,medical=medec --requests 8
 """
 
 from __future__ import annotations
@@ -26,7 +35,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.engine.workloads import WORKLOADS
 from repro.pipeline.model import as_config
-from repro.serving.pipeline_server import PipelineServer, ServeTicket
+from repro.serving.multi_server import MultiPipelineServer, TenantSpec
+from repro.serving.pipeline_server import (MonotonicClock, PipelineServer,
+                                           ServeTicket)
 
 
 def pipeline_for(workload, arch: str) -> Dict[str, Any]:
@@ -36,6 +47,27 @@ def pipeline_for(workload, arch: str) -> Dict[str, Any]:
     ops = [dict(op, model=arch) if "model" in op else dict(op)
            for op in config["operators"]]
     return {"name": f"{config['name']}@{arch}", "operators": ops}
+
+
+def _drive(server, submits, *, rps: float, seed: int
+           ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
+    """Shared open-loop drive: start the server, pace the ``submits``
+    callables (each admits one request) at Poisson ``rps`` (0 = all at
+    once), drain, shut down (closing the backend), and report against
+    wall time."""
+    rng = random.Random(seed)
+    t0 = time.monotonic()
+    server.start()
+    try:
+        tickets = []
+        for submit in submits:
+            if rps > 0:
+                time.sleep(rng.expovariate(rps))
+            tickets.append(submit())
+        server.drain()
+    finally:
+        server.shutdown(close_backend=True)
+    return tickets, server.report(elapsed_s=time.monotonic() - t0)
 
 
 def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
@@ -56,27 +88,20 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
 
     w = WORKLOADS[workload]()
     plan = pipeline_for(w, arch)
+    # one clock for host and batcher: scheduler timestamps join the
+    # server's timeline
+    clock = MonotonicClock()
     backend = JaxBackend(seed=seed, max_new_tokens=max_new,
-                         decode_slots=slots)
+                         decode_slots=slots, clock=clock)
     max_batch = max_batch or max(1, 2 * slots)
     server = PipelineServer(plan, backend, max_inflight=4 * max_batch,
                             max_batch=max_batch, batch_window_s=0.01,
-                            workers=workers, seed=seed)
+                            workers=workers, seed=seed, clock=clock)
     docs = [dict(w.sample[i % len(w.sample)], id=f"r{i}")
             for i in range(requests)]
-    rng = random.Random(seed)
-    t0 = time.monotonic()
-    server.start()
-    try:
-        tickets = []
-        for doc in docs:
-            if rps > 0:
-                time.sleep(rng.expovariate(rps))
-            tickets.append(server.submit(doc))
-        server.drain()
-    finally:
-        server.shutdown(close_backend=True)
-    report = server.report(elapsed_s=time.monotonic() - t0)
+    tickets, report = _drive(
+        server, [lambda d=doc: server.submit(d) for doc in docs],
+        rps=rps, seed=seed)
     if verbose:
         for tk in tickets:
             n_out = len(tk.docs) if tk.docs is not None else 0
@@ -96,6 +121,85 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
     return tickets, report
 
 
+def parse_tenants(spec: str, arch: str
+                  ) -> List[Tuple[TenantSpec, str]]:
+    """Parse a ``name=workload[:weight]`` roster into
+    ``(TenantSpec, workload_key)`` pairs, each tenant serving its
+    workload's pipeline pointed at ``arch``."""
+    out: List[Tuple[TenantSpec, str]] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, rest = part.partition("=")
+        if not rest:
+            raise SystemExit(f"--tenants entry {part!r}: expected "
+                             f"name=workload[:weight]")
+        workload, _, weight = rest.partition(":")
+        if not name.strip():
+            raise SystemExit(f"--tenants entry {part!r}: empty tenant "
+                             f"name (expected name=workload[:weight])")
+        if workload not in WORKLOADS:
+            raise SystemExit(f"--tenants entry {part!r}: unknown workload "
+                             f"{workload!r} (have {sorted(WORKLOADS)})")
+        try:
+            w = float(weight) if weight else 1.0
+        except ValueError:
+            raise SystemExit(f"--tenants entry {part!r}: weight "
+                             f"{weight!r} is not a number") from None
+        out.append((TenantSpec(
+            name=name.strip(), weight=w,
+            pipeline=pipeline_for(WORKLOADS[workload](), arch)), workload))
+    if not out:
+        raise SystemExit("--tenants: empty roster")
+    return out
+
+
+def serve_multi_demo(arch: str, tenants: str, *, requests: int = 8,
+                     slots: int = 4, max_new: int = 8, rps: float = 0.0,
+                     max_batch: Optional[int] = None, workers: int = 2,
+                     seed: int = 0, verbose: bool = True
+                     ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
+    """Multi-tenant online serving on real JAX decoding: the roster's
+    plans share one backend; requests round-robin across tenants at the
+    submission side and coalesce across tenants inside the host."""
+    from repro.engine.backend import JaxBackend  # jax import is heavy
+
+    roster = parse_tenants(tenants, arch)
+    specs = [spec for spec, _ in roster]
+    # tenant name keys the roster; its workload's sample feeds traffic
+    samples = {spec.name: WORKLOADS[wname]().sample
+               for spec, wname in roster}
+    clock = MonotonicClock()
+    backend = JaxBackend(seed=seed, max_new_tokens=max_new,
+                         decode_slots=slots, clock=clock)
+    max_batch = max_batch or max(1, 2 * slots)
+    server = MultiPipelineServer(specs, backend,
+                                 max_inflight=4 * max_batch,
+                                 max_batch=max_batch,
+                                 batch_window_s=0.01, workers=workers,
+                                 seed=seed, clock=clock)
+    submits = []
+    for i in range(requests):
+        spec = specs[i % len(specs)]
+        sample = samples[spec.name]
+        doc = dict(sample[i % len(sample)], id=f"{spec.name}-r{i}")
+        submits.append(lambda t=spec.name, d=doc: server.submit(t, d))
+    tickets, report = _drive(server, submits, rps=rps, seed=seed)
+    if verbose:
+        print(f"[serve] {report['completed']}/{report['requests']} "
+              f"requests in {report['elapsed_s']:.1f}s | "
+              f"{report['batches']} batches "
+              f"(mean size {report['mean_batch_size']:.1f}) | "
+              f"{report['dispatch']['submit_calls']} submit calls")
+        for name, rep in report["tenants"].items():
+            print(f"  tenant {name:12s} (w={rep['weight']}): "
+                  f"{rep['completed']} served, "
+                  f"{rep['dispatched']['requests']} dispatched reqs, "
+                  f"p50 {rep['latency_s']['p50']:.2f}s")
+    return tickets, report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -110,7 +214,17 @@ def main():
     ap.add_argument("--max-batch", type=int, default=None)
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", default=None,
+                    help="multi-tenant roster: name=workload[:weight],"
+                         "... — serve all tenants from one host "
+                         "(e.g. legal=cuad:2,medical=medec)")
     args = ap.parse_args()
+    if args.tenants:
+        serve_multi_demo(args.arch, args.tenants, requests=args.requests,
+                         slots=args.slots, rps=args.rps,
+                         max_new=args.max_new, max_batch=args.max_batch,
+                         workers=args.workers, seed=args.seed)
+        return
     serve_demo(args.arch, requests=args.requests, slots=args.slots,
                rps=args.rps, max_new=args.max_new, workload=args.workload,
                max_batch=args.max_batch, workers=args.workers,

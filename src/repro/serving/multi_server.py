@@ -1,0 +1,341 @@
+"""Multi-tenant pipeline serving: many optimized plans, one backend.
+
+``MultiPipelineServer`` is the production shape of the serving layer:
+N named *tenants*, each an optimized :class:`~repro.pipeline.Pipeline`
+with its own SLO target and scheduling weight, share one backend (and
+its decode slots / submit round trips). Three policies sit on top of
+the single-plan :class:`~repro.serving.pipeline_server.PipelineServer`
+substrate:
+
+- **Per-tenant routing.** ``submit(tenant, doc)`` routes each request
+  to its tenant's plan; a request is an independent single-document
+  evaluation of *that tenant's* pipeline.
+- **Weighted-fair admission.** Each tenant owns a FIFO queue; batch
+  formation runs deficit-round-robin (DRR) over the queues: every
+  visit credits a tenant ``weight / min(weight)`` requests of deficit
+  and serves whole requests while credit lasts. A backlogged tenant is
+  guaranteed service every DRR cycle (starvation-free), and under
+  saturation the long-run served shares converge to the weights.
+  Admission itself falls back to the global ``max_inflight``
+  backpressure bound — ``ServerSaturated`` on a full host, exactly as
+  in the single-plan server.
+- **Cross-pipeline coalescing.** The micro-batch window coalesces
+  *across tenants*: one ``Executor.run_session`` round carries a
+  heterogeneous job list (one pipeline per ticket), so different
+  plans' calls to the same model still share ``Backend.submit`` chunks
+  — and, on a ``JaxBackend``, the same decode slots. ``run_session``'s
+  contract makes the merge invisible: outputs and usage accounting are
+  bit-identical to serving each tenant alone.
+
+Accounting: the aggregate :class:`ServerStats` plus one per tenant
+(each holding the tenant's own ``slo_s``), reported side by side by
+:meth:`MultiPipelineServer.report`. Stats obey the same retention
+modes as the single-plan server — bounded P² sketches for the threaded
+loop, exact records for virtual-time traces — and the executor's
+per-tag session counters attribute the merged dispatch volume per
+tenant. The executor's call cache is shared across tenants: two
+tenants asking the same (op, doc) question are answered by one backend
+call.
+
+Trace mode: ``run_trace`` replays ``(arrival_time, tenant, doc)``
+schedules on a :class:`VirtualClock`, reproducing the threaded host's
+admission/window/DRR semantics deterministically — the substrate for
+``benchmarks/serve_bench.py --tenants`` and the multi-tenant CI gate.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.data.documents import Document
+from repro.engine.executor import CallCache, Executor
+from repro.engine.operators import validate_pipeline
+from repro.pipeline.model import PipelineLike, as_config
+from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
+                                           ServeTicket, ServerStats)
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One hosted tenant: a named optimized plan plus its serving
+    policy — ``weight`` is the DRR scheduling share (relative to the
+    other tenants), ``slo_s`` the tenant's own latency target."""
+
+    name: str
+    pipeline: PipelineLike
+    weight: float = 1.0
+    slo_s: Optional[float] = None
+
+
+class UnknownTenant(KeyError):
+    """Request routed to a tenant this host does not serve."""
+
+
+class MultiPipelineServer(PipelineServer):
+    """Serve N tenants' optimized pipelines over one shared backend
+    (see module docstring for the policy design).
+
+    Accepts ``TenantSpec`` instances, ``(name, pipeline)`` /
+    ``(name, pipeline, weight)`` tuples, or a ``{name: pipeline}``
+    mapping. Both drive modes of the single-plan server carry over:
+    threaded (``start`` / ``submit(tenant, doc)`` / ``shutdown``) and
+    virtual-time traces (``run_trace`` over ``(t, tenant, doc)``
+    arrivals).
+    """
+
+    def __init__(self, tenants: Any, backend: Any, *,
+                 max_inflight: int = 64, max_batch: int = 8,
+                 batch_window_s: float = 0.005, workers: int = 4,
+                 seed: int = 0, fail_prob: float = 0.0,
+                 slo_s: Optional[float] = None, clock: Any = None,
+                 executor: Optional[Executor] = None,
+                 call_cache: Optional[CallCache] = None,
+                 stats_mode: str = "auto", stats_window: int = 512):
+        specs = _normalize_tenants(tenants)
+        self._tenants: Dict[str, TenantSpec] = {}
+        self._configs: Dict[str, Any] = {}
+        for spec in specs:
+            if spec.name in self._tenants:
+                raise ValueError(f"duplicate tenant name {spec.name!r}")
+            if not spec.weight > 0:
+                raise ValueError(f"tenant {spec.name!r}: weight must be "
+                                 f"> 0, got {spec.weight}")
+            config = as_config(spec.pipeline)
+            validate_pipeline(config)
+            self._tenants[spec.name] = spec
+            self._configs[spec.name] = config
+        # DRR state: visit order is tenant registration order; quanta
+        # normalize the smallest weight to 1 so every visit to a
+        # backlogged queue serves at least one request (progress + the
+        # starvation-free guarantee)
+        self._order: List[str] = [s.name for s in specs]
+        min_w = min(s.weight for s in specs)
+        self._quanta = {s.name: s.weight / min_w for s in specs}
+        self._deficit = {name: 0.0 for name in self._order}
+        self._drr_ptr = 0
+        self._drr_carry = False  # resuming a tenant cut short by fill
+        self._queues: Dict[str, Deque[ServeTicket]] = {
+            name: deque() for name in self._order}
+        self.tenant_stats: Dict[str, ServerStats] = {}
+        # the base ctor (which calls _reset_episode, hence the state
+        # above being initialized first) validates the first tenant's
+        # plan again — harmless — and wires clock/executor/queue plumbing
+        super().__init__(specs[0].pipeline, backend,
+                         max_inflight=max_inflight, max_batch=max_batch,
+                         batch_window_s=batch_window_s, workers=workers,
+                         seed=seed, fail_prob=fail_prob, slo_s=slo_s,
+                         clock=clock, executor=executor,
+                         call_cache=call_cache, stats_mode=stats_mode,
+                         stats_window=stats_window)
+
+    # -- tenant plumbing ------------------------------------------------------
+
+    @property
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._order)
+
+    def _tenant(self, name: str) -> TenantSpec:
+        spec = self._tenants.get(name)
+        if spec is None:
+            raise UnknownTenant(
+                f"unknown tenant {name!r} (serving: {self._order})")
+        return spec
+
+    def _tenant_slo(self, name: str) -> Optional[float]:
+        """A tenant's SLO target: its own ``slo_s``, falling back to
+        the host-level one so a server-wide SLO scores every tenant."""
+        spec = self._tenants[name]
+        return spec.slo_s if spec.slo_s is not None else self.slo_s
+
+    def _reset_episode(self, *, trace: bool) -> None:
+        super()._reset_episode(trace=trace)
+        opened = self.stats.opened_at
+        self.tenant_stats = {
+            name: self._new_stats(opened, trace=trace,
+                                  slo_s=self._tenant_slo(name))
+            for name in self._order}
+        self._deficit = {name: 0.0 for name in self._order}
+        self._drr_ptr = 0
+        self._drr_carry = False
+        for q in self._queues.values():
+            q.clear()
+        self._tag_base: Dict[str, Dict[str, int]] = {
+            name: dict(self.executor.tag_stats.get(
+                name, {"jobs": 0, "requests": 0}))
+            for name in self._order}
+
+    # -- queue discipline: per-tenant FIFOs + DRR batch formation -------------
+
+    def _enqueue(self, tk: ServeTicket) -> None:
+        self._queues[tk.tenant].append(tk)
+
+    def _queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _oldest_admitted(self) -> float:
+        return min(q[0].admitted_at
+                   for q in self._queues.values() if q)
+
+    def _take_batch(self) -> List[ServeTicket]:
+        """Deficit-round-robin over the tenant queues.
+
+        Each *fresh* visit to a backlogged tenant credits its quantum
+        (``weight / min_weight`` >= 1) and serves whole requests while
+        the deficit covers them, so long-run served shares track the
+        weights. A tenant whose queue empties forfeits its remaining
+        deficit (idle tenants don't bank credit). A tenant cut short by
+        the batch filling while it still holds deficit and backlog is
+        *resumed* at the next batch — the pointer stays put and the
+        quantum is NOT re-credited — so weighted shares hold even when
+        ``max_batch`` is smaller than one full DRR cycle (advancing
+        past a cut-short tenant would cap every tenant's service at the
+        batch leftovers and collapse the shares toward equal). The
+        round-robin pointer persists across batches."""
+        batch: List[ServeTicket] = []
+        names = self._order
+        while len(batch) < self.max_batch and \
+                any(self._queues[n] for n in names):
+            name = names[self._drr_ptr % len(names)]
+            queue = self._queues[name]
+            if queue:
+                if not self._drr_carry:
+                    self._deficit[name] += self._quanta[name]
+                self._drr_carry = False
+                while queue and self._deficit[name] >= 1.0 and \
+                        len(batch) < self.max_batch:
+                    self._deficit[name] -= 1.0
+                    batch.append(queue.popleft())
+                if not queue:
+                    self._deficit[name] = 0.0
+                elif len(batch) >= self.max_batch and \
+                        self._deficit[name] >= 1.0:
+                    # cut short mid-service: resume here next batch
+                    # without a fresh quantum
+                    self._drr_carry = True
+                    break
+            self._drr_ptr += 1
+        return batch
+
+    def _drain_queues(self) -> List[ServeTicket]:
+        out: List[ServeTicket] = []
+        for queue in self._queues.values():
+            out.extend(queue)
+            queue.clear()
+        out.sort(key=lambda tk: tk.rid)  # deterministic cancel order
+        return out
+
+    # -- batch execution: one pipeline per ticket -----------------------------
+
+    def _arrival_ticket(self, rest: Tuple, submitted_at: float
+                        ) -> ServeTicket:
+        tenant, doc = rest
+        self._tenant(tenant)
+        return self._make_ticket(doc, submitted_at=submitted_at,
+                                 tenant=tenant)
+
+    def _job_config(self, tk: ServeTicket) -> Any:
+        return self._configs[tk.tenant]
+
+    def _job_tags(self, batch: List[ServeTicket]
+                  ) -> Optional[List[Optional[str]]]:
+        return [tk.tenant for tk in batch]
+
+    def _observe_batch(self, batch: List[ServeTicket]) -> None:
+        self.stats.observe_batch(len(batch))
+        shares: Dict[str, int] = {}
+        for tk in batch:
+            shares[tk.tenant] = shares.get(tk.tenant, 0) + 1
+        # a tenant's "batch size" is its share of the coalesced batch:
+        # mean share ~1 with no cross-tenant traffic to ride with
+        for name, share in shares.items():
+            self.tenant_stats[name].observe_batch(share)
+
+    def _observe_record(self, tk: ServeTicket,
+                        record: RequestRecord) -> None:
+        self.stats.observe(record)
+        self.tenant_stats[tk.tenant].observe(record)
+
+    def _count_rejected(self, tenant: Optional[str]) -> None:
+        self.stats.count_rejected()
+        if tenant in self.tenant_stats:
+            self.tenant_stats[tenant].count_rejected()
+
+    def _count_cancelled(self, cancelled: List[ServeTicket]) -> None:
+        self.stats.count_cancelled(len(cancelled))
+        for tk in cancelled:
+            self.tenant_stats[tk.tenant].count_cancelled()
+
+    # -- public surface -------------------------------------------------------
+
+    def submit(self, tenant: str, doc: Document, *,  # type: ignore[override]
+               block: bool = True,
+               timeout: Optional[float] = None) -> ServeTicket:
+        """Admit one document for ``tenant``. Same admission semantics
+        as the single-plan server: blocks while all ``max_inflight``
+        slots (shared across tenants) are taken, ``block=False`` /
+        ``timeout`` raise :class:`ServerSaturated`."""
+        self._tenant(tenant)
+        return self._submit_doc(doc, tenant, block=block, timeout=timeout)
+
+    def serve(self, items: Sequence[Tuple[str, Document]],  # type: ignore[override]
+              timeout: Optional[float] = None) -> List[ServeTicket]:
+        """Convenience: submit every ``(tenant, doc)`` pair (blocking
+        admission) and wait for all tickets."""
+        tickets = [self.submit(tenant, doc) for tenant, doc in items]
+        for tk in tickets:
+            tk.wait(timeout)
+        return tickets
+
+    def run_trace(self, arrivals: Sequence[Tuple[float, str, Document]]
+                  ) -> List[ServeTicket]:
+        """Replay an open-loop ``(arrival_time, tenant, doc)`` schedule
+        in virtual time (see the single-plan server's ``run_trace`` for
+        the clock contract). DRR state resets with the episode, so a
+        given schedule always forms the same batches."""
+        return super().run_trace(arrivals)
+
+    def report(self, *, elapsed_s: Optional[float] = None
+               ) -> Dict[str, Any]:
+        """Aggregate report plus one sub-report per tenant (each against
+        its own ``slo_s``, all over the shared elapsed time so
+        throughputs are comparable shares). Tenant sub-reports carry the
+        tenant ``weight`` and the per-tag dispatch volume this episode —
+        the cross-tenant coalescing evidence."""
+        rep = super().report(elapsed_s=elapsed_s)
+        tag_stats = self.executor.tag_stats
+        tenants: Dict[str, Any] = {}
+        for name in self._order:
+            spec = self._tenants[name]
+            base = self._tag_base.get(name, {})
+            tags = tag_stats.get(name, {})
+            dispatched = {k: tags.get(k, 0) - base.get(k, 0)
+                          for k in ("jobs", "requests")}
+            tenants[name] = self.tenant_stats[name].report(
+                elapsed_s=rep["elapsed_s"], slo_s=self._tenant_slo(name),
+                extra={"weight": spec.weight, "dispatched": dispatched})
+        rep["tenants"] = tenants
+        return rep
+
+
+def _normalize_tenants(tenants: Any) -> List[TenantSpec]:
+    if isinstance(tenants, dict):
+        tenants = list(tenants.items())
+    specs: List[TenantSpec] = []
+    for item in tenants:
+        if isinstance(item, TenantSpec):
+            specs.append(item)
+        elif isinstance(item, (tuple, list)) and len(item) in (2, 3):
+            name, pipeline = item[0], item[1]
+            weight = float(item[2]) if len(item) == 3 else 1.0
+            specs.append(TenantSpec(name=name, pipeline=pipeline,
+                                    weight=weight))
+        else:
+            raise TypeError(
+                f"tenant spec must be a TenantSpec, (name, pipeline[, "
+                f"weight]) tuple, or a name->pipeline mapping entry; "
+                f"got {item!r}")
+    if not specs:
+        raise ValueError("MultiPipelineServer needs at least one tenant")
+    return specs

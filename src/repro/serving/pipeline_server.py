@@ -58,6 +58,9 @@ from repro.pipeline.model import PipelineLike, as_config
 from repro.pipeline.protocols import backend_close, batch_hint
 
 
+_UNSET_SLO = object()  # "use the server's slo_s" sentinel
+
+
 class ServerClosed(RuntimeError):
     """The server no longer accepts (or cancelled) this request."""
 
@@ -159,6 +162,7 @@ class ServeTicket:
     rid: int
     doc: Document
     submitted_at: float
+    tenant: Optional[str] = None
     admitted_at: float = 0.0
     started_at: float = 0.0
     finished_at: float = 0.0
@@ -245,32 +249,192 @@ def _dist(vals: List[float]) -> Dict[str, float]:
     }
 
 
+class P2Quantile:
+    """P²-style online quantile estimator (Jain & Chlamtac 1985):
+    tracks one quantile of an unbounded stream in O(1) memory — five
+    markers whose heights approximate the quantile curve, adjusted
+    piecewise-parabolically as observations stream in. Exact for the
+    first five observations; after that the estimate tracks the true
+    quantile without retaining any samples."""
+
+    __slots__ = ("q", "_heights", "_pos", "_want", "_inc")
+
+    def __init__(self, q: float):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {q}")
+        self.q = q
+        self._heights: List[float] = []
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._want = [1.0, 1 + 2 * q, 1 + 4 * q, 3 + 2 * q, 5.0]
+        self._inc = [0.0, q / 2, q, (1 + q) / 2, 1.0]
+
+    def observe(self, x: float) -> None:
+        h = self._heights
+        if len(h) < 5:
+            h.append(float(x))
+            h.sort()
+            return
+        if x < h[0]:
+            h[0] = float(x)
+            k = 0
+        elif x >= h[4]:
+            h[4] = float(x)
+            k = 3
+        else:
+            k = next(i for i in range(4) if h[i] <= x < h[i + 1])
+        for i in range(k + 1, 5):
+            self._pos[i] += 1
+        for i in range(5):
+            self._want[i] += self._inc[i]
+        n = self._pos
+        for i in (1, 2, 3):
+            d = self._want[i] - n[i]
+            if (d >= 1 and n[i + 1] - n[i] > 1) or \
+                    (d <= -1 and n[i - 1] - n[i] < -1):
+                s = 1.0 if d > 0 else -1.0
+                cand = h[i] + s / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + s) * (h[i + 1] - h[i])
+                    / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - s) * (h[i] - h[i - 1])
+                    / (n[i] - n[i - 1]))
+                if not (h[i - 1] < cand < h[i + 1]):
+                    # parabolic prediction left the bracket: linear step
+                    j = i + int(s)
+                    cand = h[i] + s * (h[j] - h[i]) / (n[j] - n[i])
+                h[i] = cand
+                n[i] += s
+
+    def value(self) -> float:
+        h = self._heights
+        if not h:
+            return 0.0
+        if len(h) < 5:
+            return _percentile(h, self.q * 100.0)  # kept sorted
+        return h[2]
+
+
+class MetricSketch:
+    """Bounded accounting of one duration metric: running
+    count/sum/max plus one :class:`P2Quantile` per reported percentile
+    — O(1) memory however many requests stream through."""
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.max = 0.0
+        self._p50 = P2Quantile(0.50)
+        self._p95 = P2Quantile(0.95)
+        self._p99 = P2Quantile(0.99)
+
+    def observe(self, x: float) -> None:
+        self.count += 1
+        self.total += x
+        if x > self.max:
+            self.max = x
+        self._p50.observe(x)
+        self._p95.observe(x)
+        self._p99.observe(x)
+
+    def dist(self) -> Dict[str, float]:
+        return {
+            "p50": self._p50.value(), "p95": self._p95.value(),
+            "p99": self._p99.value(),
+            "mean": self.total / self.count if self.count else 0.0,
+            "max": self.max,
+        }
+
+
 class ServerStats:
     """Aggregated serving accounting, reported as one dict.
 
-    Collects a :class:`RequestRecord` per finished request plus
-    admission outcomes (rejected / cancelled) and batch sizes;
-    :meth:`report` derives throughput, p50/p95/p99 of latency split
-    into queue wait vs execute time, token/cost totals, and SLO
-    attainment. All counters are guarded — the serving loop and caller
-    threads observe concurrently.
+    Two retention modes share the reporting surface:
+
+    - ``mode="exact"`` keeps one :class:`RequestRecord` per finished
+      request; :meth:`report` derives every number from the full record
+      set, so virtual-time traces (``run_trace``) stay bit-reproducible.
+      Memory grows with request count — only acceptable for bounded
+      traces.
+    - ``mode="sketch"`` is the live-server mode: O(1) memory per metric.
+      Counters (requests, tokens, cost, batches) accumulate as scalars,
+      each duration metric keeps a :class:`MetricSketch` (P² online
+      percentiles — approximate, typically within a few percent of the
+      exact nearest-rank value), SLO violations are counted online
+      against the ``slo_s`` fixed at construction, and a rolling window
+      of the last ``window`` records feeds a ``recent`` section with
+      exact percentiles over that window. A long-lived threaded server
+      no longer grows without bound.
+
+    All counters are guarded — the serving loop and caller threads
+    observe concurrently.
     """
 
-    def __init__(self, opened_at: float = 0.0):
+    def __init__(self, opened_at: float = 0.0, mode: str = "exact",
+                 slo_s: Optional[float] = None, window: int = 512):
+        if mode not in ("exact", "sketch"):
+            raise ValueError(f"unknown stats mode {mode!r} "
+                             f"(expected 'exact' or 'sketch')")
         self.opened_at = opened_at
-        self.records: List[RequestRecord] = []
-        self.batch_sizes: List[int] = []
+        self.mode = mode
+        self.slo_s = slo_s
+        self.window = max(1, window)
         self.rejected = 0
         self.cancelled = 0
         self._lock = threading.Lock()
+        if mode == "exact":
+            self.records: List[RequestRecord] = []
+            self.batch_sizes: List[int] = []
+        else:
+            self._requests = 0
+            self._completed = 0
+            self._failed = 0
+            self._llm_calls = 0
+            self._in_tokens = 0
+            self._out_tokens = 0
+            self._cost = 0.0
+            self._slo_violations = 0
+            self._batches = 0
+            self._batch_sum = 0
+            self._batch_max = 0
+            self._last_finished = opened_at
+            self._metrics = {"latency_s": MetricSketch(),
+                             "queue_wait_s": MetricSketch(),
+                             "execute_s": MetricSketch()}
+            self._recent: Deque[RequestRecord] = deque(maxlen=self.window)
 
     def observe(self, record: RequestRecord) -> None:
         with self._lock:
-            self.records.append(record)
+            if self.mode == "exact":
+                self.records.append(record)
+                return
+            self._requests += 1
+            if record.ok:
+                self._completed += 1
+            else:
+                self._failed += 1
+            self._llm_calls += record.llm_calls
+            self._in_tokens += record.in_tokens
+            self._out_tokens += record.out_tokens
+            self._cost += record.cost
+            if record.finished_at > self._last_finished:
+                self._last_finished = record.finished_at
+            self._recent.append(record)
+            if record.ok:
+                self._metrics["latency_s"].observe(record.latency_s)
+                self._metrics["queue_wait_s"].observe(record.queue_wait_s)
+                self._metrics["execute_s"].observe(record.execute_s)
+                if self.slo_s is not None and \
+                        record.latency_s > self.slo_s:
+                    self._slo_violations += 1
 
     def observe_batch(self, size: int) -> None:
         with self._lock:
-            self.batch_sizes.append(size)
+            if self.mode == "exact":
+                self.batch_sizes.append(size)
+                return
+            self._batches += 1
+            self._batch_sum += size
+            if size > self._batch_max:
+                self._batch_max = size
 
     def count_rejected(self) -> None:
         with self._lock:
@@ -283,6 +447,17 @@ class ServerStats:
     def report(self, *, elapsed_s: Optional[float] = None,
                slo_s: Optional[float] = None,
                extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        if self.mode == "sketch":
+            # sketch mode counts SLO violations online against the
+            # construction-time target — it cannot re-score retired
+            # requests against a different one. Refuse loudly rather
+            # than silently reporting against the stale target.
+            if slo_s is not None and slo_s != self.slo_s:
+                raise ValueError(
+                    f"sketch-mode stats score SLO online against the "
+                    f"construction-time slo_s={self.slo_s}; cannot "
+                    f"re-report against slo_s={slo_s}")
+            return self._report_sketch(elapsed_s=elapsed_s, extra=extra)
         with self._lock:
             records = list(self.records)
             batches = list(self.batch_sizes)
@@ -295,6 +470,7 @@ class ServerStats:
             elapsed_s = end - self.opened_at
         lat = [r.latency_s for r in completed]
         rep: Dict[str, Any] = {
+            "stats_mode": "exact",
             "requests": len(records),
             "completed": len(completed),
             "failed": len(failed),
@@ -321,6 +497,61 @@ class ServerStats:
                 "slo_s": slo_s,
                 "violations": violations,
                 "attainment": (1.0 - violations / len(lat)) if lat else 1.0,
+            }
+        if extra:
+            rep.update(extra)
+        return rep
+
+    def _report_sketch(self, *, elapsed_s: Optional[float],
+                       extra: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+        with self._lock:
+            requests, completed = self._requests, self._completed
+            failed = self._failed
+            rejected, cancelled = self.rejected, self.cancelled
+            batches = self._batches
+            batch_sum, batch_max = self._batch_sum, self._batch_max
+            if elapsed_s is None:
+                elapsed_s = self._last_finished - self.opened_at
+            dists = {k: m.dist() for k, m in self._metrics.items()}
+            recent = list(self._recent)
+            violations = self._slo_violations
+            llm_calls = self._llm_calls
+            in_tokens, out_tokens = self._in_tokens, self._out_tokens
+            cost = self._cost
+        recent_ok = [r for r in recent if r.ok]
+        rep: Dict[str, Any] = {
+            "stats_mode": "sketch",
+            "requests": requests,
+            "completed": completed,
+            "failed": failed,
+            "rejected": rejected,
+            "cancelled": cancelled,
+            "batches": batches,
+            "mean_batch_size": batch_sum / batches if batches else 0.0,
+            "max_batch_size": batch_max,
+            "elapsed_s": elapsed_s,
+            "throughput_rps": (completed / elapsed_s
+                               if elapsed_s > 0 else 0.0),
+            "latency_s": dists["latency_s"],
+            "queue_wait_s": dists["queue_wait_s"],
+            "execute_s": dists["execute_s"],
+            "llm_calls": llm_calls,
+            "in_tokens": in_tokens,
+            "out_tokens": out_tokens,
+            "cost": cost,
+            "recent": {
+                "window": len(recent),
+                "latency_s": _dist([r.latency_s for r in recent_ok]),
+                "queue_wait_s": _dist([r.queue_wait_s for r in recent_ok]),
+                "execute_s": _dist([r.execute_s for r in recent_ok]),
+            },
+        }
+        if self.slo_s is not None:
+            rep["slo"] = {
+                "slo_s": self.slo_s,
+                "violations": violations,
+                "attainment": (1.0 - violations / completed
+                               if completed else 1.0),
             }
         if extra:
             rep.update(extra)
@@ -357,12 +588,15 @@ class PipelineServer:
                  seed: int = 0, fail_prob: float = 0.0,
                  slo_s: Optional[float] = None, clock: Any = None,
                  executor: Optional[Executor] = None,
-                 call_cache: Optional[CallCache] = None):
+                 call_cache: Optional[CallCache] = None,
+                 stats_mode: str = "auto", stats_window: int = 512):
         self._config = as_config(pipeline)
         validate_pipeline(self._config)
         if max_batch > max_inflight:
             raise ValueError(f"max_batch={max_batch} exceeds "
                              f"max_inflight={max_inflight}")
+        if stats_mode not in ("auto", "exact", "sketch"):
+            raise ValueError(f"unknown stats_mode {stats_mode!r}")
         self.clock = clock if clock is not None else MonotonicClock()
         self.executor = executor if executor is not None else Executor(
             backend, seed=seed, fail_prob=fail_prob, call_cache=call_cache)
@@ -371,7 +605,10 @@ class PipelineServer:
         self.batch_window_s = max(0.0, batch_window_s)
         self.workers = max(1, workers)
         self.slo_s = slo_s
-        self.stats = ServerStats(opened_at=self.clock.now())
+        # "auto": exact records for virtual-time traces (bit-reproducible
+        # reports), bounded sketch for the long-lived threaded loop
+        self.stats_mode = stats_mode
+        self.stats_window = stats_window
         self._cond = threading.Condition()
         self._queue: Deque[ServeTicket] = deque()
         self._inflight = 0
@@ -379,33 +616,110 @@ class PipelineServer:
         self._drain_on_close = True
         self._thread: Optional[threading.Thread] = None
         self._rid = 0
-        # dispatch counters already on the executor when this serving
-        # episode opened; report() subtracts them so a shared or reused
-        # executor doesn't leak foreign submit counts into the report
-        self._dispatch_base: Dict[str, int] = dict(
-            self.executor.dispatch_stats)
+        self._dispatch_base: Dict[str, int] = {}
+        self._reset_episode(trace=True)
+
+    # -- episode lifecycle ----------------------------------------------------
+
+    def _resolved_stats_mode(self, *, trace: bool) -> str:
+        if self.stats_mode != "auto":
+            return self.stats_mode
+        return "exact" if trace else "sketch"
+
+    def _new_stats(self, opened_at: float, *, trace: bool,
+                   slo_s: Optional[float] = _UNSET_SLO) -> ServerStats:
+        return ServerStats(
+            opened_at=opened_at,
+            mode=self._resolved_stats_mode(trace=trace),
+            slo_s=self.slo_s if slo_s is _UNSET_SLO else slo_s,
+            window=self.stats_window)
+
+    def _reset_episode(self, *, trace: bool) -> None:
+        """Open a fresh serving episode: stats, request ids, and the
+        dispatch-counter baseline restart so reports cover exactly this
+        episode (``report()`` subtracts the baseline, so a shared or
+        reused executor doesn't leak foreign submit counts in)."""
+        self.stats = self._new_stats(self.clock.now(), trace=trace)
+        self._rid = 0
+        self._dispatch_base = dict(self.executor.dispatch_stats)
+
+    # -- queue discipline (overridden by multi-tenant hosts) ------------------
+
+    def _enqueue(self, tk: ServeTicket) -> None:
+        self._queue.append(tk)
+
+    def _queued(self) -> int:
+        return len(self._queue)
+
+    def _oldest_admitted(self) -> float:
+        """Admission time of the longest-waiting queued ticket (the one
+        whose arrival opens the micro-batch window)."""
+        return self._queue[0].admitted_at
+
+    def _take_batch(self) -> List[ServeTicket]:
+        take = min(self.max_batch, len(self._queue))
+        return [self._queue.popleft() for _ in range(take)]
+
+    def _drain_queues(self) -> List[ServeTicket]:
+        out = list(self._queue)
+        self._queue.clear()
+        return out
 
     # -- shared batch execution ---------------------------------------------
 
-    def _make_ticket(self, doc: Document, submitted_at: float) -> ServeTicket:
+    def _make_ticket(self, doc: Document, submitted_at: float,
+                     tenant: Optional[str] = None) -> ServeTicket:
         self._rid += 1
-        return ServeTicket(rid=self._rid, doc=doc, submitted_at=submitted_at)
+        return ServeTicket(rid=self._rid, doc=doc,
+                           submitted_at=submitted_at, tenant=tenant)
+
+    def _arrival_ticket(self, rest: Tuple, submitted_at: float
+                        ) -> ServeTicket:
+        """Build the ticket for one trace-arrival entry; ``rest`` is the
+        entry minus its arrival time — ``(doc,)`` here, ``(tenant, doc)``
+        for multi-tenant hosts."""
+        (doc,) = rest
+        return self._make_ticket(doc, submitted_at=submitted_at)
+
+    def _job_config(self, tk: ServeTicket) -> Any:
+        """The pipeline the batch job for this ticket evaluates."""
+        return self._config
+
+    def _job_tags(self, batch: List[ServeTicket]
+                  ) -> Optional[List[Optional[str]]]:
+        """Session tags attributing dispatch volume (multi-tenant)."""
+        return None
+
+    def _observe_batch(self, batch: List[ServeTicket]) -> None:
+        self.stats.observe_batch(len(batch))
+
+    def _observe_record(self, tk: ServeTicket,
+                        record: RequestRecord) -> None:
+        self.stats.observe(record)
+
+    def _count_rejected(self, tenant: Optional[str]) -> None:
+        self.stats.count_rejected()
+
+    def _count_cancelled(self, cancelled: List[ServeTicket]) -> None:
+        self.stats.count_cancelled(len(cancelled))
 
     def _execute_batch(self, batch: List[ServeTicket]) -> None:
         """Run one coalesced batch through a cross-pipeline dispatch
         session: every request is an independent single-document job, so
         sibling requests' stage batches merge into shared
         ``Backend.submit`` chunks while outputs stay bit-identical to
-        per-request execution."""
+        per-request execution — also across *heterogeneous* pipelines
+        (multi-tenant hosts feed one plan per ticket)."""
         start = self.clock.now()
         for tk in batch:
             tk.started_at = start
-        jobs: List[Tuple[Any, Dataset]] = [(self._config, [tk.doc])
+        jobs: List[Tuple[Any, Dataset]] = [(self._job_config(tk), [tk.doc])
                                            for tk in batch]
         workers = self.workers if len(batch) > 1 else 1
         try:
             results = self.executor.run_session(jobs, workers=workers,
-                                                capture_errors=True)
+                                                capture_errors=True,
+                                                tags=self._job_tags(batch))
         except Exception as e:  # noqa: BLE001 — resolved per ticket
             # run_session(capture_errors=True) converts backend and
             # coordinator failures into per-job errors; this net is the
@@ -415,14 +729,14 @@ class PipelineServer:
             results = [SessionResult(docs=None, stats=ExecutionStats(),
                                      error=e) for _ in batch]
         end = self.clock.now()
-        self.stats.observe_batch(len(batch))
+        self._observe_batch(batch)
         for tk, res in zip(batch, results):
             tk.docs = res.docs
             tk.stats = res.stats
             tk.error = res.error
             tk.finished_at = end
             st = res.stats or ExecutionStats()
-            self.stats.observe(RequestRecord(
+            self._observe_record(tk, RequestRecord(
                 rid=tk.rid, submitted_at=tk.submitted_at,
                 started_at=tk.started_at, finished_at=tk.finished_at,
                 ok=res.error is None, batch_size=len(batch),
@@ -447,9 +761,10 @@ class PipelineServer:
             if self._thread is not None:
                 return self
             # the throughput clock starts when serving starts, not when
-            # the server object was built
-            self.stats.opened_at = self.clock.now()
-            self._dispatch_base = dict(self.executor.dispatch_stats)
+            # the server object was built; threaded episodes default to
+            # the bounded sketch stats (a live server is unbounded in
+            # request count, so its accounting must be O(1) per metric)
+            self._reset_episode(trace=False)
             self._thread = threading.Thread(target=self._loop,
                                             name="repro-pipeline-server",
                                             daemon=True)
@@ -468,6 +783,10 @@ class PipelineServer:
         are taken (bounded by ``timeout``); ``block=False`` raises
         :class:`ServerSaturated` immediately instead — admission
         pressure is the caller's signal to shed load."""
+        return self._submit_doc(doc, None, block=block, timeout=timeout)
+
+    def _submit_doc(self, doc: Document, tenant: Optional[str], *,
+                    block: bool, timeout: Optional[float]) -> ServeTicket:
         if self._thread is None:
             raise RuntimeError("server not started (call start() or use "
                                "run_trace for virtual-time serving)")
@@ -480,20 +799,20 @@ class PipelineServer:
                 if self._inflight < self.max_inflight:
                     break
                 if not block:
-                    self.stats.count_rejected()
+                    self._count_rejected(tenant)
                     raise ServerSaturated(
                         f"{self.max_inflight} requests in flight")
                 remaining = (None if deadline is None
                              else deadline - time.monotonic())
                 if remaining is not None and remaining <= 0:
-                    self.stats.count_rejected()
+                    self._count_rejected(tenant)
                     raise ServerSaturated(
                         f"no admission slot within {timeout}s")
                 self._cond.wait(remaining)
-            tk = self._make_ticket(doc, submitted)
+            tk = self._make_ticket(doc, submitted, tenant=tenant)
             tk.admitted_at = self.clock.now()
             self._inflight += 1
-            self._queue.append(tk)
+            self._enqueue(tk)
             self._cond.notify_all()
         return tk
 
@@ -512,10 +831,9 @@ class PipelineServer:
         report True (the loop must exit)."""
         if not (self._closed and not self._drain_on_close):
             return False
-        cancelled = list(self._queue)
-        self._queue.clear()
+        cancelled = self._drain_queues()
         self._inflight -= len(cancelled)
-        self.stats.count_cancelled(len(cancelled))
+        self._count_cancelled(cancelled)
         self._cond.notify_all()
         now = self.clock.now()
         for tk in cancelled:
@@ -530,9 +848,9 @@ class PipelineServer:
     def _loop(self) -> None:
         while True:
             with self._cond:
-                while not self._queue and not self._closed:
+                while not self._queued() and not self._closed:
                     self._cond.wait()
-                if not self._queue:
+                if not self._queued():
                     break  # closed and nothing left to serve
                 if self._cancel_queued_locked():
                     break
@@ -540,9 +858,9 @@ class PipelineServer:
                 # more requests coalesce until the window closes or the
                 # batch fills (shutdown closes it early)
                 if self.batch_window_s > 0 and \
-                        len(self._queue) < self.max_batch:
+                        self._queued() < self.max_batch:
                     close_at = time.monotonic() + self.batch_window_s
-                    while len(self._queue) < self.max_batch and \
+                    while self._queued() < self.max_batch and \
                             not self._closed:
                         left = close_at - time.monotonic()
                         if left <= 0:
@@ -552,8 +870,7 @@ class PipelineServer:
                 # cancels the batch we were about to form
                 if self._cancel_queued_locked():
                     break
-                take = min(self.max_batch, len(self._queue))
-                batch = [self._queue.popleft() for _ in range(take)]
+                batch = self._take_batch()
             try:
                 self._execute_batch(batch)
             finally:
@@ -639,33 +956,30 @@ class PipelineServer:
         # clock into this trace's numbers (call-cache state deliberately
         # carries over — see above)
         clock = self.clock
-        origin = clock.now()
-        self.stats = ServerStats(opened_at=origin)
-        self._rid = 0
-        self._dispatch_base = dict(self.executor.dispatch_stats)
-        pending: Deque[Tuple[float, Document]] = deque(
-            sorted(((origin + float(t), d) for t, d in arrivals),
+        self._reset_episode(trace=True)
+        pending: Deque[Tuple] = deque(
+            sorted(((clock.now() + float(a[0]),) + tuple(a[1:])
+                    for a in arrivals),
                    key=lambda td: td[0]))
         waiting: Deque[ServeTicket] = deque()  # arrived, no slot free
-        queue: Deque[ServeTicket] = deque()    # admitted
-        tickets: List[ServeTicket] = []
+        tickets: List[ServeTicket] = []        # admitted go to _enqueue
         inflight = 0
 
         def admit(tk: ServeTicket, at: float) -> None:
             nonlocal inflight
             tk.admitted_at = at
             inflight += 1
-            queue.append(tk)
+            self._enqueue(tk)
 
         def intake(until: float) -> None:
             """Arrivals due by ``until`` enter the admission flow: take
             a free slot at their arrival time or park in ``waiting``."""
             while pending and pending[0][0] <= until:
-                t, doc = pending.popleft()
-                tk = self._make_ticket(doc, submitted_at=t)
+                entry = pending.popleft()
+                tk = self._arrival_ticket(entry[1:], submitted_at=entry[0])
                 tickets.append(tk)
                 if inflight < self.max_inflight:
-                    admit(tk, at=t)
+                    admit(tk, at=entry[0])
                 else:
                     waiting.append(tk)
 
@@ -673,35 +987,34 @@ class PipelineServer:
             while waiting and inflight < self.max_inflight:
                 admit(waiting.popleft(), at=clock.now())
 
-        while pending or waiting or queue:
-            if not queue and not waiting:
+        while pending or waiting or self._queued():
+            if not self._queued() and not waiting:
                 # idle: jump to the next arrival
                 clock.advance_to(pending[0][0])
             intake(clock.now())
             drain_waiting()
-            if not queue:
+            if not self._queued():
                 continue
             # the batch window opens when the (serial) serving loop
             # picks the queue up — for a backlogged queue that is the
             # previous batch's finish time, not the requests'
             # mid-execution admission times — and in-window arrivals
             # join until the batch fills
-            window_open = max(queue[0].admitted_at, clock.now())
+            window_open = max(self._oldest_admitted(), clock.now())
             window_close = window_open + self.batch_window_s
-            while (len(queue) < self.max_batch
+            while (self._queued() < self.max_batch
                    and inflight < self.max_inflight
                    and pending and pending[0][0] <= window_close):
-                t, doc = pending.popleft()
-                clock.advance_to(t)
-                tk = self._make_ticket(doc, submitted_at=t)
+                entry = pending.popleft()
+                clock.advance_to(entry[0])
+                tk = self._arrival_ticket(entry[1:], submitted_at=entry[0])
                 tickets.append(tk)
-                admit(tk, at=t)
-            if len(queue) < self.max_batch:
+                admit(tk, at=entry[0])
+            if self._queued() < self.max_batch:
                 # a live server cannot know no further request is coming:
                 # it always waits the window out
                 clock.advance_to(window_close)
-            take = min(self.max_batch, len(queue))
-            batch = [queue.popleft() for _ in range(take)]
+            batch = self._take_batch()
             self._execute_batch(batch)  # the backend advances the clock
             # arrivals during execution found the admission queue open;
             # the batch's slots free only at its finish time

@@ -10,8 +10,9 @@ compiles once, and admission happens on the host between steps.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,17 +34,44 @@ class Request:
     finished_at: float = 0.0
 
 
+class SchedulerStalled(RuntimeError):
+    """``run_until_drained`` hit ``max_ticks`` with work still live.
+
+    Carries the split so callers can account for both sides instead of
+    silently receiving a partial drain: ``drained`` are the requests
+    that did finish this drain, ``stranded`` the in-flight and queued
+    requests left behind (still owned by the batcher — a later drain
+    can finish them).
+    """
+
+    def __init__(self, max_ticks: int, drained: List[Request],
+                 stranded: List[Request]):
+        super().__init__(
+            f"continuous batcher not drained after {max_ticks} ticks: "
+            f"{len(drained)} finished, {len(stranded)} stranded")
+        self.drained = drained
+        self.stranded = stranded
+
+
 class ContinuousBatcher:
-    """Single-host scheduler over a fixed decode batch."""
+    """Single-host scheduler over a fixed decode batch.
+
+    ``clock`` stamps ``Request.submitted_at`` / ``finished_at``; it
+    defaults to ``time.time`` but serving hosts that account latency on
+    a virtual clock inject their own callable so batcher timestamps
+    participate in the same deterministic timeline.
+    """
 
     def __init__(self, params, cfg: ModelConfig, num_slots: int = 4,
-                 max_len: int = 512, eos_id: int = 2):
+                 max_len: int = 512, eos_id: int = 2,
+                 clock: Callable[[], float] = time.time):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self.queue: List[Request] = []
+        self.clock = clock
+        self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.cache = api.init_cache(cfg, num_slots, max_len)
         self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
@@ -56,41 +84,62 @@ class ContinuousBatcher:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         self._uid += 1
         self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, submitted_at=time.time()))
+                                  max_new_tokens, submitted_at=self.clock()))
         return self._uid
 
     # -- internals ---------------------------------------------------------
 
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        req.finished_at = self.clock()
+        self.finished.append(req)
+
     def _admit(self):
         """Fill empty slots: prefill each incoming prompt and splice its
-        cache into the batch cache at the slot index."""
+        cache into the batch cache at the slot index. A request whose
+        prefill-generated token already terminates it (EOS on the first
+        token, or ``max_new_tokens`` reached) retires here instead of
+        occupying a decode slot — the slot goes to the next queued
+        request."""
         for slot in range(self.num_slots):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None:
                 continue
-            req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt[None, :])
-            logits, cache1 = api.prefill(self.params, self.cfg,
-                                         self.max_len, tokens=prompt)
-            # splice single-sequence cache into the batch cache
-            def splice(batch_leaf, one_leaf):
-                if batch_leaf.ndim == 0 or one_leaf.shape == batch_leaf.shape:
+            while self.queue:
+                req = self.queue.popleft()
+                prompt = jnp.asarray(req.prompt[None, :])
+                logits, cache1 = api.prefill(self.params, self.cfg,
+                                             self.max_len, tokens=prompt)
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(tok)
+                if tok == self.eos_id or \
+                        len(req.generated) >= req.max_new_tokens:
+                    # done at prefill: retire without touching the batch
+                    # cache and offer the slot to the next queued request
+                    self._retire(req)
+                    continue
+
+                # splice single-sequence cache into the batch cache
+                def splice(batch_leaf, one_leaf):
+                    if batch_leaf.ndim == 0 or \
+                            one_leaf.shape == batch_leaf.shape:
+                        return batch_leaf
+                    # find the batch axis: the axis where shapes differ
+                    for ax in range(batch_leaf.ndim):
+                        if batch_leaf.shape[ax] == self.num_slots and \
+                                one_leaf.shape[ax] == 1:
+                            return jax.lax.dynamic_update_slice_in_dim(
+                                batch_leaf,
+                                one_leaf.astype(batch_leaf.dtype),
+                                slot, axis=ax)
                     return batch_leaf
-                # find the batch axis: the axis where shapes differ
-                for ax in range(batch_leaf.ndim):
-                    if batch_leaf.shape[ax] == self.num_slots and \
-                            one_leaf.shape[ax] == 1:
-                        return jax.lax.dynamic_update_slice_in_dim(
-                            batch_leaf, one_leaf.astype(batch_leaf.dtype),
-                            slot, axis=ax)
-                return batch_leaf
-            new_cache = jax.tree.map(splice, dict(self.cache), dict(cache1))
-            new_cache["len"] = self.cache["len"]  # batch len handled below
-            self.cache = new_cache
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(tok)
-            self.tokens = self.tokens.at[slot, 0].set(tok)
-            self.slots[slot] = req
-            self._slot_len[slot] = len(req.prompt)
+                new_cache = jax.tree.map(splice, dict(self.cache),
+                                         dict(cache1))
+                new_cache["len"] = self.cache["len"]  # batch len: see step
+                self.cache = new_cache
+                self.tokens = self.tokens.at[slot, 0].set(tok)
+                self.slots[slot] = req
+                self._slot_len[slot] = len(req.prompt)
+                break
 
     def _uniform_len(self) -> int:
         """The batch cache tracks one length; slots prefix-pad to align.
@@ -114,9 +163,7 @@ class ContinuousBatcher:
             t = int(tok[i, 0])
             req.generated.append(t)
             if t == self.eos_id or len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                req.finished_at = time.time()
-                self.finished.append(req)
+                self._retire(req)
                 self.slots[i] = None
                 self._slot_len[i] = 0
         return len(active)
@@ -125,9 +172,21 @@ class ContinuousBatcher:
         """Step until queue and slots are empty; drain and return the
         requests completed since the last drain (a persistent batcher —
         e.g. JaxBackend's per-model instance — can call this repeatedly
-        without re-collecting or accumulating earlier batches)."""
+        without re-collecting or accumulating earlier batches).
+
+        Raises :class:`SchedulerStalled` if ``max_ticks`` elapse with
+        requests still queued or in flight — a silent partial drain
+        would hand the caller an incomplete batch with no signal. The
+        exception carries the drained/stranded split; stranded requests
+        stay owned by the batcher, so a later (larger-budget) drain can
+        still finish them."""
         ticks = 0
-        while (self.queue or any(self.slots)) and ticks < max_ticks:
+        while self.queue or any(r is not None for r in self.slots):
+            if ticks >= max_ticks:
+                done, self.finished = self.finished, []
+                stranded = [r for r in self.slots if r is not None] \
+                    + list(self.queue)
+                raise SchedulerStalled(max_ticks, done, stranded)
             self.step()
             ticks += 1
         done, self.finished = self.finished, []

@@ -1,0 +1,447 @@
+"""Multi-tenant serving: MultiPipelineServer policy contracts.
+
+The contracts under test:
+
+- **Cross-tenant coalescing is invisible.** A coalesced multi-tenant
+  trace produces bit-identical per-document outputs and usage
+  accounting to serving each tenant alone on its own single-plan
+  server — and to a plain ``Executor.run`` per document. Coalescing
+  only reduces ``Backend.submit`` round trips.
+- **Weighted-fair admission.** Under saturation, deficit-round-robin
+  serves tenants proportionally to their weights (exact on a
+  deterministic burst) and never starves a backlogged tenant.
+- **Bounded stats.** Threaded episodes run O(1)-memory sketch stats;
+  traces keep exact records; sketch percentiles track exact ones
+  within the documented error.
+- **Lifecycle parity.** Routing errors, per-tenant SLO accounting,
+  cancellation across tenant queues, and trace reproducibility all
+  behave like the single-plan server, per tenant.
+"""
+
+import random
+import threading
+from collections import Counter
+
+import pytest
+
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.workloads import WORKLOADS
+from repro.serving.multi_server import (MultiPipelineServer, TenantSpec,
+                                        UnknownTenant)
+from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
+                                           ServerStats, VirtualClock,
+                                           VirtualLatencyBackend)
+
+CUAD = WORKLOADS["cuad"]()
+MEDEC = WORKLOADS["medec"]()
+
+
+def _docs(workload, n, prefix):
+    return [dict(workload.sample[i % len(workload.sample)],
+                 id=f"{prefix}{i}") for i in range(n)]
+
+
+def _usage_fp(ticket):
+    st = ticket.stats
+    return (st.cost, st.llm_calls, st.in_tokens, st.out_tokens,
+            st.latency_s)
+
+
+def _backend(clock, base_s=0.05):
+    return VirtualLatencyBackend(
+        SimBackend(seed=0, domain="generic"), clock, base_s=base_s,
+        preferred_batch_size=64)
+
+
+def _multi_server(tenants, *, max_batch=6, workers=3, base_s=0.05,
+                  window_s=0.02, max_inflight=64):
+    clock = VirtualClock()
+    return MultiPipelineServer(
+        tenants, _backend(clock, base_s), max_inflight=max_inflight,
+        max_batch=max_batch, batch_window_s=window_s, workers=workers,
+        clock=clock)
+
+
+# -- cross-tenant coalescing equivalence ---------------------------------------
+
+
+def test_cross_tenant_coalescing_bit_identical():
+    """Heterogeneous tenants coalesced into shared rounds == each
+    tenant served alone == direct per-document execution."""
+    dl, dm = _docs(CUAD, 8, "l"), _docs(MEDEC, 8, "m")
+    arrivals = []
+    for i in range(8):
+        arrivals.append((0.004 * i, "legal", dl[i]))
+        arrivals.append((0.004 * i + 0.001, "medical", dm[i]))
+
+    srv = _multi_server([TenantSpec("legal", CUAD.initial_pipeline,
+                                    weight=2.0),
+                         TenantSpec("medical", MEDEC.initial_pipeline)])
+    tks = srv.run_trace(arrivals)
+    assert all(t.error is None for t in tks)
+    by_tenant = {"legal": [t for t in tks if t.tenant == "legal"],
+                 "medical": [t for t in tks if t.tenant == "medical"]}
+
+    solo_submits = 0
+    for name, workload, docs in (("legal", CUAD, dl),
+                                 ("medical", MEDEC, dm)):
+        clock = VirtualClock()
+        solo = PipelineServer(workload.initial_pipeline, _backend(clock),
+                              max_batch=6, batch_window_s=0.02, workers=3,
+                              clock=clock)
+        solo_tks = solo.run_trace([(0.004 * i, d)
+                                   for i, d in enumerate(docs)])
+        solo_submits += solo.report()["dispatch"]["submit_calls"]
+        assert [t.doc["id"] for t in by_tenant[name]] == \
+            [t.doc["id"] for t in solo_tks]
+        for a, b in zip(by_tenant[name], solo_tks):
+            assert a.docs == b.docs
+            assert _usage_fp(a) == _usage_fp(b)
+        # ...and both match a plain Executor.run per document
+        ex = Executor(SimBackend(seed=0, domain="generic"), seed=0)
+        for t in by_tenant[name]:
+            out, stats = ex.run(workload.initial_pipeline, [t.doc])
+            assert t.docs == out
+            assert _usage_fp(t) == (stats.cost, stats.llm_calls,
+                                    stats.in_tokens, stats.out_tokens,
+                                    stats.latency_s)
+
+    # coalescing actually merged across tenants: fewer submit round
+    # trips than the two solo servers combined, and the per-tag session
+    # counters attribute every job to its tenant
+    rep = srv.report()
+    assert rep["dispatch"]["submit_calls"] < solo_submits
+    assert rep["dispatch"]["merged_stages"] > 0
+    for name in ("legal", "medical"):
+        assert rep["tenants"][name]["dispatched"]["jobs"] == 8
+        assert rep["tenants"][name]["completed"] == 8
+
+
+def test_multi_trace_is_reproducible():
+    dl, dm = _docs(CUAD, 6, "l"), _docs(MEDEC, 6, "m")
+    arrivals = [(0.01 * i, ("a" if i % 2 else "b"),
+                 (dl[i // 2] if i % 2 else dm[i // 2]))
+                for i in range(12)]
+    reports = []
+    for _ in range(2):
+        srv = _multi_server([("a", CUAD.initial_pipeline, 2.0),
+                             ("b", MEDEC.initial_pipeline, 1.0)])
+        srv.run_trace(arrivals)
+        reports.append(srv.report())
+    assert reports[0] == reports[1]
+    assert reports[0]["stats_mode"] == "exact"
+
+
+# -- weighted-fair admission ---------------------------------------------------
+
+
+def test_weighted_fair_admission_under_saturation():
+    """Deterministic burst, weights 4:2:1: DRR serves the first half of
+    the backlog in exact weight proportion, and the lightest tenant is
+    served from the very first cycle (starvation-free)."""
+    tenants = [TenantSpec("a", CUAD.initial_pipeline, weight=4.0),
+               TenantSpec("b", CUAD.initial_pipeline, weight=2.0),
+               TenantSpec("c", CUAD.initial_pipeline, weight=1.0)]
+    srv = _multi_server(tenants, max_batch=7, window_s=0.0,
+                        max_inflight=200)
+    arrivals = [(0.0, name, d) for name in ("a", "b", "c")
+                for d in _docs(CUAD, 28, name)]
+    tks = srv.run_trace(arrivals)
+    assert all(t.error is None for t in tks)
+
+    order = sorted(tks, key=lambda t: (t.started_at, t.rid))
+    shares = Counter(t.tenant for t in order[:42])  # first half
+    assert shares == {"a": 24, "b": 12, "c": 6}     # exact 4:2:1
+    # starvation-free: every tenant rides the first batch
+    first_batch_start = order[0].started_at
+    for name in ("a", "b", "c"):
+        assert min(t.started_at for t in order if t.tenant == name) \
+            == first_batch_start
+    rep = srv.report()
+    assert all(rep["tenants"][n]["completed"] == 28 for n in "abc")
+
+
+def test_weights_hold_when_batch_smaller_than_drr_cycle():
+    """Regression: when max_batch cannot hold a full DRR cycle (sum of
+    quanta), the cut-short tenant must be resumed without a fresh
+    quantum — advancing past it used to collapse the served shares
+    toward equal (4:1 weights served ~1:1 at max_batch=2)."""
+    srv = _multi_server([TenantSpec("A", CUAD.initial_pipeline,
+                                    weight=4.0),
+                         TenantSpec("B", CUAD.initial_pipeline,
+                                    weight=1.0)],
+                        max_batch=2, window_s=0.0, max_inflight=300)
+    burst = [(0.0, name, d) for name in ("A", "B")
+             for d in _docs(CUAD, 80, name)]
+    tks = srv.run_trace(burst)
+    assert all(t.error is None for t in tks)
+    order = sorted(tks, key=lambda t: (t.started_at, t.rid))
+    shares = Counter(t.tenant for t in order[:80])
+    assert shares == {"A": 64, "B": 16}  # exact 4:1
+
+
+def test_equal_weights_round_robin():
+    """Equal weights degrade to round-robin: equal shares at every
+    prefix of the served order (within one batch of slack)."""
+    srv = _multi_server([("x", CUAD.initial_pipeline),
+                         ("y", CUAD.initial_pipeline)],
+                        max_batch=4, window_s=0.0, max_inflight=100)
+    arrivals = [(0.0, name, d) for name in ("x", "y")
+                for d in _docs(CUAD, 12, name)]
+    tks = srv.run_trace(arrivals)
+    order = sorted(tks, key=lambda t: (t.started_at, t.rid))
+    for cut in range(4, 25, 4):
+        shares = Counter(t.tenant for t in order[:cut])
+        assert abs(shares["x"] - shares["y"]) <= 2
+
+
+# -- routing / spec validation -------------------------------------------------
+
+
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError, match="at least one tenant"):
+        MultiPipelineServer([], SimBackend(seed=0))
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        MultiPipelineServer([("a", CUAD.initial_pipeline),
+                             ("a", MEDEC.initial_pipeline)],
+                            SimBackend(seed=0))
+    with pytest.raises(ValueError, match="weight"):
+        MultiPipelineServer([("a", CUAD.initial_pipeline, 0.0)],
+                            SimBackend(seed=0))
+    srv = MultiPipelineServer({"m": MEDEC.initial_pipeline},
+                              SimBackend(seed=0))
+    assert srv.tenants == ("m",)
+    with pytest.raises(UnknownTenant):
+        srv._tenant("nope")
+
+
+def test_unknown_tenant_rejected_on_trace_and_submit():
+    srv = _multi_server([("a", CUAD.initial_pipeline)])
+    with pytest.raises(UnknownTenant):
+        srv.run_trace([(0.0, "ghost", CUAD.sample[0])])
+
+
+# -- per-tenant SLO ------------------------------------------------------------
+
+
+def test_per_tenant_slo_accounting():
+    """Each tenant's report scores against its own slo_s: the same
+    latencies violate a tight budget and satisfy a loose one."""
+    dl = _docs(CUAD, 4, "l")
+    srv = _multi_server(
+        [TenantSpec("tight", CUAD.initial_pipeline, slo_s=0.01),
+         TenantSpec("loose", CUAD.initial_pipeline, slo_s=10.0)],
+        base_s=0.05)
+    arrivals = []
+    for i, d in enumerate(dl):
+        arrivals.append((0.001 * i, "tight", dict(d, id=f"t{i}")))
+        arrivals.append((0.001 * i, "loose", dict(d, id=f"o{i}")))
+    srv.run_trace(arrivals)
+    rep = srv.report()
+    assert rep["tenants"]["tight"]["slo"]["violations"] == 4
+    assert rep["tenants"]["tight"]["slo"]["attainment"] == 0.0
+    assert rep["tenants"]["loose"]["slo"]["violations"] == 0
+    assert rep["tenants"]["loose"]["slo"]["attainment"] == 1.0
+
+
+def test_tenant_without_slo_inherits_host_slo():
+    """A tenant spec that omits slo_s is scored against the host-level
+    slo_s (and still gets an 'slo' section in its sub-report)."""
+    clock = VirtualClock()
+    srv = MultiPipelineServer(
+        [TenantSpec("a", CUAD.initial_pipeline),          # no slo_s
+         TenantSpec("b", CUAD.initial_pipeline, slo_s=10.0)],
+        _backend(clock), max_batch=4, batch_window_s=0.0, workers=2,
+        clock=clock, slo_s=0.01)
+    srv.run_trace([(0.0, "a", dict(CUAD.sample[0], id="a0")),
+                   (0.0, "b", dict(CUAD.sample[1], id="b0"))])
+    rep = srv.report()
+    assert rep["tenants"]["a"]["slo"]["slo_s"] == 0.01   # inherited
+    assert rep["tenants"]["a"]["slo"]["violations"] == 1
+    assert rep["tenants"]["b"]["slo"]["slo_s"] == 10.0   # own target wins
+    assert rep["tenants"]["b"]["slo"]["violations"] == 0
+
+
+# -- threaded mode -------------------------------------------------------------
+
+
+def test_threaded_multitenant_serving():
+    srv = MultiPipelineServer(
+        [("legal", CUAD.initial_pipeline, 2.0),
+         ("medical", MEDEC.initial_pipeline)],
+        SimBackend(seed=0, domain="generic"),
+        max_batch=4, batch_window_s=0.002, workers=2)
+    with srv:
+        tks = srv.serve([("legal" if i % 2 else "medical",
+                          dict((CUAD if i % 2 else MEDEC)
+                               .sample[i % 3], id=f"r{i}"))
+                         for i in range(10)])
+    assert all(t.error is None and t.docs for t in tks)
+    rep = srv.report()
+    assert rep["stats_mode"] == "sketch"      # bounded live accounting
+    assert rep["completed"] == 10
+    assert rep["tenants"]["legal"]["completed"] == 5
+    assert rep["tenants"]["medical"]["completed"] == 5
+    assert rep["tenants"]["legal"]["stats_mode"] == "sketch"
+    with pytest.raises(UnknownTenant):
+        srv.submit("ghost", CUAD.sample[0])
+
+
+class _GateBackend(SimBackend):
+    """Blocks every submit until the test releases the gate."""
+
+    concurrent_submit = False
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def submit(self, requests):
+        self.entered.set()
+        assert self.gate.wait(10), "test never released the gate"
+        return super().submit(requests)
+
+
+def test_shutdown_cancels_across_tenant_queues():
+    """Non-drain shutdown cancels every tenant's queued requests and
+    counts the cancellations per tenant."""
+    be = _GateBackend(seed=0, domain="generic")
+    srv = MultiPipelineServer([("a", CUAD.initial_pipeline),
+                               ("b", MEDEC.initial_pipeline)], be,
+                              max_inflight=16, max_batch=2,
+                              batch_window_s=0.5, workers=2)
+    srv.start()
+    first = [srv.submit("a", d) for d in _docs(CUAD, 2, "x")]
+    assert be.entered.wait(10)  # batch of 2 is executing
+    queued = [srv.submit("a", d) for d in _docs(CUAD, 2, "y")] + \
+             [srv.submit("b", d) for d in _docs(MEDEC, 3, "z")]
+    stopper = threading.Thread(target=lambda: srv.shutdown(drain=False))
+    stopper.start()
+    be.gate.set()
+    stopper.join(10)
+    assert not stopper.is_alive()
+    for tk in first:
+        assert tk.error is None and tk.docs
+    for tk in queued:
+        assert tk.error is not None
+    rep = srv.report()
+    assert rep["cancelled"] == 5
+    assert rep["tenants"]["a"]["cancelled"] == 2
+    assert rep["tenants"]["b"]["cancelled"] == 3
+
+
+# -- bounded stats -------------------------------------------------------------
+
+
+def _synthetic_records(n, seed=0):
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for i in range(n):
+        t += rng.expovariate(100)
+        queue = rng.expovariate(50)
+        execute = 0.02 + rng.expovariate(20)
+        out.append(RequestRecord(
+            rid=i, submitted_at=t, started_at=t + queue,
+            finished_at=t + queue + execute, ok=True, batch_size=4,
+            llm_calls=2, in_tokens=100 + i, out_tokens=10, cost=0.001))
+    return out
+
+
+def test_sketch_stats_match_exact_within_documented_error():
+    """On the same record stream, sketch counters are exactly equal to
+    the exact mode's and P² percentiles land within the documented
+    error (a few percent; asserted at 10% / 15% for p99)."""
+    records = _synthetic_records(600)
+    exact = ServerStats(opened_at=0.0, mode="exact")
+    sketch = ServerStats(opened_at=0.0, mode="sketch", slo_s=0.2,
+                         window=128)
+    for r in records:
+        exact.observe(r)
+        sketch.observe(r)
+        exact.observe_batch(r.batch_size)
+        sketch.observe_batch(r.batch_size)
+    re_, rs = exact.report(slo_s=0.2), sketch.report()
+    for key in ("requests", "completed", "failed", "batches",
+                "mean_batch_size", "max_batch_size", "llm_calls",
+                "in_tokens", "out_tokens", "elapsed_s",
+                "throughput_rps"):
+        assert rs[key] == re_[key], key
+    assert rs["cost"] == pytest.approx(re_["cost"])
+    assert rs["slo"]["violations"] == re_["slo"]["violations"]
+    assert rs["slo"]["attainment"] == pytest.approx(
+        re_["slo"]["attainment"])
+    for metric in ("latency_s", "queue_wait_s", "execute_s"):
+        assert rs[metric]["mean"] == pytest.approx(re_[metric]["mean"])
+        assert rs[metric]["max"] == re_[metric]["max"]
+        for q, tol in (("p50", 0.10), ("p95", 0.10), ("p99", 0.15)):
+            got, want = rs[metric][q], re_[metric][q]
+            assert abs(got - want) <= tol * want, (metric, q, got, want)
+    # the rolling window reports exact percentiles over the last W
+    recent = rs["recent"]
+    assert recent["window"] == 128
+    tail = records[-128:]
+    tail_lat = sorted(r.latency_s for r in tail)
+    assert recent["latency_s"]["max"] == tail_lat[-1]
+
+
+def test_sketch_report_rejects_mismatched_slo():
+    """Sketch mode counts SLO violations online against the
+    construction-time target; re-reporting against another must fail
+    loudly instead of silently using the stale target (exact mode can
+    re-score and keeps honoring the report-time value)."""
+    records = _synthetic_records(20)
+    sketch = ServerStats(opened_at=0.0, mode="sketch", slo_s=0.2)
+    exact = ServerStats(opened_at=0.0, mode="exact")
+    for r in records:
+        sketch.observe(r)
+        exact.observe(r)
+    assert sketch.report(slo_s=0.2)["slo"]["slo_s"] == 0.2  # same: fine
+    with pytest.raises(ValueError, match="construction-time"):
+        sketch.report(slo_s=0.5)
+    # exact mode re-scores at report time
+    assert exact.report(slo_s=0.5)["slo"]["slo_s"] == 0.5
+
+
+def test_sketch_stats_memory_is_bounded():
+    """20k requests through a sketch ServerStats retain no per-request
+    records beyond the fixed rolling window."""
+    sketch = ServerStats(opened_at=0.0, mode="sketch", window=64)
+    for r in _synthetic_records(20_000):
+        sketch.observe(r)
+    assert not hasattr(sketch, "records")
+    assert not hasattr(sketch, "batch_sizes")
+    assert len(sketch._recent) == 64
+    rep = sketch.report()
+    assert rep["requests"] == 20_000 and rep["recent"]["window"] == 64
+
+
+def test_stats_mode_resolution():
+    """auto => exact records for traces (bit-reproducible reports),
+    bounded sketch for the threaded loop; explicit override wins."""
+    clock = VirtualClock()
+    srv = PipelineServer(MEDEC.initial_pipeline, _backend(clock),
+                         max_batch=2, batch_window_s=0.0, workers=1,
+                         clock=clock)
+    srv.run_trace([(0.0, dict(MEDEC.sample[0], id="t0"))])
+    assert srv.stats.mode == "exact"
+    assert srv.report()["stats_mode"] == "exact"
+
+    threaded = PipelineServer(MEDEC.initial_pipeline,
+                              SimBackend(seed=0, domain=MEDEC.domain),
+                              max_batch=2, batch_window_s=0.001)
+    with threaded:
+        threaded.serve(_docs(MEDEC, 3, "r"))
+    assert threaded.stats.mode == "sketch"
+    rep = threaded.report()
+    assert rep["stats_mode"] == "sketch" and rep["completed"] == 3
+
+    forced = PipelineServer(MEDEC.initial_pipeline,
+                            SimBackend(seed=0, domain=MEDEC.domain),
+                            max_batch=2, batch_window_s=0.001,
+                            stats_mode="exact")
+    with forced:
+        forced.serve(_docs(MEDEC, 2, "s"))
+    assert forced.stats.mode == "exact"
+    assert forced.report()["completed"] == 2

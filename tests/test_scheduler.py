@@ -1,0 +1,179 @@
+"""ContinuousBatcher regressions: admit-time retirement, drain
+stranding, clock injection.
+
+A stub model (scripted prefill logits + a ``tokens + 1`` decode step)
+stands in for the real JAX models, so these tests pin the *scheduler's*
+host-side bookkeeping without paying model compilation:
+
+- a request whose prefill-generated first token is EOS (or whose
+  ``max_new_tokens`` is 1) must retire at admit time instead of
+  occupying a decode slot and appending tokens past EOS until the cap;
+- ``run_until_drained`` hitting ``max_ticks`` must raise
+  :class:`SchedulerStalled` with the drained/stranded split instead of
+  silently returning a partial drain;
+- ``submitted_at`` / ``finished_at`` come from the injected clock so
+  batcher latency accounting can ride a virtual timeline.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.serving import scheduler as sched  # noqa: E402
+from repro.serving.scheduler import SchedulerStalled  # noqa: E402
+
+
+class _StubApi:
+    """Stands in for ``repro.models.api``: prefill emits logits peaked
+    at a scripted first token; the cache is a trivial dict."""
+
+    def __init__(self, first_token: int, vocab: int = 16):
+        self.first_token = first_token
+        self.vocab = vocab
+        self.prefills = 0
+
+    def init_cache(self, cfg, num_slots, max_len):
+        return {"len": jnp.asarray(0, jnp.int32)}
+
+    def prefill(self, params, cfg, max_len, tokens):
+        self.prefills += 1
+        logits = np.zeros((1, tokens.shape[1], self.vocab), np.float32)
+        logits[0, -1, self.first_token] = 1.0
+        return jnp.asarray(logits), {"len": jnp.asarray(0, jnp.int32)}
+
+
+def _stub_step(cfg):
+    # decode: next token = previous + 1 (never EOS for eos_id < first)
+    def step(params, tokens, cache):
+        return tokens + 1, cache
+    return step
+
+
+class _TickClock:
+    """Deterministic fake clock: each call advances by one tick."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        self.t += 1.0
+        return self.t
+
+
+def _batcher(monkeypatch, first_token, *, eos_id=2, num_slots=2,
+             clock=None, stub=None):
+    stub = stub or _StubApi(first_token)
+    monkeypatch.setattr(sched, "api", stub)
+    monkeypatch.setattr(sched, "make_serve_step", _stub_step)
+    kwargs = {} if clock is None else {"clock": clock}
+    return sched.ContinuousBatcher(None, None, num_slots=num_slots,
+                                   max_len=32, eos_id=eos_id,
+                                   **kwargs), stub
+
+
+def test_eos_on_prefill_retires_at_admit(monkeypatch):
+    """Regression: a request whose FIRST generated token is EOS used to
+    occupy a decode slot and keep appending tokens until max_new_tokens;
+    it must retire at admit time with exactly the one token."""
+    b, stub = _batcher(monkeypatch, first_token=2, eos_id=2)
+    for i in range(3):
+        b.submit(np.arange(4), max_new_tokens=8)
+    # one tick admits (and retires) everything: no decode step needed
+    assert b.step() == 0
+    assert all(s is None for s in b.slots)
+    done = b.run_until_drained()
+    assert len(done) == 3
+    for r in done:
+        assert r.done and r.generated == [2]
+        assert r.finished_at > 0.0
+    assert stub.prefills == 3
+
+
+def test_max_new_tokens_one_retires_at_admit(monkeypatch):
+    b, _ = _batcher(monkeypatch, first_token=5, eos_id=2)
+    b.submit(np.arange(3), max_new_tokens=1)
+    done = b.run_until_drained()
+    assert len(done) == 1
+    assert done[0].generated == [5]
+
+
+def test_retired_admit_frees_slot_for_next_request(monkeypatch):
+    """Admit-time retirement must offer the slot to the next queued
+    request in the same tick — 5 instant-EOS requests drain through 2
+    slots in one step."""
+    b, _ = _batcher(monkeypatch, first_token=2, eos_id=2, num_slots=2)
+    for _ in range(5):
+        b.submit(np.arange(4), max_new_tokens=4)
+    assert b.step() == 0
+    assert len(b.finished) == 5 and not b.queue
+
+
+def test_normal_decode_still_stops_at_eos_and_cap(monkeypatch):
+    """Non-degenerate requests keep the existing step-time semantics:
+    decode until the cap (the stub never emits EOS mid-decode)."""
+    b, _ = _batcher(monkeypatch, first_token=5, eos_id=2)
+    b.submit(np.arange(4), max_new_tokens=3)
+    done = b.run_until_drained()
+    assert len(done) == 1
+    assert done[0].generated == [5, 6, 7]  # tokens+1 per step, cap at 3
+
+
+def test_run_until_drained_raises_on_stall(monkeypatch):
+    """Regression: hitting max_ticks used to silently return a partial
+    drain; callers must get the drained/stranded split instead."""
+    b, _ = _batcher(monkeypatch, first_token=5, eos_id=2)
+    b.submit(np.arange(4), max_new_tokens=1)    # retires at admit
+    b.submit(np.arange(4), max_new_tokens=10)   # needs 9 decode ticks
+    with pytest.raises(SchedulerStalled) as ei:
+        b.run_until_drained(max_ticks=3)
+    err = ei.value
+    assert [r.generated for r in err.drained] == [[5]]
+    assert len(err.stranded) == 1 and not err.stranded[0].done
+    # the stranded request stays owned by the batcher: a later drain
+    # with budget finishes it
+    done = b.run_until_drained()
+    assert len(done) == 1 and len(done[0].generated) == 10
+
+
+def test_injected_clock_stamps_requests(monkeypatch):
+    """submitted_at/finished_at must come from the injected clock (not
+    raw time.time) so batcher accounting can join a virtual timeline."""
+    clock = _TickClock()
+    b, _ = _batcher(monkeypatch, first_token=5, eos_id=2, clock=clock)
+    uid = b.submit(np.arange(4), max_new_tokens=2)
+    done = b.run_until_drained()
+    assert done[0].uid == uid
+    assert done[0].submitted_at == 1.0          # first clock tick
+    assert done[0].finished_at == clock.t       # last clock tick
+    assert done[0].finished_at > done[0].submitted_at
+
+
+def test_default_clock_is_wall_time(monkeypatch):
+    b, _ = _batcher(monkeypatch, first_token=2, eos_id=2)
+    b.submit(np.arange(4))
+    (r,) = b.run_until_drained()
+    import time
+    assert abs(r.submitted_at - time.time()) < 60.0
+
+
+def test_jax_backend_normalizes_clock_objects():
+    """JaxBackend accepts either a bare callable or a serving-layer
+    clock object (.now(), e.g. VirtualClock) and threads the resulting
+    callable into its batchers."""
+    from repro.engine.backend import JaxBackend
+    from repro.serving.pipeline_server import VirtualClock
+
+    vc = VirtualClock(start=7.5)
+    be = JaxBackend(seed=0, clock=vc)
+    assert be.clock() == 7.5
+    vc.advance(1.0)
+    assert be.clock() == 8.5
+
+    ticks = iter((1.0, 2.0))
+    be2 = JaxBackend(seed=0, clock=lambda: next(ticks))
+    assert be2.clock() == 1.0 and be2.clock() == 2.0
+
+    import time
+    assert abs(JaxBackend(seed=0).clock() - time.time()) < 60.0
