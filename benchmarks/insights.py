@@ -8,7 +8,7 @@ from benchmarks.common import load_or_run
 def run(seed: int = 0, results=None):
     results = results or load_or_run(seed)
     top = []
-    for wname, r in results.items():
+    for _wname, r in results.items():
         top.extend(sorted(r["moar"]["plans"],
                           key=lambda p: -p["test_acc"])[:5])
     n = max(len(top), 1)

@@ -13,7 +13,7 @@ def run(seed: int = 0, results=None):
     total_pipelines = 0
     switched = 0
     default = "llama3.2-1b"
-    for wname, r in results.items():
+    for _wname, r in results.items():
         top = sorted(r["moar"]["plans"], key=lambda p: -p["test_acc"])[:5]
         for p in top:
             total_pipelines += 1

@@ -1,0 +1,29 @@
+"""``repro.analysis`` — static field-flow analysis of pipeline configs.
+
+Zero-token lint for agent-proposed rewrites: infer per-op reads/writes
+from registry effects hooks (:mod:`repro.analysis.effects`), walk the
+operator sequence, and report typed diagnostics
+(:mod:`repro.analysis.analyzer`) before any LLM budget is spent. The
+optimizers reject error-diagnosed candidates pre-evaluation, the serving
+layer refuses them at construction, and ``python -m repro.launch.lint``
+exposes the same pass as a CLI/CI gate.
+"""
+
+from repro.analysis.analyzer import (DEAD_WRITE, DUPLICATE_NAME,
+                                     INVALID_OP, REDUCE_MISSING_KEY,
+                                     SEV_ERROR, SEV_WARNING, SHADOWED_WRITE,
+                                     UNDEFINED_READ, UNKNOWN_MODEL,
+                                     UNKNOWN_TYPE, AnalysisReport,
+                                     Diagnostic, analyze, lint_errors)
+from repro.analysis.effects import (TEXT, OpEffects, depends,
+                                    generic_effects, op_effects,
+                                    prompt_fields)
+
+__all__ = [
+    "analyze", "lint_errors", "AnalysisReport", "Diagnostic",
+    "OpEffects", "op_effects", "generic_effects", "depends",
+    "prompt_fields", "TEXT",
+    "SEV_ERROR", "SEV_WARNING",
+    "UNKNOWN_TYPE", "INVALID_OP", "DUPLICATE_NAME", "UNKNOWN_MODEL",
+    "UNDEFINED_READ", "REDUCE_MISSING_KEY", "DEAD_WRITE", "SHADOWED_WRITE",
+]

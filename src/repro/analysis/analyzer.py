@@ -1,0 +1,285 @@
+"""Static pipeline analyzer: field-flow lint over pipeline configs.
+
+Agent-instantiated rewrites can reference fields no upstream op produces,
+reduce on keys that don't exist, shadow outputs, or alias per-op stats
+through duplicate names — and without this pass those plans are only
+discovered to be broken by *evaluating* them, spending LLM budget on
+statically-doomed candidates. :func:`analyze` walks an operator sequence
+with the per-type effects from :mod:`repro.analysis.effects` and reports
+typed diagnostics at zero token cost.
+
+Diagnostic codes (severity):
+
+====================  =========  ==============================================
+``unknown-type``      error      operator type not in the registry
+``invalid-op``        error      op fails its spec's structural validation
+``duplicate-name``    error      op (or fan-out sub-op) name aliases another's
+                                 stats/cache entries
+``unknown-model``     error      LLM op's model not in the models catalog
+``undefined-read``    error      op reads a field no upstream op produces (and,
+                                 when ``source_fields`` is given, the source
+                                 dataset doesn't carry either)
+``reduce-missing-key``  error    grouping key (``reduce_key``/``group_key``)
+                                 provably absent — all docs collapse into one
+                                 group silently
+``dead-write``        warning    a written field is destroyed by a
+                                 scope-resetting reduce before any op reads it
+``shadowed-write``    warning    a written field is overwritten before any op
+                                 reads it
+====================  =========  ==============================================
+
+Two analysis modes:
+
+- **open world** (``source_fields=None``, the search-time default): the
+  source dataset's fields are unknown, so reads are only flagged when
+  provably invalid — e.g. after a scope-resetting reduce, where the
+  surviving field set is exact. Guarantees zero false rejects on valid
+  candidate streams.
+- **closed world** (``source_fields={...}``): the caller supplies the
+  dataset's field names (CLI, tests, serving) and every read is checked.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.effects import TEXT, OpEffects, op_effects
+from repro.pipeline.model import PipelineLike, as_config
+from repro.pipeline.spec import (PipelineValidationError, op_stat_names,
+                                 operator_spec)
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+UNKNOWN_TYPE = "unknown-type"
+INVALID_OP = "invalid-op"
+DUPLICATE_NAME = "duplicate-name"
+UNKNOWN_MODEL = "unknown-model"
+UNDEFINED_READ = "undefined-read"
+REDUCE_MISSING_KEY = "reduce-missing-key"
+DEAD_WRITE = "dead-write"
+SHADOWED_WRITE = "shadowed-write"
+
+#: fields that exist on every document regardless of the pipeline; TEXT
+#: is exempt from undefined-read because ``doc_text`` degrades to ``""``
+_ALWAYS_DEFINED = frozenset({"id", TEXT})
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One analyzer finding, anchored to an operator."""
+
+    code: str
+    severity: str
+    op_name: str
+    op_index: int
+    field: str
+    message: str
+
+    def format(self) -> str:
+        where = f"operators[{self.op_index}]" if self.op_index >= 0 else "-"
+        return (f"[{self.severity}] {self.code} @ {where} "
+                f"({self.op_name}): {self.message}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"code": self.code, "severity": self.severity,
+                "op_name": self.op_name, "op_index": self.op_index,
+                "field": self.field, "message": self.message}
+
+
+@dataclass
+class AnalysisReport:
+    """All diagnostics for one pipeline, plus convenience accessors."""
+
+    pipeline_name: str
+    diagnostics: List[Diagnostic] = field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == SEV_ERROR]
+
+    @property
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == SEV_WARNING]
+
+    @property
+    def ok(self) -> bool:
+        """No error-severity diagnostics (warnings don't fail a plan)."""
+        return not self.errors
+
+    @property
+    def clean(self) -> bool:
+        """No diagnostics at all."""
+        return not self.diagnostics
+
+    def codes(self) -> List[str]:
+        return [d.code for d in self.diagnostics]
+
+    def raise_for_errors(self) -> None:
+        errs = self.errors
+        if errs:
+            raise PipelineValidationError(
+                f"pipeline {self.pipeline_name!r} failed static analysis: "
+                + "; ".join(d.format() for d in errs))
+
+    def format(self) -> str:
+        if not self.diagnostics:
+            return f"{self.pipeline_name}: clean"
+        lines = [f"{self.pipeline_name}: {len(self.errors)} error(s), "
+                 f"{len(self.warnings)} warning(s)"]
+        lines.extend("  " + d.format() for d in self.diagnostics)
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"pipeline": self.pipeline_name, "ok": self.ok,
+                "clean": self.clean,
+                "diagnostics": [d.to_dict() for d in self.diagnostics]}
+
+
+_MODEL_NAMES: Optional[frozenset] = None
+
+
+def _catalog_models() -> frozenset:
+    # lazy: models_catalog prices models through configs/launch and is
+    # not needed by callers that only use effects/dependency facts
+    global _MODEL_NAMES
+    if _MODEL_NAMES is None:
+        from repro.core.models_catalog import model_names
+        _MODEL_NAMES = frozenset(model_names())
+    return _MODEL_NAMES
+
+
+def _op_models(op: Dict[str, Any]) -> Iterable[str]:
+    if op.get("model"):
+        yield op["model"]
+    for sub in op.get("prompts") or []:
+        if isinstance(sub, dict) and sub.get("model"):
+            yield sub["model"]
+
+
+def analyze(pipeline: PipelineLike, *,
+            source_fields: Optional[Iterable[str]] = None) -> AnalysisReport:
+    """Run all analysis passes over ``pipeline``; never raises."""
+    config = as_config(pipeline)
+    ops = config.get("operators") or []
+    report = AnalysisReport(pipeline_name=config.get("name", "<pipeline>"))
+    diags = report.diagnostics
+    if not ops:
+        diags.append(Diagnostic(INVALID_OP, SEV_ERROR, "-", -1, "",
+                                "pipeline has no operators"))
+        return report
+
+    # -- structural pass: types, per-op validation, names, models -----------
+    effects: List[Optional[OpEffects]] = []
+    seen_names: Dict[str, str] = {}  # stat name -> owning op name
+    for i, op in enumerate(ops):
+        if not isinstance(op, dict) or not op.get("name") \
+                or not op.get("type"):
+            diags.append(Diagnostic(
+                INVALID_OP, SEV_ERROR, str((op or {}).get("name", "?")), i,
+                "", f"operator missing name/type: {op!r}"))
+            effects.append(None)
+            continue
+        name = op["name"]
+        try:
+            spec = operator_spec(op["type"])
+        except PipelineValidationError:
+            diags.append(Diagnostic(
+                UNKNOWN_TYPE, SEV_ERROR, name, i, "",
+                f"unknown operator type {op['type']!r}"))
+            effects.append(None)
+            continue
+        try:
+            spec.validate_op(op)
+        except PipelineValidationError as exc:
+            diags.append(Diagnostic(INVALID_OP, SEV_ERROR, name, i, "",
+                                    str(exc)))
+        try:
+            eff: Optional[OpEffects] = op_effects(op)
+        except Exception:  # effects hooks are third-party code
+            eff = None
+        effects.append(eff)
+        stat_names = eff.stat_names if eff and eff.stat_names \
+            else tuple(op_stat_names(op))
+        for sname in stat_names:
+            if sname in seen_names:
+                diags.append(Diagnostic(
+                    DUPLICATE_NAME, SEV_ERROR, name, i, sname,
+                    f"op name {sname!r} aliases {seen_names[sname]!r}: "
+                    "per-op stats and cache entries collide"))
+            else:
+                seen_names[sname] = name
+        if spec.is_llm:
+            for model in _op_models(op):
+                if model not in _catalog_models():
+                    diags.append(Diagnostic(
+                        UNKNOWN_MODEL, SEV_ERROR, name, i, model,
+                        f"model {model!r} not in the models catalog"))
+
+    # -- field-flow pass ----------------------------------------------------
+    defined: set = set()       # fields provably produced upstream
+    available = set(source_fields or ())  # source dataset fields (if known)
+    universe_known = source_fields is not None
+    pending: Dict[str, Tuple[int, str]] = {}  # unread writes
+    for i, op in enumerate(ops):
+        eff = effects[i]
+        if eff is None:
+            # unknown op: anything may exist downstream of it
+            universe_known = False
+            continue
+        name = op.get("name", f"operators[{i}]")
+        for f in sorted(eff.reads | eff.group_keys):
+            pending.pop(f, None)
+            if f in _ALWAYS_DEFINED or f in defined or f in available:
+                continue
+            if universe_known:
+                code = REDUCE_MISSING_KEY if f in eff.group_keys \
+                    else UNDEFINED_READ
+                what = "grouping key" if code == REDUCE_MISSING_KEY \
+                    else "field"
+                diags.append(Diagnostic(
+                    code, SEV_ERROR, name, i, f,
+                    f"{what} {f!r} is read but no upstream op produces it"
+                    + ("" if source_fields is None
+                       else " and the source dataset does not carry it")))
+        for f in eff.removes:
+            defined.discard(f)
+            available.discard(f)
+            pending.pop(f, None)
+        if eff.resets_scope:
+            kept = set(eff.writes) | set(eff.group_keys) | {"id"}
+            for f in sorted(pending):
+                if f not in kept:
+                    j, wname = pending[f]
+                    label = "document text" if f == TEXT else f"field {f!r}"
+                    diags.append(Diagnostic(
+                        DEAD_WRITE, SEV_WARNING, wname, j, f,
+                        f"{label} written by {wname!r} is destroyed by "
+                        f"group-reduce {name!r} before any op reads it"))
+            pending = {f: v for f, v in pending.items() if f in kept}
+            defined &= kept
+            available = set()
+            universe_known = True  # surviving field set is now exact
+        for f in sorted(eff.writes):
+            prev = pending.get(f)
+            if prev is not None and prev[0] != i:
+                label = "document text" if f == TEXT else f"field {f!r}"
+                diags.append(Diagnostic(
+                    SHADOWED_WRITE, SEV_WARNING, name, i, f,
+                    f"{label} written by {prev[1]!r} is overwritten by "
+                    f"{name!r} before any op reads it"))
+            pending[f] = (i, name)
+            if f != TEXT:
+                defined.add(f)
+        if eff.opaque_writes:
+            universe_known = False
+    return report
+
+
+def lint_errors(pipeline: PipelineLike, *,
+                source_fields: Optional[Iterable[str]] = None
+                ) -> List[Diagnostic]:
+    """Error-severity diagnostics only — the candidate-reject predicate
+    the optimizers use (warnings never reject a plan)."""
+    return analyze(pipeline, source_fields=source_fields).errors

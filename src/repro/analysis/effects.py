@@ -1,0 +1,325 @@
+"""Per-operator field-flow effects: what each op reads and writes.
+
+The static analyzer (``repro.analysis.analyzer``) needs to know, for any
+operator config, which document fields the op consumes and which it
+produces. That knowledge already exists in the system — scattered across
+``output_schema``, ``reduce_key``, ``classify.output_field``, prompt
+``{{ input.field }}`` references, CodeSpec kinds, and the split/gather
+auxiliary-field conventions. This module centralizes it as one
+:class:`OpEffects` record per op, resolved through the operator
+registry: a type registered with ``@register_operator(...,
+effects=my_effects_fn)`` declares its own flow; types without a
+declaration get :func:`generic_effects` inference from ``output_schema``
+/ ``requires`` / prompt references.
+
+Document text is modeled as the symbolic field :data:`TEXT` rather than
+a concrete key, because the concrete key is dynamic (``main_text_key``
+picks the longest string field per document). Ops that rewrite text in
+place — summarize maps, extract, split, gather, the text-compressing
+CodeSpec kinds — *write* :data:`TEXT`; ops whose backend request renders
+the document text *read* it. :data:`TEXT` participates in dependency and
+dead/shadowed-write analysis but is exempt from undefined-read checks
+(``doc_text`` degrades to ``""`` rather than failing).
+
+Two flow properties beyond plain read/write sets:
+
+- ``resets_scope`` — reduce ops without ``restore_id`` emit fresh group
+  documents ``{id, reduce_key, **output_schema}``: every other upstream
+  field is destroyed. Reads of destroyed fields downstream are provable
+  errors even when the source dataset's fields are unknown.
+- ``opaque_writes`` — the op may produce fields the analyzer cannot
+  enumerate (equijoin merges right-side docs, unnest explodes dict
+  elements, custom types without schema). Downstream undefined-read
+  checks are suppressed past such an op.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, replace as _dc_replace
+from typing import TYPE_CHECKING, FrozenSet, Iterable, Optional, Set, Tuple
+
+if TYPE_CHECKING:
+    from repro.pipeline.spec import OpConfig
+
+
+def _spec():
+    # Deferred import: ``repro.pipeline``'s __init__ imports
+    # ``engine.builtin_ops``, which imports this module to wire its
+    # ``effects=`` hooks — a module-level import here would cycle when
+    # the analyzer loads before the pipeline package.
+    from repro.pipeline import spec
+    return spec
+
+#: Symbolic pseudo-field for "the document's main text" (dynamic key).
+TEXT = "<text>"
+
+
+@dataclass(frozen=True)
+class OpEffects:
+    """Field-flow facts for one operator instance."""
+
+    reads: FrozenSet[str] = frozenset()
+    writes: FrozenSet[str] = frozenset()
+    #: grouping keys (reduce_key / sample group_key): read-like, but a
+    #: missing grouping key silently collapses all docs into one group,
+    #: so the analyzer reports it as its own diagnostic.
+    group_keys: FrozenSet[str] = frozenset()
+    removes: FrozenSet[str] = frozenset()
+    #: output docs drop every upstream field except writes/group_keys/id
+    resets_scope: bool = False
+    #: op may write fields not statically enumerable
+    opaque_writes: bool = False
+    #: names this op charges per-op stats/cache under (fan-out sub-ops)
+    stat_names: Tuple[str, ...] = ()
+
+
+def _fs(items: Iterable[str]) -> FrozenSet[str]:
+    return frozenset(f for f in items if f)
+
+
+# ``{{ input.field }}`` (workload prompts) or bare ``{field}`` — the
+# lookbehind/lookahead keep ``{{ ... }}`` from half-matching as ``{...}``.
+PROMPT_FIELD_RE = re.compile(
+    r"\{\{\s*input\.([A-Za-z_][A-Za-z0-9_]*)\s*\}\}"
+    r"|(?<!\{)\{([A-Za-z_][A-Za-z0-9_]*)\}(?!\})")
+
+
+def prompt_fields(prompt: Optional[str]) -> FrozenSet[str]:
+    """Document fields a prompt template references."""
+    if not prompt:
+        return frozenset()
+    return _fs(a or b for a, b in PROMPT_FIELD_RE.findall(str(prompt)))
+
+
+def _schema_keys(op: OpConfig) -> Set[str]:
+    return set((op.get("output_schema") or {}).keys())
+
+
+def _requires(op: OpConfig) -> Set[str]:
+    return set(op.get("requires") or ())
+
+
+def _prompt_reads(op: OpConfig) -> Set[str]:
+    return set(prompt_fields(op.get("prompt")))
+
+
+# ---------------------------------------------------------------------------
+# Table 7 effects (referenced by the registrations in engine/builtin_ops)
+# ---------------------------------------------------------------------------
+
+
+def effects_map(op: OpConfig) -> OpEffects:
+    reads = _prompt_reads(op) | _requires(op)
+    fmt = op.get("format_field")
+    reads.add(fmt if fmt else TEXT)
+    classify = op.get("classify") or None
+    if classify:
+        writes = {classify.get("output_field", "label")}
+        if classify.get("truth_field"):
+            reads.add(classify["truth_field"])
+    elif op.get("summarize"):
+        writes = {TEXT}
+    else:
+        writes = _schema_keys(op)
+    return OpEffects(reads=_fs(reads), writes=_fs(writes))
+
+
+def effects_parallel_map(op: OpConfig) -> OpEffects:
+    reads = {TEXT} | _prompt_reads(op) | _requires(op)
+    writes: Set[str] = set()
+    subs = op.get("prompts") or []
+    for sub in subs:
+        reads |= prompt_fields(sub.get("prompt"))
+        writes |= set((sub.get("output_schema")
+                       or op.get("output_schema") or {}).keys())
+    if not subs:
+        writes |= _schema_keys(op)
+    return OpEffects(reads=_fs(reads), writes=_fs(writes),
+                     stat_names=tuple(_spec().op_stat_names(op)))
+
+
+def effects_filter(op: OpConfig) -> OpEffects:
+    # the predicate field in output_schema is consumed by the filter
+    # itself, never written onto surviving documents
+    return OpEffects(reads=_fs({TEXT} | _prompt_reads(op) | _requires(op)))
+
+
+def effects_reduce(op: OpConfig) -> OpEffects:
+    key = op.get("reduce_key", "_all")
+    grouped = bool(key) and key != "_all"
+    reads = _prompt_reads(op) | _requires(op)
+    agg = op.get("aggregate_field")
+    reads.add(agg if agg else TEXT)
+    group_keys = {key} if grouped else set()
+    writes = _schema_keys(op)
+    if grouped:
+        writes.add(key)
+    return OpEffects(reads=_fs(reads), writes=_fs(writes),
+                     group_keys=_fs(group_keys),
+                     resets_scope=not op.get("restore_id"))
+
+
+def effects_resolve(op: OpConfig) -> OpEffects:
+    fld = op.get("resolve_field")
+    if fld:
+        return OpEffects(reads=_fs({fld} | _requires(op)),
+                         writes=frozenset({fld}))
+    return OpEffects(reads=_fs({TEXT} | _requires(op)), opaque_writes=True)
+
+
+def effects_equijoin(op: OpConfig) -> OpEffects:
+    reads = {TEXT} | _prompt_reads(op) | _requires(op)
+    if op.get("join_key"):
+        reads.add(op["join_key"])
+    # merged fields come from op["right_docs"], unknown statically
+    return OpEffects(reads=_fs(reads), opaque_writes=True)
+
+
+def effects_extract(op: OpConfig) -> OpEffects:
+    tk = op.get("text_key")
+    text = tk if tk else TEXT
+    reads = {text} | _prompt_reads(op) | _requires(op)
+    return OpEffects(reads=_fs(reads), writes=_fs({text}))
+
+
+def effects_unnest(op: OpConfig) -> OpEffects:
+    fld = op.get("field", "")
+    # dict elements merge unknown fields; scalar elements re-write ``fld``
+    return OpEffects(reads=_fs({fld} | _requires(op)), opaque_writes=True)
+
+
+def effects_split(op: OpConfig) -> OpEffects:
+    tk = op.get("text_key")
+    text = tk if tk else TEXT
+    return OpEffects(
+        reads=_fs({text} | _requires(op)),
+        writes=_fs({text, "_parent_id", "_chunk_idx", "_num_chunks"}))
+
+
+def effects_gather(op: OpConfig) -> OpEffects:
+    tk = op.get("text_key")
+    text = tk if tk else TEXT
+    return OpEffects(reads=_fs({text, "_parent_id", "_chunk_idx"}
+                               | _requires(op)),
+                     writes=_fs({text}))
+
+
+def effects_sample(op: OpConfig) -> OpEffects:
+    gk = op.get("group_key")
+    return OpEffects(reads=_fs({TEXT} | _requires(op)),
+                     group_keys=_fs({gk} if gk else ()))
+
+
+def effects_code_map(op: OpConfig) -> OpEffects:
+    spec = op.get("code") or {}
+    kind = spec.get("kind", "")
+    tk = spec.get("text_key")
+    text = tk if tk else TEXT
+    reads: Set[str] = set()
+    writes: Set[str] = set()
+    if kind in ("head_tail", "regex_extract", "keyword_extract"):
+        reads.add(text)
+        writes.add(spec.get("output_key") or text)
+    elif kind == "keyword_facts":
+        reads.add(text)
+        writes.add(spec.get("output_field", ""))
+    elif kind in ("merge_lists", "combine_keys"):
+        reads |= set(spec.get("fields") or ())
+        writes.add(spec.get("output_field", ""))
+    elif kind == "assign_bucket":
+        reads.add(spec.get("group_field", ""))
+        writes.add(spec.get("output_key", ""))
+    elif kind == "split_bucket_key":
+        reads.add("_bucket_key")
+        writes.add(spec.get("output_key", ""))
+    else:  # unregistered custom kind: unknown outputs
+        return OpEffects(reads=_fs({text} | _requires(op)),
+                         opaque_writes=True)
+    return OpEffects(reads=_fs(reads | _requires(op)), writes=_fs(writes))
+
+
+def effects_code_filter(op: OpConfig) -> OpEffects:
+    spec = op.get("code") or {}
+    if spec.get("kind") == "drop_if_false":
+        reads = {spec.get("field", "")}
+    else:  # keyword_filter / regex_filter / unknown kinds read text
+        reads = {TEXT}
+    return OpEffects(reads=_fs(reads | _requires(op)))
+
+
+def effects_code_reduce(op: OpConfig) -> OpEffects:
+    spec = op.get("code") or {}
+    kind = spec.get("kind", "")
+    key = op.get("reduce_key", "_all")
+    grouped = bool(key) and key != "_all"
+    opaque = False
+    if kind == "count_group":
+        fld = spec.get("field", "")
+        reads, writes = {fld}, {f"{fld}_counts" if fld else ""}
+    elif kind == "concat_group":
+        fld = spec.get("field", "")
+        reads, writes = {fld}, {f"{fld}_all" if fld else ""}
+    else:
+        reads, writes, opaque = {TEXT}, set(), True
+    if grouped:
+        writes.add(key)
+    return OpEffects(reads=_fs(reads | _requires(op)), writes=_fs(writes),
+                     group_keys=_fs({key} if grouped else ()),
+                     resets_scope=not op.get("restore_id"),
+                     opaque_writes=opaque)
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+
+def generic_effects(op: OpConfig, spec=None) -> OpEffects:
+    """Fallback inference for types registered without an ``effects``
+    hook: ``requires`` + prompt references read, ``output_schema``
+    written; no declared schema means unknown outputs (opaque)."""
+    if spec is None:
+        spec = _spec().operator_spec(op["type"])
+    reads = _requires(op) | _prompt_reads(op)
+    if spec.is_llm or "reads_text" in spec.rewrite_tags:
+        reads.add(TEXT)
+    schema = _schema_keys(op)
+    return OpEffects(reads=_fs(reads), writes=_fs(schema),
+                     opaque_writes=not schema)
+
+
+def op_effects(op: OpConfig) -> OpEffects:
+    """Resolve the effects of one op config through the registry.
+
+    Raises :class:`PipelineValidationError` for unknown operator types
+    (callers that must not raise catch it and treat the op as opaque).
+    """
+    sp = _spec()
+    spec = sp.operator_spec(op["type"])
+    eff = spec.effects(op) if spec.effects is not None \
+        else generic_effects(op, spec)
+    if not eff.stat_names:
+        eff = _dc_replace(eff, stat_names=tuple(sp.op_stat_names(op)))
+    return eff
+
+
+def depends(op_b: OpConfig, op_a: OpConfig) -> bool:
+    """True if ``op_b`` (later in the pipeline) depends on ``op_a``
+    (earlier) — i.e. swapping them may change results. Derived from real
+    field flow: read-after-write, write-after-read (the swap would make
+    ``op_a`` observe ``op_b``'s output), write-after-write, and the
+    conservative cases (scope resets, opaque writes, unknown types)."""
+    try:
+        eff_b, eff_a = op_effects(op_b), op_effects(op_a)
+    except _spec().PipelineValidationError:
+        return True
+    if eff_a.resets_scope or eff_b.resets_scope \
+            or eff_a.opaque_writes or eff_b.opaque_writes:
+        return True
+    reads_b = eff_b.reads | eff_b.group_keys
+    reads_a = eff_a.reads | eff_a.group_keys
+    writes_a = eff_a.writes | eff_a.removes
+    writes_b = eff_b.writes | eff_b.removes
+    return bool((reads_b & writes_a) or (writes_b & reads_a)
+                or (writes_b & writes_a))

@@ -145,7 +145,7 @@ class Abacus(BaseOptimizer):
         plans: List[Tuple[dict, str]] = []
         for rank in range(3):
             plan = clone_pipeline(base_pipeline)
-            for idx, impls in choices.items():
+            for _idx, impls in choices.items():
                 impl = impls[min(rank, len(impls) - 1)]
                 try:
                     plan = impl.apply_fn(plan)

@@ -13,6 +13,7 @@ import time
 from dataclasses import replace as _dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.analysis.analyzer import lint_errors
 from repro.engine.executor import (Executor, TransientLLMError,
                                    evaluation_cache_stats)
 from repro.engine.operators import PipelineConfig, pipeline_hash
@@ -30,7 +31,8 @@ class BaseOptimizer:
     name = "base"
 
     def __init__(self, workload: Workload, backend, *, budget: int = 40,
-                 seed: int = 0, workers: int = 1):
+                 seed: int = 0, workers: int = 1, lint: bool = True,
+                 lint_fields: Optional[List[str]] = None):
         self.workload = workload
         self.backend = backend
         self.budget = budget
@@ -48,6 +50,25 @@ class BaseOptimizer:
         self.evaluated: List[PlanPoint] = []
         self.returned: Optional[List[PlanPoint]] = None  # single-plan systems
         self.t = 0
+        # static analysis gate (repro.analysis): candidates with error
+        # diagnostics are rejected before evaluation, spending no budget.
+        # Open-world by default (only provable errors fire), so results
+        # on valid candidate streams are bit-identical to lint=False.
+        self.lint = lint
+        self.lint_fields = list(lint_fields) if lint_fields else None
+        self.static_rejects = 0
+        self.static_rejects_by_note: Dict[str, int] = {}
+
+    def _lint_reject(self, pipeline: PipelineConfig, note: str) -> bool:
+        if not self.lint:
+            return False
+        if not lint_errors(pipeline, source_fields=self.lint_fields):
+            return False
+        self.static_rejects += 1
+        key = note or "candidate"
+        self.static_rejects_by_note[key] = \
+            self.static_rejects_by_note.get(key, 0) + 1
+        return True
 
     def cache_stats(self) -> Dict[str, float]:
         return evaluation_cache_stats(self.cache_hits, len(self.cache),
@@ -55,6 +76,8 @@ class BaseOptimizer:
 
     def evaluate(self, pipeline: PipelineConfig, note: str = ""
                  ) -> Optional[PlanPoint]:
+        if self._lint_reject(pipeline, note):
+            return None
         h = pipeline_hash(pipeline)
         if h in self.cache:
             self.cache_hits += 1
@@ -103,7 +126,11 @@ class BaseOptimizer:
         plan: List[str] = []
         jobs: List[Tuple[PipelineConfig, Any]] = []
         job_of: List[Optional[int]] = []
-        for p, h in zip(pipelines, hashes):
+        for p, h, note in zip(pipelines, hashes, notes):
+            if self._lint_reject(p, note):
+                plan.append("reject")
+                job_of.append(None)
+                continue
             if budget_cap is not None and t_sim >= cap:
                 plan.append("skip")
                 job_of.append(None)
@@ -131,6 +158,9 @@ class BaseOptimizer:
         out: List[Optional[PlanPoint]] = []
         for p, h, what, ji, note in zip(pipelines, hashes, plan, job_of,
                                         notes):
+            if what == "reject":  # statically invalid: no budget spent
+                out.append(None)
+                continue
             if what == "skip" or \
                     (budget_cap is not None and self.t >= cap):
                 out.append(None)
@@ -187,6 +217,8 @@ class BaseOptimizer:
         self.evaluated = []
         self.returned = None
         self.t = 0
+        self.static_rejects = 0
+        self.static_rejects_by_note = {}
         t0 = time.time()
         self._run()
         # single-plan systems (DocETL-V1, LOTUS) return their chosen plan,
@@ -196,7 +228,10 @@ class BaseOptimizer:
                                       else self.evaluated)
         return SearchResult(self.name, list(self.evaluated), frontier,
                             self.t, time.time() - t0,
-                            cache_stats=self.cache_stats())
+                            cache_stats=self.cache_stats(),
+                            static_rejects=self.static_rejects,
+                            static_rejects_by_directive=dict(
+                                self.static_rejects_by_note))
 
     def _run(self):
         raise NotImplementedError

@@ -262,12 +262,12 @@ class Reordering(Directive):
 
     @staticmethod
     def _depends(b, a) -> bool:
-        produced = set((a.get("output_schema") or {}).keys())
-        flag = (b.get("code") or {}).get("field")
-        needs = set(b.get("requires", []))
-        if flag:
-            needs.add(flag)
-        return bool(needs & produced)
+        # real field-flow dependency from the static analyzer (reads/
+        # writes including the symbolic text field), replacing the old
+        # output_schema-vs-requires heuristic that missed text rewrites
+        # and scope-destroying reduces
+        from repro.analysis.effects import depends
+        return depends(b, a)
 
     def instantiate(self, ctx, pipeline, target):
         return [{"confirm_independent": True}]

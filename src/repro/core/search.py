@@ -36,6 +36,7 @@ import time
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.analysis.analyzer import lint_errors
 from repro.core import pareto
 from repro.core.agent import (AgentContext, AgentPolicy, DirectiveStats,
                               ModelStats)
@@ -106,6 +107,9 @@ class SearchResult:
     # round-engine accounting: rounds run, configured width/workers, and
     # the executor's merged-dispatch counters
     parallel_stats: Dict[str, Any] = field(default_factory=dict)
+    # candidates the static analyzer rejected before evaluation ($0)
+    static_rejects: int = 0
+    static_rejects_by_directive: Dict[str, int] = field(default_factory=dict)
 
     def best(self) -> Node:
         return max(self.evaluated, key=lambda n: n.acc)
@@ -153,6 +157,8 @@ class MOARSearch:
         fail_prob: float = 0.0,
         reward: str = "contribution",   # | "hypervolume" (ablation, §4.2)
         progressive_widening: bool = True,  # ablation: uncapped branching
+        lint: bool = True,  # static-analyze candidates before evaluating
+        lint_fields: Optional[List[str]] = None,  # known source fields
     ):
         self.workload = workload
         self.backend = backend
@@ -192,6 +198,16 @@ class MOARSearch:
         self.errors = 0
         self.reward = reward
         self.progressive_widening = progressive_widening
+        # static analysis gate (repro.analysis): error-diagnosed
+        # candidates are rejected before evaluation at zero token cost.
+        # Without lint_fields the analyzer runs open-world (only provable
+        # errors fire), so enabling lint is bit-identical to disabling it
+        # on all-valid candidate streams; passing the dataset's field
+        # names tightens undefined-read detection.
+        self.lint = lint
+        self.lint_fields = list(lint_fields) if lint_fields else None
+        self.static_rejects = 0
+        self.static_rejects_by_directive: Dict[str, int] = {}
 
     # -- evaluation ------------------------------------------------------------
 
@@ -455,37 +471,67 @@ class MOARSearch:
         directive, target = choice
         node.directive_usage[directive.name] = \
             node.directive_usage.get(directive.name, 0) + 1
-        try:
-            param_sets = self.policy.instantiate(directive, node.pipeline,
-                                                 target, ctx)
-        except RuntimeError:
-            self.errors += 1
-            self._unbump(node)
-            return None
-        if not directive.param_sensitive:
-            param_sets = param_sets[:1]
-
         candidates: List[_PlannedCandidate] = []
-        need = 0
-        for params in param_sets:
+        # lint-retry loop: when every instantiated candidate is rejected
+        # by the static analyzer, re-seed the agent (salting PAST the
+        # policy's internal per-exception attempt salts) and re-propose —
+        # the reject feedback costs zero tokens. Round 0 uses ctx
+        # unchanged, so on all-valid streams this is bit-identical to the
+        # pre-lint single pass.
+        lint_rounds = self.policy.max_retries if self.lint else 1
+        for lint_round in range(lint_rounds):
+            retry_ctx = ctx if lint_round == 0 else \
+                ctx.with_attempt(lint_round * self.policy.max_retries)
             try:
-                new_pipeline = directive.apply(node.pipeline, target, params)
-                validate_pipeline(new_pipeline)
-            except Exception:  # noqa: BLE001 — bad rewrite, try next params
+                param_sets = self.policy.instantiate(
+                    directive, node.pipeline, target, retry_ctx)
+            except RuntimeError:
                 self.errors += 1
-                continue
-            h = pipeline_hash(new_pipeline)
-            free = h in self.cache
-            if not free:
-                if need >= budget_left:
-                    break
-                need += 1
-            candidates.append(_PlannedCandidate(new_pipeline, h, free))
+                self._unbump(node)
+                return None
+            if not directive.param_sensitive:
+                param_sets = param_sets[:1]
+            need = 0
+            rejected = 0
+            for params in param_sets:
+                try:
+                    new_pipeline = self._transform_candidate(
+                        directive.apply(node.pipeline, target, params),
+                        directive, attempt)
+                    validate_pipeline(new_pipeline)
+                except Exception:  # noqa: BLE001 — bad rewrite, next params
+                    self.errors += 1
+                    continue
+                if self.lint and lint_errors(
+                        new_pipeline, source_fields=self.lint_fields):
+                    self.static_rejects += 1
+                    self.static_rejects_by_directive[directive.name] = \
+                        self.static_rejects_by_directive.get(
+                            directive.name, 0) + 1
+                    rejected += 1
+                    continue
+                h = pipeline_hash(new_pipeline)
+                free = h in self.cache
+                if not free:
+                    if need >= budget_left:
+                        break
+                    need += 1
+                candidates.append(_PlannedCandidate(new_pipeline, h, free))
+            if candidates or rejected == 0:
+                break
         if not candidates:
             self._unbump(node)
             return None
         return _PlannedRewrite(node=node, directive=directive,
                                candidates=candidates, attempt=attempt)
+
+    def _transform_candidate(self, pipeline: PipelineConfig,
+                             directive: Directive,
+                             attempt: int) -> PipelineConfig:
+        """Seam between directive application and validation/lint; the
+        default is identity. Fault-injection tests and the lint bench
+        override it to corrupt a deterministic fraction of rewrites."""
+        return pipeline
 
     def _execute_and_commit(self, planned: List[_PlannedRewrite]) -> None:
         """Stages (c)+(d) of a round: evaluate every planned candidate
@@ -589,6 +635,9 @@ class MOARSearch:
                 "attempts": self.attempts,
                 **self.executor.dispatch_stats,
             },
+            static_rejects=self.static_rejects,
+            static_rejects_by_directive=dict(
+                self.static_rejects_by_directive),
         )
 
     # -- unified Optimizer protocol (repro.pipeline) -----------------------------------
@@ -619,6 +668,8 @@ class MOARSearch:
         self.attempts = 0
         self.rounds = 0
         self.errors = 0
+        self.static_rejects = 0
+        self.static_rejects_by_directive = {}
         self.model_stats = ModelStats()
         self.dstats = DirectiveStats()
         for k in self.executor.dispatch_stats:
@@ -641,6 +692,9 @@ class MOARSearch:
             native=res,
             cache_stats=res.cache_stats,
             parallel_stats=res.parallel_stats,
+            static_rejects=res.static_rejects,
+            static_rejects_by_directive=dict(
+                res.static_rejects_by_directive),
         )
 
     # -- held-out evaluation ----------------------------------------------------------

@@ -26,6 +26,7 @@ from __future__ import annotations
 import math
 from typing import Any, Dict, List
 
+from repro.analysis import effects as _effects
 from repro.data.documents import (Dataset, Document, doc_text,
                                   main_text_key)
 from repro.engine import backend as _backend
@@ -76,6 +77,7 @@ def _map_request(op, doc) -> OpRequest:
 @register_operator(
     "map", kind=KIND_LLM, required_keys=("prompt", "model", "output_schema"),
     rewrite_tags=("reads_text", "model_bearing", "decomposable"),
+    effects=_effects.effects_map,
     description="LLM projection over each document (extraction, "
                 "summarization, classification, formatting)")
 def exec_map(ex, op, docs: Dataset, stats) -> Dataset:
@@ -93,6 +95,7 @@ def exec_map(ex, op, docs: Dataset, stats) -> Dataset:
     "parallel_map", kind=KIND_LLM,
     required_keys=("prompt", "model", "output_schema"),
     rewrite_tags=("model_bearing", "decomposable"),
+    effects=_effects.effects_parallel_map,
     description="independent sub-prompts over each document, merged")
 def exec_parallel_map(ex, op, docs: Dataset, stats) -> Dataset:
     out = docs
@@ -108,6 +111,7 @@ def exec_parallel_map(ex, op, docs: Dataset, stats) -> Dataset:
     required_keys=("prompt", "model", "output_schema"),
     validate=None,
     rewrite_tags=("reads_text", "model_bearing", "pushdown"),
+    effects=_effects.effects_filter,
     description="LLM predicate keeping/dropping documents")
 def exec_filter(ex, op, docs: Dataset, stats) -> Dataset:
     reqs = [OpRequest("filter", op, doc=d, key=d.get("id")) for d in docs]
@@ -120,6 +124,7 @@ def exec_filter(ex, op, docs: Dataset, stats) -> Dataset:
     required_keys=("prompt", "model", "output_schema"),
     validate=_validate_reduce,
     rewrite_tags=("model_bearing", "aggregation"),
+    effects=_effects.effects_reduce,
     description="LLM aggregation over groups (reduce_key, '_all' for "
                 "whole-collection)")
 def exec_reduce(ex, op, docs: Dataset, stats) -> Dataset:
@@ -149,6 +154,7 @@ def exec_reduce(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "resolve", kind=KIND_LLM, required_keys=("prompt", "model"),
     rewrite_tags=("model_bearing",),
+    effects=_effects.effects_resolve,
     description="canonicalize near-duplicate field values across documents")
 def exec_resolve(ex, op, docs: Dataset, stats) -> Dataset:
     [out] = ex.dispatch([OpRequest("resolve", op, docs=list(docs),
@@ -159,6 +165,7 @@ def exec_resolve(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "equijoin", kind=KIND_LLM, required_keys=("prompt", "model"),
     rewrite_tags=("model_bearing",),
+    effects=_effects.effects_equijoin,
     description="semantic join of the stream against op['right_docs']")
 def exec_equijoin(ex, op, docs: Dataset, stats) -> Dataset:
     reqs = [OpRequest("equijoin", op, doc=d, key=d.get("id")) for d in docs]
@@ -173,6 +180,7 @@ def exec_equijoin(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "extract", kind=KIND_LLM, required_keys=("prompt", "model"),
     rewrite_tags=("reads_text", "model_bearing", "compression"),
+    effects=_effects.effects_extract,
     description="LLM document compression: keep fact-bearing line ranges")
 def exec_extract(ex, op, docs: Dataset, stats) -> Dataset:
     reqs = [OpRequest("extract", op, doc=d, key=d.get("id")) for d in docs]
@@ -187,6 +195,7 @@ def exec_extract(ex, op, docs: Dataset, stats) -> Dataset:
 
 @register_operator(
     "unnest", kind=KIND_AUX, required_keys=("field",),
+    effects=_effects.effects_unnest,
     description="explode a list-valued field into one document per element")
 def exec_unnest(ex, op, docs: Dataset, stats) -> Dataset:
     fld = op["field"]
@@ -210,6 +219,7 @@ def exec_unnest(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "split", kind=KIND_AUX, required_keys=("chunk_size",),
     rewrite_tags=("chunker",),
+    effects=_effects.effects_split,
     description="split document text into fixed-size word chunks")
 def exec_split(ex, op, docs: Dataset, stats) -> Dataset:
     size = op["chunk_size"]  # words
@@ -232,6 +242,7 @@ def exec_split(ex, op, docs: Dataset, stats) -> Dataset:
 
 @register_operator(
     "gather", kind=KIND_AUX, rewrite_tags=("chunker",),
+    effects=_effects.effects_gather,
     description="widen each chunk with prev/next sibling context")
 def exec_gather(ex, op, docs: Dataset, stats) -> Dataset:
     prev_k = op.get("prev", 1)
@@ -240,7 +251,7 @@ def exec_gather(ex, op, docs: Dataset, stats) -> Dataset:
     for d in docs:
         by_parent.setdefault(d.get("_parent_id"), []).append(d)
     out = []
-    for parent, chunks in by_parent.items():
+    for _parent, chunks in by_parent.items():
         chunks = sorted(chunks, key=lambda c: c.get("_chunk_idx", 0))
         key = op.get("text_key") or main_text_key(chunks[0])
         texts = [str(c.get(key, "")) for c in chunks]
@@ -270,6 +281,7 @@ def _score_doc(method: str, text: str, keywords: List[str]) -> float:
 @register_operator(
     "sample", kind=KIND_AUX, validate=_validate_sample,
     rewrite_tags=("sampler",),
+    effects=_effects.effects_sample,
     description="keep a subset per group (random/bm25/embedding/stratified)")
 def exec_sample(ex, op, docs: Dataset, stats) -> Dataset:
     method = op["method"]
@@ -307,6 +319,7 @@ def exec_sample(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "code_map", kind=KIND_CODE, validate=_validate_code,
     rewrite_tags=("code",),
+    effects=_effects.effects_code_map,
     description="deterministic CodeSpec projection per document")
 def exec_code_map(ex, op, docs: Dataset, stats) -> Dataset:
     return [{**d, **codeops.run_code_map(op["code"], d)} for d in docs]
@@ -315,6 +328,7 @@ def exec_code_map(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "code_filter", kind=KIND_CODE, validate=_validate_code,
     rewrite_tags=("code", "pushdown"),
+    effects=_effects.effects_code_filter,
     description="deterministic CodeSpec predicate per document")
 def exec_code_filter(ex, op, docs: Dataset, stats) -> Dataset:
     return [d for d in docs if codeops.run_code_filter(op["code"], d)]
@@ -323,6 +337,7 @@ def exec_code_filter(ex, op, docs: Dataset, stats) -> Dataset:
 @register_operator(
     "code_reduce", kind=KIND_CODE, validate=_validate_code,
     rewrite_tags=("code", "aggregation"),
+    effects=_effects.effects_code_reduce,
     description="deterministic CodeSpec aggregation over groups")
 def exec_code_reduce(ex, op, docs: Dataset, stats) -> Dataset:
     key = op.get("reduce_key", "_all")

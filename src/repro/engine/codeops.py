@@ -85,7 +85,7 @@ def run_code_map(spec: CodeSpec, doc: Document) -> Dict[str, Any]:
         b = int(_h.blake2s(str(doc.get("id")).encode()).hexdigest()[:4], 16) \
             % spec["buckets"]
         gval = str(doc.get(spec["group_field"], ""))
-        return {spec["output_key"]: f"{gval}|{b}", "_group_val": gval}
+        return {spec["output_key"]: f"{gval}|{b}"}
     if kind == "split_bucket_key":
         combined = str(doc.get("_bucket_key", doc.get("id", "")))
         return {spec["output_key"]: combined.split("|")[0]}

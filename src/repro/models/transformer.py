@@ -219,7 +219,8 @@ def init_params(key, cfg: ModelConfig) -> Params:
         if n_full == 0:
             continue
         slot_keys = jax.random.split(jax.random.fold_in(keys[1], i), n_full)
-        layers[f"slot{i}"] = jax.vmap(lambda k: _init_layer(k, cfg, kind))(slot_keys)
+        layers[f"slot{i}"] = jax.vmap(
+            lambda k, kind=kind: _init_layer(k, cfg, kind))(slot_keys)
     params["layers"] = layers
     params["tail"] = [
         _init_layer(jax.random.fold_in(keys[2], j), cfg, kind)

@@ -46,6 +46,10 @@ class SearchResult:
     wall_s: float
     errors: int = 0
     native: Any = None  # optimizer-specific result (e.g. MOAR's tree)
+    # candidates rejected by the static analyzer before evaluation (zero
+    # token cost), with the per-directive breakdown for MOAR runs
+    static_rejects: int = 0
+    static_rejects_by_directive: Dict[str, int] = field(default_factory=dict)
     # two-tier evaluation-cache accounting: pipeline-hash tier (identical
     # candidates) + content-addressed call tier (shared-prefix reuse)
     cache_stats: Dict[str, Any] = field(default_factory=dict)

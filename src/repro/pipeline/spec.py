@@ -18,7 +18,12 @@ operator type:
   cost $0 (paper §2.3);
 - ``rewrite_tags``: rewrite-target metadata the directive library
   consults (e.g. ``"reads_text"`` marks ops that read document text and
-  are therefore compression targets).
+  are therefore compression targets);
+- ``effects``: optional per-type field-flow declaration consumed by the
+  static analyzer (``repro.analysis``) — ``(op_config) -> OpEffects``
+  describing which document fields the op reads/writes. Types that do
+  not declare one get generic inference from ``output_schema``/
+  ``requires``/prompt references.
 
 Third-party operator types become a single ``@register_operator(...)``
 call — no edits to ``engine/executor.py`` or ``engine/operators.py``.
@@ -43,6 +48,9 @@ KINDS = (KIND_LLM, KIND_CODE, KIND_AUX)
 ExecuteFn = Callable[[Any, OpConfig, List[Dict[str, Any]], Any],
                      List[Dict[str, Any]]]
 ValidateFn = Callable[[OpConfig], None]
+# effects(op_config) -> repro.analysis.effects.OpEffects (typed as Any to
+# keep this layer import-free of the analysis package)
+EffectsFn = Callable[[OpConfig], Any]
 
 
 class PipelineValidationError(ValueError):
@@ -60,6 +68,7 @@ class OperatorSpec:
     required_keys: Tuple[str, ...] = ()
     description: str = ""
     rewrite_tags: FrozenSet[str] = frozenset()
+    effects: Optional[EffectsFn] = None
 
     @property
     def is_llm(self) -> bool:
@@ -99,6 +108,7 @@ def register_operator(type: str, *, kind: str,
                       required_keys: Tuple[str, ...] = (),
                       description: str = "",
                       rewrite_tags: Tuple[str, ...] = (),
+                      effects: Optional[EffectsFn] = None,
                       replace: bool = False) -> Callable[[ExecuteFn], ExecuteFn]:
     """Decorator registering ``fn`` as the executor of operator ``type``.
 
@@ -112,7 +122,8 @@ def register_operator(type: str, *, kind: str,
             type=type, kind=kind, execute=fn, validate=validate,
             required_keys=tuple(required_keys),
             description=description or (fn.__doc__ or "").strip(),
-            rewrite_tags=frozenset(rewrite_tags)), replace=replace)
+            rewrite_tags=frozenset(rewrite_tags),
+            effects=effects), replace=replace)
         return fn
     return deco
 
@@ -194,6 +205,18 @@ class TypeView:
 # ---------------------------------------------------------------------------
 
 
+def op_stat_names(op: OpConfig) -> List[str]:
+    """Every name this op charges stats/cache entries under: its own name
+    plus, for fan-out ops carrying a ``prompts`` list, the synthesized
+    ``"{name}.{i}"`` sub-op names the executor creates per sub-prompt."""
+    name = op.get("name", "")
+    names = [name]
+    prompts = op.get("prompts")
+    if isinstance(prompts, (list, tuple)):
+        names.extend(f"{name}.{i}" for i in range(len(prompts)))
+    return names
+
+
 def validate_op(op: OpConfig) -> None:
     if not isinstance(op, dict) or "name" not in op or "type" not in op:
         raise PipelineValidationError(f"operator missing name/type: {op}")
@@ -208,12 +231,20 @@ def validate_pipeline_config(pipeline: PipelineConfig) -> None:
     ops = pipeline.get("operators", [])
     if not ops:
         raise PipelineValidationError("pipeline has no operators")
-    names = set()
+    names: set = set()
     for op in ops:
         validate_op(op)
-        if op["name"] in names:
-            raise PipelineValidationError(f"duplicate op name {op['name']}")
-        names.add(op["name"])
+        # Fan-out ops (parallel_map) synthesize "{name}.{i}" sub-op names
+        # at execution time; those names key per-op stats and the call
+        # cache exactly like top-level names, so a collision with another
+        # op silently aliases its accounting. Validate the full set.
+        for stat_name in op_stat_names(op):
+            if stat_name in names:
+                raise PipelineValidationError(
+                    f"duplicate op name {stat_name!r} (op names and "
+                    "fan-out sub-op names must be unique: they key "
+                    "per-op stats and cache entries)")
+            names.add(stat_name)
     produced: set = set()
     for op in ops:
         for fld in op.get("requires", []):

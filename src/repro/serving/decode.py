@@ -62,7 +62,7 @@ def generate(
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
     out = [np.asarray(tok)]
     key = jax.random.PRNGKey(seed + 1)
-    for i in range(steps - 1):
+    for _ in range(steps - 1):
         key, sub = jax.random.split(key)
         tok, cache = serve_step(params, tok, cache,
                                 sub if temperature > 0 else None)

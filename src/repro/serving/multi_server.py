@@ -49,6 +49,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis.analyzer import analyze as _analyze
 from repro.data.documents import Document
 from repro.engine.executor import CallCache, Executor
 from repro.engine.operators import validate_pipeline
@@ -104,6 +105,8 @@ class MultiPipelineServer(PipelineServer):
                                  f"> 0, got {spec.weight}")
             config = as_config(spec.pipeline)
             validate_pipeline(config)
+            # refuse statically-broken tenant plans at registration
+            _analyze(config).raise_for_errors()
             self._tenants[spec.name] = spec
             self._configs[spec.name] = config
         # DRR state: visit order is tenant registration order; quanta
@@ -234,6 +237,19 @@ class MultiPipelineServer(PipelineServer):
         self._tenant(tenant)
         return self._make_ticket(doc, submitted_at=submitted_at,
                                  tenant=tenant)
+
+    def analyze(self, tenant: Optional[str] = None, *,
+                source_fields: Optional[Sequence[str]] = None) -> Any:
+        """Static field-flow analysis of tenant plans: one
+        :class:`AnalysisReport` for ``tenant``, or a ``{name: report}``
+        mapping over every tenant when ``tenant`` is None."""
+        if tenant is not None:
+            self._tenant(tenant)
+            return _analyze(self._configs[tenant],
+                            source_fields=source_fields)
+        return {name: _analyze(self._configs[name],
+                               source_fields=source_fields)
+                for name in self._order}
 
     def _job_config(self, tk: ServeTicket) -> Any:
         return self._configs[tk.tenant]

@@ -50,6 +50,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis.analyzer import AnalysisReport, analyze as _analyze
 from repro.data.documents import Dataset, Document
 from repro.engine.executor import (CallCache, ExecutionStats, Executor,
                                    SessionResult)
@@ -592,6 +593,10 @@ class PipelineServer:
                  stats_mode: str = "auto", stats_window: int = 512):
         self._config = as_config(pipeline)
         validate_pipeline(self._config)
+        # static field-flow analysis: refuse plans with error diagnostics
+        # (undefined reads, aliasing names, unknown models, ...) before
+        # they serve a single request — the gate the hot-swap path needs
+        _analyze(self._config).raise_for_errors()
         if max_batch > max_inflight:
             raise ValueError(f"max_batch={max_batch} exceeds "
                              f"max_inflight={max_inflight}")
@@ -680,6 +685,14 @@ class PipelineServer:
         for multi-tenant hosts."""
         (doc,) = rest
         return self._make_ticket(doc, submitted_at=submitted_at)
+
+    def analyze(self, *, source_fields: Optional[Sequence[str]] = None
+                ) -> AnalysisReport:
+        """Static field-flow analysis of the served plan. Pass the
+        request documents' field names as ``source_fields`` for full
+        undefined-read checking (the constructor's gate runs open-world
+        since request schemas aren't known yet)."""
+        return _analyze(self._config, source_fields=source_fields)
 
     def _job_config(self, tk: ServeTicket) -> Any:
         """The pipeline the batch job for this ticket evaluates."""

@@ -119,7 +119,7 @@ class ContinuousBatcher:
                     continue
 
                 # splice single-sequence cache into the batch cache
-                def splice(batch_leaf, one_leaf):
+                def splice(batch_leaf, one_leaf, slot=slot):
                     if batch_leaf.ndim == 0 or \
                             one_leaf.shape == batch_leaf.shape:
                         return batch_leaf

@@ -1,0 +1,334 @@
+"""Static field-flow analyzer (``repro.analysis``) + its integrations.
+
+Covers the four contracts the analyzer makes:
+
+- **soundness on real plans** — zero diagnostics on every workload's
+  initial pipeline AND on every rewrite any directive can produce from
+  them (the property the search-time gate relies on);
+- **sensitivity** — each seeded-invalid fixture is flagged with the
+  expected diagnostic code;
+- **zero interference** — search with lint enabled is bit-identical to
+  lint disabled on all-valid candidate streams, and strictly cheaper
+  under fault-injected malformed rewrites (static_rejects > 0, fewer
+  evaluations);
+- **serving gate** — PipelineServer / MultiPipelineServer refuse plans
+  with error diagnostics at construction and expose ``analyze()``.
+"""
+
+import pytest
+
+from repro.analysis import (DEAD_WRITE, DUPLICATE_NAME, REDUCE_MISSING_KEY,
+                            SEV_ERROR, SHADOWED_WRITE, TEXT, UNDEFINED_READ,
+                            UNKNOWN_MODEL, UNKNOWN_TYPE, analyze, depends,
+                            lint_errors, op_effects)
+from repro.core.models_catalog import DEFAULT_MODEL
+from repro.core.search import MOARSearch
+from repro.engine.backend import SimBackend
+from repro.engine.workloads import WORKLOADS, load
+from repro.launch.lint import (FaultInjectedSearch, is_faulted,
+                               iter_candidates, main as lint_main,
+                               workload_source_fields)
+from repro.pipeline import PipelineValidationError
+from repro.serving.multi_server import MultiPipelineServer
+from repro.serving.pipeline_server import PipelineServer
+
+
+def _pipe(*ops):
+    return {"name": "t", "operators": list(ops)}
+
+
+def _map(name, schema, **kw):
+    return {"type": "map", "name": name, "prompt": "extract",
+            "model": DEFAULT_MODEL, "output_schema": schema, **kw}
+
+
+def _merge(name, fields, out):
+    return {"type": "code_map", "name": name,
+            "code": {"kind": "merge_lists", "fields": list(fields),
+                     "output_field": out}}
+
+
+# -- property: every real plan and every directive rewrite is clean ----------
+
+
+@pytest.mark.parametrize("wname", sorted(WORKLOADS))
+def test_all_workload_rewrites_analyze_clean(wname):
+    w = load(wname)
+    src = workload_source_fields(w)
+    n = 0
+    for label, pipeline in iter_candidates(w, seed=0):
+        report = analyze(pipeline, source_fields=src)
+        assert report.clean, f"{wname}::{label}\n{report.format()}"
+        n += 1
+    assert n > 1  # the sweep actually produced rewrites
+
+
+# -- sensitivity: seeded-invalid fixtures -------------------------------------
+
+
+def test_undefined_read_closed_world():
+    p = _pipe(_merge("m", ["nope"], "out"))
+    report = analyze(p, source_fields=["text", "title"])
+    assert report.codes() == [UNDEFINED_READ]
+    assert report.errors[0].field == "nope"
+    # open world the same read is unprovable: no diagnostic
+    assert analyze(p).clean
+
+
+def test_undefined_read_after_scope_reset_is_provable_open_world():
+    # reduce without restore_id destroys upstream fields: the read of
+    # "a" below is an error even with unknown source fields
+    p = _pipe(
+        _map("m", {"a": "string"}),
+        {"type": "reduce", "name": "r", "prompt": "sum",
+         "model": DEFAULT_MODEL, "reduce_key": "_all",
+         "output_schema": {"s": "string"}},
+        _merge("g", ["a"], "out"))
+    codes = [d.code for d in analyze(p).errors]
+    assert UNDEFINED_READ in codes
+
+
+def test_dead_write_flagged():
+    # "a" is written, never read, and destroyed by the scope reset
+    p = _pipe(
+        _map("m", {"a": "string"}),
+        {"type": "reduce", "name": "r", "prompt": "sum",
+         "model": DEFAULT_MODEL, "reduce_key": "_all",
+         "output_schema": {"s": "string"}})
+    report = analyze(p)
+    assert DEAD_WRITE in report.codes()
+    assert report.ok  # warning, not error: never rejects a candidate
+
+
+def test_shadowed_write_flagged():
+    p = _pipe(_map("m1", {"a": "string"}), _map("m2", {"a": "string"}))
+    report = analyze(p)
+    assert SHADOWED_WRITE in report.codes()
+    assert report.ok
+
+
+def test_duplicate_name_flagged_including_fanout_subnames():
+    report = analyze(_pipe(_map("x", {"a": "string"}),
+                           _map("x", {"b": "string"})))
+    assert DUPLICATE_NAME in report.codes()
+    # parallel_map synthesizes "x.0": colliding with a literal op name
+    # "x.0" aliases per-op stats/cache
+    p = _pipe(
+        {"type": "parallel_map", "name": "x", "prompt": "q",
+         "model": DEFAULT_MODEL,
+         "prompts": [{"prompt": "q", "model": DEFAULT_MODEL,
+                      "output_schema": {"a": "string"}}],
+         "output_schema": {"a": "string"}},
+        _map("x.0", {"b": "string"}))
+    assert DUPLICATE_NAME in analyze(p).codes()
+    with pytest.raises(PipelineValidationError, match="duplicate op name"):
+        from repro.pipeline import validate_pipeline_config
+        validate_pipeline_config(p)
+
+
+def test_reduce_missing_key_flagged():
+    p = _pipe({"type": "reduce", "name": "r", "prompt": "sum",
+               "model": DEFAULT_MODEL, "reduce_key": "grp",
+               "output_schema": {"s": "string"}})
+    report = analyze(p, source_fields=["text"])
+    assert REDUCE_MISSING_KEY in report.codes()
+    assert report.errors[0].field == "grp"
+    # grouping key produced upstream: clean
+    p2 = _pipe(_map("m", {"grp": "string"}), p["operators"][0])
+    assert analyze(p2, source_fields=["text"]).ok
+
+
+def test_unknown_model_flagged():
+    p = _pipe(_map("m", {"a": "string"}, model="no-such-model"))
+    report = analyze(p)
+    assert report.codes() == [UNKNOWN_MODEL]
+    assert report.errors[0].field == "no-such-model"
+
+
+def test_unknown_type_flagged_not_raised():
+    report = analyze(_pipe({"type": "florble", "name": "f"}))
+    assert UNKNOWN_TYPE in report.codes()
+    with pytest.raises(PipelineValidationError):
+        report.raise_for_errors()
+
+
+def test_lint_errors_returns_only_errors():
+    p = _pipe(_map("m1", {"a": "string"}), _map("m2", {"a": "string"}))
+    assert lint_errors(p) == []  # shadowed write is a warning
+    assert lint_errors(_pipe(_map("m", {"a": "string"},
+                                  model="no-such-model")))
+
+
+# -- effects model ------------------------------------------------------------
+
+
+def test_effects_filter_writes_nothing():
+    eff = op_effects({"type": "filter", "name": "f", "prompt": "keep?",
+                      "model": DEFAULT_MODEL,
+                      "output_schema": {"keep": "bool"}})
+    assert eff.writes == frozenset()
+    assert TEXT in eff.reads
+
+
+def test_effects_classify_and_summarize_maps():
+    eff = op_effects(_map("c", {}, classify={"output_field": "label",
+                                             "truth_field": "gold",
+                                             "labels": ["a", "b"]}))
+    assert eff.writes == frozenset({"label"})
+    assert "gold" in eff.reads
+    eff = op_effects(_map("s", {}, summarize=True))
+    assert eff.writes == frozenset({TEXT})
+
+
+def test_effects_split_gather_aux_fields():
+    sp = op_effects({"type": "split", "name": "s", "chunk_chars": 100})
+    assert {"_parent_id", "_chunk_idx", "_num_chunks"} <= set(sp.writes)
+    ga = op_effects({"type": "gather", "name": "g"})
+    assert {"_parent_id", "_chunk_idx"} <= set(ga.reads)
+
+
+def test_effects_parallel_map_stat_names():
+    eff = op_effects({
+        "type": "parallel_map", "name": "pm",
+        "prompts": [{"prompt": "a", "model": DEFAULT_MODEL},
+                    {"prompt": "b", "model": DEFAULT_MODEL}],
+        "output_schema": {"x": "string"}})
+    assert eff.stat_names == ("pm", "pm.0", "pm.1")
+
+
+def test_depends_from_field_flow():
+    w_a = _map("w", {"a": "string"})
+    r_a = {"type": "code_filter", "name": "f",
+           "code": {"kind": "drop_if_false", "field": "a"}}
+    w_b = _map("v", {"b": "string"})
+    assert depends(r_a, w_a)           # read-after-write
+    assert depends(w_a, r_a)           # write-after-read (swap changes f)
+    assert not depends(w_b, w_a)       # disjoint fields commute
+    red = {"type": "reduce", "name": "r", "prompt": "s",
+           "model": DEFAULT_MODEL, "reduce_key": "_all",
+           "output_schema": {"s": "string"}}
+    assert depends(w_b, red) and depends(red, w_b)  # scope reset blocks
+
+
+# -- search integration -------------------------------------------------------
+
+
+def _run_search(cls, wname, *, lint, budget=10, **kw):
+    w = load(wname)
+    return cls(w, SimBackend(seed=0, domain=w.domain), budget=budget,
+               seed=0, lint=lint, **kw).run()
+
+
+def test_search_lint_bit_identical_on_valid_stream():
+    r1 = _run_search(MOARSearch, "cuad", lint=True)
+    r2 = _run_search(MOARSearch, "cuad", lint=False)
+    assert r1.static_rejects == 0
+    assert [(n.acc, n.cost) for n in r1.evaluated] == \
+           [(n.acc, n.cost) for n in r2.evaluated]
+    assert [(n.acc, n.cost) for n in r1.frontier] == \
+           [(n.acc, n.cost) for n in r2.frontier]
+    assert r1.budget_used == r2.budget_used
+
+
+class _AllFaulty(FaultInjectedSearch):
+    fault_num = fault_den = 1
+
+
+def test_search_lint_rejects_fault_injected_rewrites():
+    w = load("blackvault")
+    fields = workload_source_fields(w)
+    r_on = _run_search(_AllFaulty, "blackvault", lint=True, budget=12,
+                       lint_fields=fields)
+    r_off = _run_search(_AllFaulty, "blackvault", lint=False, budget=12)
+    assert r_on.static_rejects > 0
+    assert sum(r_on.static_rejects_by_directive.values()) == \
+        r_on.static_rejects
+    # lint redirects/withholds budget: strictly fewer evaluations, and
+    # nothing that was evaluated carries an error diagnostic
+    assert len(r_on.evaluated) < len(r_off.evaluated)
+    assert r_on.budget_used < r_off.budget_used
+    for n in r_on.evaluated:
+        assert not lint_errors(n.pipeline, source_fields=fields)
+    # the unlinted run burned real evaluations on malformed candidates
+    assert any(is_faulted(n.pipeline) and
+               lint_errors(n.pipeline, source_fields=fields)
+               for n in r_off.evaluated)
+    assert r_off.static_rejects == 0
+
+
+def test_baseline_lint_gate():
+    from repro.baselines.common import BaseOptimizer
+    w = load("cuad")
+    fields = workload_source_fields(w)
+    opt = BaseOptimizer(w, SimBackend(seed=0, domain=w.domain), budget=4,
+                        lint_fields=fields)
+    bad = dict(w.initial_pipeline)
+    bad["operators"] = list(bad["operators"]) + [
+        _merge("probe", ["nonexistent_xyz"], "out")]
+    assert opt.evaluate(bad, "probe") is None
+    assert opt.static_rejects == 1 and opt.t == 0  # no budget spent
+    # batch: rejected entries resolve to None, valid ones still evaluate
+    pts = opt.evaluate_batch([bad, w.initial_pipeline], ["probe", "ok"])
+    assert pts[0] is None and pts[1] is not None
+    assert opt.static_rejects == 2 and opt.t == 1
+
+
+# -- serving integration ------------------------------------------------------
+
+
+def _invalid_plan():
+    # provable open-world: read of a field a scope reset destroyed
+    return _pipe(
+        _map("m", {"a": "string"}),
+        {"type": "reduce", "name": "r", "prompt": "sum",
+         "model": DEFAULT_MODEL, "reduce_key": "_all",
+         "output_schema": {"s": "string"}},
+        _merge("g", ["a"], "out"))
+
+
+def test_server_rejects_invalid_plan_at_construction():
+    with pytest.raises(PipelineValidationError, match="undefined-read"):
+        PipelineServer(_invalid_plan(), SimBackend(seed=0))
+    with pytest.raises(PipelineValidationError, match="undefined-read"):
+        MultiPipelineServer([("a", load("cuad").initial_pipeline),
+                             ("b", _invalid_plan())], SimBackend(seed=0))
+
+
+def test_server_analyze_method():
+    w = load("medec")
+    srv = PipelineServer(w.initial_pipeline, SimBackend(seed=0))
+    assert srv.analyze().ok
+    assert srv.analyze(source_fields=workload_source_fields(w)).ok
+    # closed world with a bogus universe: the plan's reads get flagged
+    bogus = srv.analyze(source_fields=["only_this"])
+    assert not bogus.ok or bogus.clean  # either flags reads or plan
+
+
+def test_multi_server_analyze_per_tenant():
+    cuad, medec = load("cuad"), load("medec")
+    srv = MultiPipelineServer([("c", cuad.initial_pipeline),
+                               ("m", medec.initial_pipeline)],
+                              SimBackend(seed=0))
+    reports = srv.analyze()
+    assert set(reports) == {"c", "m"} and all(
+        r.ok for r in reports.values())
+    assert srv.analyze("c").ok
+    with pytest.raises(KeyError):
+        srv.analyze("nope")
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def test_lint_cli_clean_run(capsys):
+    assert lint_main(["--no-rewrites"]) == 0
+    out = capsys.readouterr().out
+    assert "all clean" in out
+
+
+def test_lint_cli_json(capsys):
+    import json
+    assert lint_main(["--no-rewrites", "--workloads", "cuad",
+                      "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["errors"] == 0 and report["candidates_analyzed"] == 1

@@ -40,7 +40,7 @@ def test_directive_applies_and_executes(directive):
     """Find any workload pipeline where the LHS matches; instantiate,
     apply, validate, and execute the rewritten pipeline."""
     applied = 0
-    for name, w in WLS.items():
+    for _name, w in WLS.items():
         targets = directive.targets(w.initial_pipeline)
         if not targets:
             continue

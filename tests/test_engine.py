@@ -110,7 +110,7 @@ def test_validation_rejects_bad_pipelines():
 
 
 def test_workload_scorers_bounds():
-    for name, ctor in WORKLOADS.items():
+    for _name, ctor in WORKLOADS.items():
         w = ctor()
         assert w.score([], w.sample) == 0.0
         assert len(w.sample) == 40 and len(w.test) == 100

@@ -167,7 +167,7 @@ def test_param_specs_always_divisible():
             lambda cfg=cfg: api.init_params(jax.random.PRNGKey(0), cfg))
         specs = shd.param_pspecs(cfg, params, pol)
 
-        def check(path, leaf, spec):
+        def check(path, leaf, spec, arch=arch):
             for dim, entry in zip(leaf.shape, tuple(spec)):
                 if entry is None:
                     continue

@@ -226,3 +226,97 @@ def test_unknown_optimizer_rejected():
     with pytest.raises(KeyError):
         from repro.pipeline import get_optimizer
         get_optimizer("nosuch_optimizer")
+
+
+# -- validate_op / validate_pipeline_config edge cases ------------------------
+
+
+def _llm_op(name="m", type="map", **kw):
+    from repro.core.models_catalog import DEFAULT_MODEL
+    return {"name": name, "type": type, "prompt": "p",
+            "model": DEFAULT_MODEL, "output_schema": {"a": "string"}, **kw}
+
+
+def test_validate_op_structural_rejects():
+    from repro.pipeline import validate_op
+    with pytest.raises(PipelineValidationError, match="missing name/type"):
+        validate_op({"type": "map"})
+    with pytest.raises(PipelineValidationError, match="missing name/type"):
+        validate_op({"name": "m"})
+    with pytest.raises(PipelineValidationError, match="missing name/type"):
+        validate_op("not a dict")
+
+
+def test_validate_op_missing_required_keys():
+    from repro.pipeline import validate_op
+    for missing in ("prompt", "model", "output_schema"):
+        op = _llm_op()
+        op.pop(missing)
+        with pytest.raises(PipelineValidationError, match=missing):
+            validate_op(op)
+
+
+def test_validate_op_bad_reduce_and_sample_configs():
+    from repro.pipeline import validate_op
+    op = _llm_op(type="reduce")  # no reduce_key at all
+    with pytest.raises(PipelineValidationError, match="reduce_key"):
+        validate_op(op)
+    validate_op(_llm_op(type="reduce", reduce_key="_all"))  # ok
+    with pytest.raises(PipelineValidationError, match="sample method"):
+        validate_op({"name": "s", "type": "sample", "method": "nope",
+                     "size": 3})
+    with pytest.raises(PipelineValidationError, match="needs size"):
+        validate_op({"name": "s", "type": "sample", "method": "random"})
+    with pytest.raises(PipelineValidationError, match="CodeSpec"):
+        validate_op({"name": "c", "type": "code_map"})
+
+
+def test_validate_op_registry_registered_custom_type():
+    @register_operator("needs_k", kind="aux", required_keys=("k",))
+    def exec_needs_k(ex, op, docs, stats):
+        return docs
+
+    try:
+        from repro.pipeline import validate_op
+        validate_op({"name": "n", "type": "needs_k", "k": 1})
+        with pytest.raises(PipelineValidationError, match="'k'"):
+            validate_op({"name": "n", "type": "needs_k"})
+    finally:
+        unregister_operator("needs_k")
+
+
+def test_validate_pipeline_config_empty_and_requires_order():
+    from repro.pipeline import validate_pipeline_config
+    with pytest.raises(PipelineValidationError, match="no operators"):
+        validate_pipeline_config(make_pipeline("t", []))
+    # 'requires' marks fields produced by a PREVIOUS operator
+    with pytest.raises(PipelineValidationError, match="before it is"):
+        validate_pipeline_config(make_pipeline("t", [
+            _llm_op("m1", requires=["a"])]))
+    validate_pipeline_config(make_pipeline("t", [
+        _llm_op("m1"), _llm_op("m2", requires=["a"],
+                               output_schema={"b": "string"})]))
+
+
+def test_validate_pipeline_config_duplicate_names():
+    from repro.pipeline import validate_pipeline_config
+    with pytest.raises(PipelineValidationError, match="duplicate op name"):
+        validate_pipeline_config(make_pipeline("t", [
+            _llm_op("x"), _llm_op("x", output_schema={"b": "string"})]))
+
+
+def test_validate_pipeline_config_fanout_subname_collision():
+    """parallel_map executes sub-ops named '{name}.{i}'; those names key
+    per-op stats and the call cache, so colliding with a literal op name
+    must be rejected exactly like a top-level duplicate."""
+    from repro.pipeline import validate_pipeline_config
+    pm = _llm_op("x", type="parallel_map",
+                 prompts=[{"prompt": "q1"}, {"prompt": "q2"}])
+    validate_pipeline_config(make_pipeline("t", [pm]))  # itself fine
+    with pytest.raises(PipelineValidationError, match=r"x\.1"):
+        validate_pipeline_config(make_pipeline("t", [
+            pm, _llm_op("x.1", output_schema={"b": "string"})]))
+    # order doesn't matter: literal name first, fan-out second
+    with pytest.raises(PipelineValidationError, match=r"x\.0"):
+        validate_pipeline_config(make_pipeline("t", [
+            _llm_op("x.0", output_schema={"b": "string"}), pm]))

@@ -78,7 +78,7 @@ def test_eos_on_prefill_retires_at_admit(monkeypatch):
     occupy a decode slot and keep appending tokens until max_new_tokens;
     it must retire at admit time with exactly the one token."""
     b, stub = _batcher(monkeypatch, first_token=2, eos_id=2)
-    for i in range(3):
+    for _ in range(3):
         b.submit(np.arange(4), max_new_tokens=8)
     # one tick admits (and retires) everything: no decode step needed
     assert b.step() == 0

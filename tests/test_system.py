@@ -29,13 +29,13 @@ def runs():
 
 
 def test_moar_improves_over_initial(runs):
-    for name, (w, be, res) in runs.items():
+    for name, (_w, _be, res) in runs.items():
         assert res.best().acc > res.root.acc + 0.05, name
 
 
 def test_frontier_offers_cost_savings(runs):
     """Some frontier plan must match initial accuracy at lower cost."""
-    for name, (w, be, res) in runs.items():
+    for name, (_w, _be, res) in runs.items():
         cheaper = [n for n in res.frontier
                    if n.acc >= res.root.acc and n.cost < res.root.cost]
         assert cheaper, f"{name}: no cheaper-at-same-accuracy plan"
