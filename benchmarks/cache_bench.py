@@ -1,0 +1,141 @@
+"""Persistent call-cache benchmark: cold vs warm search + golden replay.
+
+Per workload, three phases against one fresh persistent store:
+
+1. **cold** — record-mode MOAR search on an empty store: every backend
+   answer is persisted, and the run's golden summary is stored.
+2. **warm** — a second, identical search with a fresh readwrite-mode
+   cache over the same store (the cross-session warm start): the gate
+   asserts the warm run's call-cache misses — each miss is one request
+   the backend had to answer — drop by >= 25% vs cold (same-seed reruns
+   in practice drop to ~0). Wall-clock is reported alongside but not
+   gated: against the simulated backend a store lookup costs about as
+   much as the call it saves; the win is the backend calls themselves.
+3. **replay** — the recorded search re-run with the store as the only
+   execution substrate (``ReplayBackend``: any request reaching the
+   backend raises): gates bit-identical golden summaries and zero
+   backend calls.
+
+Writes BENCH_cache.json (hit rates, call reductions, wall-clocks) for
+the CI artifact.
+
+  PYTHONPATH=src python benchmarks/cache_bench.py
+  PYTHONPATH=src python benchmarks/cache_bench.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.cache import (PersistentCallCache, golden_diff, open_store,
+                         record_search, replay_search)
+from repro.engine.backend import SimBackend
+from repro.engine.workloads import load
+from repro.pipeline import run_optimizer
+
+#: warm search must cut backend-answered requests by at least this much
+CALL_REDUCTION_GATE = 0.25
+
+
+def bench_workload(name: str, *, budget: int, seed: int) -> dict:
+    w = load(name, seed=seed)
+    tmp = tempfile.mkdtemp(prefix=f"cache-bench-{name}-")
+    store = open_store(os.path.join(tmp, "store.sqlite"))
+    golden_name = f"moar-{name}-b{budget}-s{seed}"
+
+    t0 = time.time()
+    cold_res, golden = record_search(store, w, budget=budget, seed=seed,
+                                     golden_name=golden_name)
+    cold_wall = time.time() - t0
+    cold = cold_res.cache_stats
+
+    # warm start: a brand-new cache instance over the same store — the
+    # in-memory tiers start empty, so every store hit is a genuine
+    # cross-session replayed call
+    backend = SimBackend(seed=seed, domain=w.domain)
+    warm_cache = PersistentCallCache(store, mode="readwrite")
+    t0 = time.time()
+    warm_res = run_optimizer("moar", w, backend, budget=budget, seed=seed,
+                             call_cache=warm_cache)
+    warm_wall = time.time() - t0
+    warm = warm_res.cache_stats
+
+    t0 = time.time()
+    _, replay_golden, submits = replay_search(store, w, budget=budget,
+                                              seed=seed)
+    replay_wall = time.time() - t0
+    diffs = golden_diff(golden, replay_golden)
+
+    cold_calls = cold["call_cache_misses"]
+    warm_calls = warm["call_cache_misses"]
+    reduction = 1.0 - warm_calls / cold_calls if cold_calls else 1.0
+    return {
+        "workload": name, "budget": budget, "seed": seed,
+        "cold": {"wall_s": cold_wall, "backend_calls": cold_calls,
+                 "hit_rate": cold["call_cache_hit_rate"],
+                 "store_writes": cold["persistent"]["store_writes"]},
+        "warm": {"wall_s": warm_wall, "backend_calls": warm_calls,
+                 "hit_rate": warm["call_cache_hit_rate"],
+                 "store_hits": warm["persistent"]["store_hits"]},
+        "call_reduction": reduction,
+        "warm_vs_cold_wall": warm_wall / cold_wall if cold_wall else 1.0,
+        "replay": {"wall_s": replay_wall, "submit_calls": submits,
+                   "golden_diffs": diffs,
+                   "bit_identical": not diffs and submits == 0},
+        "frontier": golden["frontier"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small budget for CI")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workloads", nargs="+",
+                    default=["cuad", "medec"])
+    ap.add_argument("--json", default="BENCH_cache.json")
+    args = ap.parse_args()
+    budget = args.budget if args.budget is not None else \
+        (10 if args.smoke else 40)
+
+    results = []
+    failures = []
+    for name in args.workloads:
+        r = bench_workload(name, budget=budget, seed=args.seed)
+        results.append(r)
+        print(f"[{name}] cold: {r['cold']['backend_calls']} backend "
+              f"call(s) in {r['cold']['wall_s']:.2f}s | warm: "
+              f"{r['warm']['backend_calls']} call(s) "
+              f"({r['call_reduction']:.0%} reduction, "
+              f"{r['warm']['wall_s']:.2f}s) | replay: "
+              f"{'bit-identical' if r['replay']['bit_identical'] else 'DIVERGED'}"
+              f", {r['replay']['submit_calls']} backend call(s)")
+        if r["call_reduction"] < CALL_REDUCTION_GATE:
+            failures.append(
+                f"{name}: warm search cut backend calls by only "
+                f"{r['call_reduction']:.0%} (< {CALL_REDUCTION_GATE:.0%})")
+        if not r["replay"]["bit_identical"]:
+            failures.append(
+                f"{name}: replay diverged: "
+                f"{r['replay']['golden_diffs'] or 'backend was invoked'}")
+
+    payload = {"gate": {"call_reduction": CALL_REDUCTION_GATE},
+               "budget": budget, "seed": args.seed, "results": results,
+               "failures": failures}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.json}")
+    if failures:
+        for msg in failures:
+            print(f"GATE FAILED: {msg}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

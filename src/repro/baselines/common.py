@@ -32,7 +32,8 @@ class BaseOptimizer:
 
     def __init__(self, workload: Workload, backend, *, budget: int = 40,
                  seed: int = 0, workers: int = 1, lint: bool = True,
-                 lint_fields: Optional[List[str]] = None):
+                 lint_fields: Optional[List[str]] = None,
+                 call_cache=None):
         self.workload = workload
         self.backend = backend
         self.budget = budget
@@ -43,8 +44,10 @@ class BaseOptimizer:
         # the shared executor's call cache is the second evaluation-cache
         # tier under the pipeline-hash cache below: candidate plans that
         # share a prefix with anything already measured only re-execute
-        # the changed suffix (ABACUS-style sample reuse)
-        self.executor = Executor(backend, seed=seed)
+        # the changed suffix (ABACUS-style sample reuse). An injected
+        # call_cache (e.g. repro.cache.PersistentCallCache) adds a
+        # durable third tier shared across sessions
+        self.executor = Executor(backend, seed=seed, call_cache=call_cache)
         self.cache: Dict[str, Tuple[float, float]] = {}
         self.cache_hits = 0
         self.evaluated: List[PlanPoint] = []

@@ -1,0 +1,24 @@
+"""Persistent semantic call cache + golden-master record/replay.
+
+The durable tier under the executor's in-memory ``CallCache``: a
+content-addressed store of backend call records (keyed on the existing
+backend-fingerprint × op × doc address) shared across processes and
+sessions, plus record/replay modes that turn whole optimize+serve
+sessions into deterministic golden-master runs. See ``store`` (on-disk
+formats), ``tier`` (the cache subclass + modes), ``golden`` (replay
+backend + golden summaries), and ``repro.launch.cache`` (the CLI).
+"""
+
+from repro.cache.golden import (ReplayBackend, golden_diff,
+                                golden_from_result, record_search,
+                                replay_search)
+from repro.cache.store import (SCHEMA_VERSION, FileStore, SQLiteStore,
+                               StoreError, open_store)
+from repro.cache.tier import MODES, CacheMiss, PersistentCallCache
+
+__all__ = [
+    "SCHEMA_VERSION", "FileStore", "SQLiteStore", "StoreError",
+    "open_store", "MODES", "CacheMiss", "PersistentCallCache",
+    "ReplayBackend", "golden_diff", "golden_from_result",
+    "record_search", "replay_search",
+]

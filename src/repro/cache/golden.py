@@ -1,0 +1,136 @@
+"""Golden-master record/replay of whole optimize sessions.
+
+The recipe (the CLI in ``repro.launch.cache`` and the CI gate both run
+it):
+
+1. :func:`record_search` — run an optimizer against the real backend
+   with a :class:`PersistentCallCache` in ``record`` mode: every backend
+   answer is persisted, and the run's :func:`golden_from_result` summary
+   (frontier, evaluated points, budget, errors — exact floats; JSON
+   round-trips IEEE doubles exactly) is saved as the named golden.
+2. :func:`replay_search` — re-run the identical search with the cache in
+   ``replay`` mode over a :class:`ReplayBackend`, whose ``submit``
+   *raises*: the recording is the only execution substrate. Because the
+   replay backend delegates ``fingerprint()`` and ``usage_cost`` to a
+   donor instance of the recorded backend, cache keys and charged costs
+   are bit-identical, so the replayed ``SearchResult`` must equal the
+   golden — :func:`golden_diff` reports any divergence field by field.
+
+A replay that completes with ``submit_calls == 0`` and an empty diff is
+the regression guarantee: the whole search — candidate generation,
+two-tier caching, dispatch sessions, cost accounting — reproduced the
+recorded session bit-identically without one backend invocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.cache.tier import CacheMiss, PersistentCallCache
+from repro.pipeline.protocols import OpRequest, OpResult, backend_fingerprint
+
+
+class ReplayBackend:
+    """A backend that answers nothing: every request must come from the
+    recording, and one reaching ``submit`` raises :class:`CacheMiss`.
+
+    ``like`` is a donor instance of the *recorded* backend (e.g. a
+    ``SimBackend`` constructed with the recorded seed/domain — only
+    deterministic backends can be recorded, so a donor is always
+    constructible). It is never asked to execute anything; it only
+    donates ``fingerprint()`` — so replay computes the recorded cache
+    keys — and ``usage_cost`` — so replayed usage records charge the
+    recorded costs bit-identically.
+    """
+
+    # replay IS deterministic (it is a pure function of the recording),
+    # which is also what opts the executor's call cache in
+    deterministic = True
+    concurrent_submit = True
+
+    def __init__(self, like: Any,
+                 preferred_batch_size: Optional[int] = None):
+        self.like = like
+        self.preferred_batch_size = preferred_batch_size if \
+            preferred_batch_size is not None else \
+            getattr(like, "preferred_batch_size", 1)
+        self.submit_calls = 0
+
+    def fingerprint(self) -> Tuple[Any, ...]:
+        return tuple(backend_fingerprint(self.like))
+
+    def usage_cost(self, model: str, usage: Any) -> float:
+        return self.like.usage_cost(model, usage)
+
+    def submit(self, requests: List[OpRequest]) -> List[OpResult]:
+        self.submit_calls += len(requests)
+        raise CacheMiss(
+            None, f"{len(requests)} request(s) reached the backend in "
+            f"replay mode; first: "
+            f"{requests[0].kind}/{requests[0].op.get('name')}")
+
+
+def golden_from_result(res: Any) -> Dict[str, Any]:
+    """Reduce a unified ``SearchResult`` to its golden-master summary:
+    every field is an exact float/int, so equality of goldens is
+    bit-identity of the frontiers, costs, and budget accounting."""
+    return {
+        "optimizer": res.optimizer,
+        "frontier": [[p.acc, p.cost] for p in res.frontier],
+        "evaluated": [[p.acc, p.cost] for p in res.evaluated],
+        "budget_used": res.budget_used,
+        "errors": res.errors,
+        "total_cost": sum(p.cost for p in res.evaluated),
+    }
+
+
+def golden_diff(expected: Dict[str, Any], actual: Dict[str, Any]
+                ) -> List[str]:
+    """Field-by-field comparison of two golden summaries; empty list =
+    bit-identical."""
+    diffs = []
+    for k in sorted(set(expected) | set(actual)):
+        e, a = expected.get(k), actual.get(k)
+        if e != a:
+            diffs.append(f"{k}: recorded {e!r} != replayed {a!r}")
+    return diffs
+
+
+def _donor_backend(workload: Any, seed: int) -> Any:
+    from repro.engine.backend import SimBackend
+    return SimBackend(seed=seed, domain=workload.domain)
+
+
+def record_search(store, workload, *, budget: int, seed: int = 0,
+                  optimizer: str = "moar",
+                  golden_name: Optional[str] = None
+                  ) -> Tuple[Any, Dict[str, Any]]:
+    """Run ``optimizer`` against the simulated backend with a
+    record-mode persistent cache; persist every call record plus the
+    golden summary (under ``golden_name`` when given). Returns
+    (unified SearchResult, golden summary)."""
+    from repro.pipeline.optimizers import run_optimizer
+    backend = _donor_backend(workload, seed)
+    cache = PersistentCallCache(store, mode="record")
+    res = run_optimizer(optimizer, workload, backend, budget=budget,
+                        seed=seed, call_cache=cache)
+    golden = golden_from_result(res)
+    if golden_name:
+        store.put_golden(golden_name, golden)
+    return res, golden
+
+
+def replay_search(store, workload, *, budget: int, seed: int = 0,
+                  optimizer: str = "moar"
+                  ) -> Tuple[Any, Dict[str, Any], int]:
+    """Re-run the search with the recording as the only execution
+    substrate. Returns (unified SearchResult, golden summary,
+    submit_calls) — ``submit_calls`` must be 0 for a faithful replay;
+    a :class:`CacheMiss` escaping means the session diverged from the
+    recording."""
+    from repro.pipeline.optimizers import run_optimizer
+    backend = ReplayBackend(_donor_backend(workload, seed))
+    cache = PersistentCallCache(store, mode="replay")
+    res = run_optimizer(optimizer, workload, backend, budget=budget,
+                        seed=seed, call_cache=cache)
+    return res, golden_from_result(res), backend.submit_calls

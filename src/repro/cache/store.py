@@ -1,0 +1,454 @@
+"""Persistent call-record stores: the on-disk tier under the in-memory
+``CallCache``.
+
+A *store* is a durable, shared, content-addressed map from the
+executor's call-cache key — ``content_hash([backend_fingerprint, kind,
+op_fingerprint, doc_payload, extra])``, computed in
+``engine/executor.py`` — to the recorded ``(value, usage)`` of one
+backend invocation. Two implementations share the surface:
+
+- :class:`SQLiteStore` (default): one SQLite file in WAL mode, so many
+  processes can read while one writes — the shape a fleet of serving
+  hosts or repeated optimize sessions on one machine needs. Writes are
+  ``INSERT OR IGNORE``: for a deterministic backend every writer holds
+  the identical record, so first-write-wins is both race-free and
+  lossless.
+- :class:`FileStore` (fallback): a directory of per-key JSON files
+  (sharded by key prefix, written atomically via temp-file +
+  ``os.replace``) for environments without a usable ``sqlite3``. Same
+  semantics, worse constants.
+
+On-disk schema (versioned; a store with a different ``schema_version``
+refuses to open rather than silently misreading records):
+
+- ``calls``: key -> (value JSON, usage JSON, request kind, backend
+  fingerprint JSON, created_at) — the call records;
+- ``goldens``: name -> JSON payload — golden-master run summaries the
+  record/replay CLI gates against;
+- ``meta``: schema version + free-form bookkeeping (e.g. the backend
+  fingerprints that have written here).
+
+Serialization: values are stored as JSON. The persistent tier therefore
+requires **JSON-round-trip-stable** values (dicts with string keys,
+lists, strings, numbers, bools, None) — every builtin operator's values
+qualify. Record mode verifies the round trip per entry and raises
+:class:`StoreError` on divergence (e.g. a custom operator returning
+tuples or int-keyed dicts) instead of silently corrupting the
+recording. Usage records are stored as their three counters and replay
+as ``engine.backend.Usage``, so recorded cost/latency accounting is
+bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+try:  # stdlib, but some minimal interpreters ship without it
+    import sqlite3
+except ImportError:  # pragma: no cover - exercised via open_store gating
+    sqlite3 = None  # type: ignore[assignment]
+
+from repro.engine.backend import Usage
+
+#: bump when the on-disk layout or serialization changes; stores written
+#: by another version refuse to open (prune/rebuild instead of misread)
+SCHEMA_VERSION = 1
+
+
+class StoreError(RuntimeError):
+    """Persistent-store failure: unusable file, schema mismatch, or a
+    value that does not survive the JSON round trip."""
+
+
+def encode_entry(value: Any, usage: Any, *, verify: bool = False
+                 ) -> Tuple[str, str]:
+    """Serialize one call record to (value JSON, usage JSON).
+
+    With ``verify`` the value is decoded again and compared — the
+    record-mode guard that turns a non-JSON-stable operator value into a
+    loud :class:`StoreError` instead of a silently-different replay."""
+    try:
+        value_blob = json.dumps(value, sort_keys=True)
+    except (TypeError, ValueError) as e:
+        raise StoreError(
+            f"call value is not JSON-serializable and cannot enter the "
+            f"persistent cache: {e}") from e
+    if verify and json.loads(value_blob) != value:
+        raise StoreError(
+            "call value does not survive a JSON round trip (tuples, "
+            "non-string dict keys, NaN, ...) — recording it would replay "
+            "a different value than the backend returned")
+    if dataclasses.is_dataclass(usage) and not isinstance(usage, type):
+        u = dataclasses.asdict(usage)
+    elif isinstance(usage, dict):
+        u = dict(usage)
+    else:
+        u = {k: getattr(usage, k, 0)
+             for k in ("in_tokens", "out_tokens", "calls")}
+    usage_blob = json.dumps(
+        {k: u.get(k, 0) for k in ("in_tokens", "out_tokens", "calls")},
+        sort_keys=True)
+    return value_blob, usage_blob
+
+
+def decode_entry(value_blob: str, usage_blob: str) -> Tuple[Any, Usage]:
+    return json.loads(value_blob), Usage(**json.loads(usage_blob))
+
+
+class SQLiteStore:
+    """WAL-mode SQLite call store (see module docstring for schema)."""
+
+    backend_name = "sqlite"
+
+    def __init__(self, path: str, *, timeout_s: float = 30.0):
+        if sqlite3 is None:  # pragma: no cover - env without sqlite3
+            raise StoreError("sqlite3 is unavailable in this interpreter; "
+                             "use a FileStore (open_store(..., kind='file'))")
+        self.path = str(path)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        # one shared connection; check_same_thread=False + our own lock
+        # because run_session job threads and the serving loop all funnel
+        # through the tier. WAL lets concurrent *processes* read while
+        # one writes.
+        try:
+            self._conn = sqlite3.connect(self.path, timeout=timeout_s,
+                                         check_same_thread=False)
+        except sqlite3.Error as e:
+            raise StoreError(f"cannot open call store {self.path!r}: "
+                             f"{e}") from e
+        self._lock = threading.Lock()
+        with self._lock:
+            c = self._conn
+            c.execute("PRAGMA journal_mode=WAL")
+            c.execute("PRAGMA synchronous=NORMAL")
+            c.execute("CREATE TABLE IF NOT EXISTS meta ("
+                      "key TEXT PRIMARY KEY, value TEXT NOT NULL)")
+            c.execute("CREATE TABLE IF NOT EXISTS calls ("
+                      "key TEXT PRIMARY KEY, value TEXT NOT NULL, "
+                      "usage TEXT NOT NULL, kind TEXT, backend_fp TEXT, "
+                      "created_at REAL NOT NULL)")
+            c.execute("CREATE TABLE IF NOT EXISTS goldens ("
+                      "name TEXT PRIMARY KEY, payload TEXT NOT NULL, "
+                      "created_at REAL NOT NULL)")
+            c.commit()
+            row = c.execute("SELECT value FROM meta WHERE key = "
+                            "'schema_version'").fetchone()
+            if row is None:
+                c.execute("INSERT OR IGNORE INTO meta VALUES "
+                          "('schema_version', ?)", (str(SCHEMA_VERSION),))
+                c.commit()
+            elif int(row[0]) != SCHEMA_VERSION:
+                c.close()
+                raise StoreError(
+                    f"call store {self.path!r} has schema version "
+                    f"{row[0]}, this build reads {SCHEMA_VERSION} — "
+                    f"prune/rebuild the store instead of misreading it")
+
+    # -- call records --------------------------------------------------------
+
+    def get(self, key: str) -> Optional[Tuple[str, str]]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT value, usage FROM calls WHERE key = ?",
+                (key,)).fetchone()
+        return None if row is None else (row[0], row[1])
+
+    def put(self, key: str, value_blob: str, usage_blob: str, *,
+            kind: Optional[str] = None,
+            backend_fp: Optional[str] = None) -> bool:
+        """First-write-wins insert; returns whether this call wrote the
+        record (False: an identical record was already present)."""
+        with self._lock:
+            cur = self._conn.execute(
+                "INSERT OR IGNORE INTO calls VALUES (?, ?, ?, ?, ?, ?)",
+                (key, value_blob, usage_blob, kind, backend_fp,
+                 time.time()))
+            self._conn.commit()
+            return cur.rowcount == 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._conn.execute(
+                "SELECT COUNT(*) FROM calls").fetchone()[0]
+
+    def prune(self, keep: int) -> int:
+        """Drop the oldest records beyond ``keep``; returns how many."""
+        with self._lock:
+            cur = self._conn.execute(
+                "DELETE FROM calls WHERE key NOT IN (SELECT key FROM "
+                "calls ORDER BY created_at DESC, key LIMIT ?)",
+                (max(0, int(keep)),))
+            self._conn.commit()
+            return cur.rowcount
+
+    def clear(self) -> int:
+        with self._lock:
+            cur = self._conn.execute("DELETE FROM calls")
+            self._conn.commit()
+            return cur.rowcount
+
+    # -- goldens -------------------------------------------------------------
+
+    def put_golden(self, name: str, payload: Dict[str, Any]) -> None:
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO goldens VALUES (?, ?, ?)",
+                (name, json.dumps(payload, sort_keys=True), time.time()))
+            self._conn.commit()
+
+    def get_golden(self, name: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT payload FROM goldens WHERE name = ?",
+                (name,)).fetchone()
+        return None if row is None else json.loads(row[0])
+
+    def goldens(self) -> List[str]:
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT name FROM goldens ORDER BY name").fetchall()
+        return [r[0] for r in rows]
+
+    def drop_goldens(self) -> int:
+        with self._lock:
+            cur = self._conn.execute("DELETE FROM goldens")
+            self._conn.commit()
+            return cur.rowcount
+
+    # -- meta / introspection ------------------------------------------------
+
+    def set_meta(self, key: str, value: str) -> None:
+        with self._lock:
+            self._conn.execute("INSERT OR REPLACE INTO meta VALUES (?, ?)",
+                               (key, value))
+            self._conn.commit()
+
+    def get_meta(self, key: str) -> Optional[str]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT value FROM meta WHERE key = ?", (key,)).fetchone()
+        return None if row is None else row[0]
+
+    def summary(self) -> Dict[str, Any]:
+        with self._lock:
+            kinds = dict(self._conn.execute(
+                "SELECT COALESCE(kind, '?'), COUNT(*) FROM calls "
+                "GROUP BY kind ORDER BY kind").fetchall())
+            fps = [r[0] for r in self._conn.execute(
+                "SELECT DISTINCT backend_fp FROM calls "
+                "WHERE backend_fp IS NOT NULL ORDER BY 1").fetchall()]
+            entries = self._conn.execute(
+                "SELECT COUNT(*) FROM calls").fetchone()[0]
+            golds = [r[0] for r in self._conn.execute(
+                "SELECT name FROM goldens ORDER BY name").fetchall()]
+        size = 0
+        for suffix in ("", "-wal", "-shm"):
+            try:
+                size += os.path.getsize(self.path + suffix)
+            except OSError:
+                pass
+        return {"backend": self.backend_name, "path": self.path,
+                "schema_version": SCHEMA_VERSION, "entries": entries,
+                "kinds": kinds, "backend_fingerprints": fps,
+                "goldens": golds, "size_bytes": size}
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+
+class FileStore:
+    """Directory-of-JSON-files call store: the fallback for environments
+    where SQLite is unusable (missing module, filesystems that break
+    its locking). One file per record under ``calls/<key[:2]>/<key>``,
+    written atomically (temp file + ``os.replace``), so concurrent
+    writers of the same deterministic record are idempotent."""
+
+    backend_name = "file"
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._calls = os.path.join(self.path, "calls")
+        self._golds = os.path.join(self.path, "goldens")
+        os.makedirs(self._calls, exist_ok=True)
+        os.makedirs(self._golds, exist_ok=True)
+        self._lock = threading.Lock()
+        meta_path = os.path.join(self.path, "meta.json")
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+            if meta.get("schema_version") != SCHEMA_VERSION:
+                raise StoreError(
+                    f"call store {self.path!r} has schema version "
+                    f"{meta.get('schema_version')}, this build reads "
+                    f"{SCHEMA_VERSION} — prune/rebuild the store")
+            self._meta = meta
+        else:
+            self._meta = {"schema_version": SCHEMA_VERSION}
+            self._write_json(meta_path, self._meta)
+
+    def _write_json(self, path: str, payload: Any) -> None:
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, sort_keys=True)
+        os.replace(tmp, path)
+
+    def _key_path(self, key: str) -> str:
+        # keys are content hashes (hex); shard to keep directories small
+        return os.path.join(self._calls, key[:2], f"{key}.json")
+
+    # -- call records --------------------------------------------------------
+
+    def get(self, key: str) -> Optional[Tuple[str, str]]:
+        try:
+            with open(self._key_path(key)) as f:
+                rec = json.load(f)
+        except (OSError, ValueError):
+            return None
+        return rec["value"], rec["usage"]
+
+    def put(self, key: str, value_blob: str, usage_blob: str, *,
+            kind: Optional[str] = None,
+            backend_fp: Optional[str] = None) -> bool:
+        path = self._key_path(key)
+        with self._lock:
+            if os.path.exists(path):
+                return False
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            self._write_json(path, {
+                "value": value_blob, "usage": usage_blob, "kind": kind,
+                "backend_fp": backend_fp, "created_at": time.time()})
+            return True
+
+    def _record_paths(self) -> List[str]:
+        out = []
+        for shard in sorted(os.listdir(self._calls)):
+            d = os.path.join(self._calls, shard)
+            if os.path.isdir(d):
+                out.extend(os.path.join(d, n) for n in sorted(os.listdir(d))
+                           if n.endswith(".json"))
+        return out
+
+    def __len__(self) -> int:
+        return len(self._record_paths())
+
+    def prune(self, keep: int) -> int:
+        paths = self._record_paths()
+        paths.sort(key=lambda p: (os.path.getmtime(p), p))
+        victims = paths[:max(0, len(paths) - max(0, int(keep)))]
+        for p in victims:
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+        return len(victims)
+
+    def clear(self) -> int:
+        paths = self._record_paths()
+        for p in paths:
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+        return len(paths)
+
+    # -- goldens -------------------------------------------------------------
+
+    def _golden_path(self, name: str) -> str:
+        safe = "".join(c if c.isalnum() or c in "-_." else "_"
+                       for c in name)
+        return os.path.join(self._golds, f"{safe}.json")
+
+    def put_golden(self, name: str, payload: Dict[str, Any]) -> None:
+        with self._lock:
+            self._write_json(self._golden_path(name),
+                             {"name": name, "payload": payload,
+                              "created_at": time.time()})
+
+    def get_golden(self, name: str) -> Optional[Dict[str, Any]]:
+        try:
+            with open(self._golden_path(name)) as f:
+                return json.load(f)["payload"]
+        except (OSError, ValueError, KeyError):
+            return None
+
+    def goldens(self) -> List[str]:
+        out = []
+        for n in sorted(os.listdir(self._golds)):
+            if n.endswith(".json"):
+                try:
+                    with open(os.path.join(self._golds, n)) as f:
+                        out.append(json.load(f)["name"])
+                except (OSError, ValueError, KeyError):
+                    continue
+        return out
+
+    def drop_goldens(self) -> int:
+        n = 0
+        for name in os.listdir(self._golds):
+            if name.endswith(".json"):
+                try:
+                    os.remove(os.path.join(self._golds, name))
+                    n += 1
+                except OSError:
+                    pass
+        return n
+
+    # -- meta / introspection ------------------------------------------------
+
+    def set_meta(self, key: str, value: str) -> None:
+        with self._lock:
+            self._meta[key] = value
+            self._write_json(os.path.join(self.path, "meta.json"),
+                             self._meta)
+
+    def get_meta(self, key: str) -> Optional[str]:
+        return self._meta.get(key)
+
+    def summary(self) -> Dict[str, Any]:
+        kinds: Dict[str, int] = {}
+        fps = set()
+        size = 0
+        paths = self._record_paths()
+        for p in paths:
+            size += os.path.getsize(p)
+            try:
+                with open(p) as f:
+                    rec = json.load(f)
+            except (OSError, ValueError):
+                continue
+            kinds[rec.get("kind") or "?"] = \
+                kinds.get(rec.get("kind") or "?", 0) + 1
+            if rec.get("backend_fp"):
+                fps.add(rec["backend_fp"])
+        return {"backend": self.backend_name, "path": self.path,
+                "schema_version": SCHEMA_VERSION, "entries": len(paths),
+                "kinds": dict(sorted(kinds.items())),
+                "backend_fingerprints": sorted(fps),
+                "goldens": self.goldens(), "size_bytes": size}
+
+    def close(self) -> None:
+        pass
+
+
+def open_store(path: str, *, kind: str = "auto"):
+    """Open (creating if needed) a persistent call store at ``path``.
+
+    ``kind='sqlite'``/``'file'`` force a backend; ``'auto'`` picks
+    SQLite unless ``path`` is an existing directory (or ``sqlite3`` is
+    unavailable), in which case the file-backed fallback is used."""
+    if kind not in ("auto", "sqlite", "file"):
+        raise ValueError(f"unknown store kind {kind!r} "
+                         f"(expected auto|sqlite|file)")
+    if kind == "auto":
+        kind = "file" if (os.path.isdir(path) or sqlite3 is None) \
+            else "sqlite"
+    if kind == "sqlite":
+        return SQLiteStore(path)
+    return FileStore(path)

@@ -1,0 +1,177 @@
+"""Persistent call-cache tier + record/replay modes.
+
+:class:`PersistentCallCache` subclasses the executor's in-memory
+``CallCache`` and plugs a durable store (``repro.cache.store``) under
+it via the base class's three hooks — nothing in the executor's
+dispatch path changes, so `Backend.submit` traffic hits the persistent
+tier transparently and replayed usage records reproduce measured
+cost/latency bit-identically:
+
+- ``_backing_lookup``: a memory miss consults the store; a record found
+  there is promoted into the in-memory tier and counted as a hit;
+- ``_persist``: every stored entry is (mode permitting) written through
+  to the store, first-write-wins;
+- ``_miss``: in ``replay`` mode a miss in *both* tiers raises
+  :class:`CacheMiss` instead of letting the request reach the backend.
+
+Modes (the ``mode=`` constructor argument):
+
+``record``
+    Read-through + write-through, with strict persistence: the entry's
+    JSON round trip is verified and any store-write failure raises (a
+    recording with silent holes would replay incompletely). Whole-corpus
+    request kinds (``resolve``) are cached too — a recording must cover
+    *every* request the session issued, or replay of a pipeline using
+    them would reach the backend.
+``replay``
+    Read-only golden-master mode: nothing is written, every request must
+    be answered by the recording, and a miss raises :class:`CacheMiss`
+    naming the unmatched key — the pipeline, document set, or backend
+    fingerprint diverged from what was recorded. Pair with
+    ``golden.ReplayBackend`` to prove zero backend invocations.
+``readwrite``
+    The serving default: read-through + best-effort write-through
+    (store-write failures are counted in ``store_write_errors`` and
+    swallowed — a full disk must not take down a serving host), and the
+    executor's normal ``UNCACHED_KINDS`` skip list stays in force.
+
+``clear()`` (which ``MOARSearch.optimize``/``BaseOptimizer.optimize``
+call at the start of every search) resets the in-memory tier and the
+session counters but leaves the backing store intact — that is exactly
+what makes the second search a cross-session warm start.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.cache.store import StoreError, decode_entry, encode_entry
+from repro.engine.executor import CallCache
+
+#: record/replay modes, in the order the CLI documents them
+MODES = ("record", "replay", "readwrite")
+
+
+class CacheMiss(RuntimeError):
+    """Replay-mode cache miss: a request was issued that the recording
+    does not contain — the pipeline, document set, backend fingerprint,
+    or operator configuration diverged from the recorded session."""
+
+    def __init__(self, key: Optional[str], detail: str = ""):
+        self.key = key
+        msg = ("replay cache miss" +
+               (f" for call key {key}" if key else "") +
+               ": the recording does not contain this request — the "
+               "pipeline, documents, or backend fingerprint diverged "
+               "from the recorded session")
+        if detail:
+            msg = f"{msg} ({detail})"
+        super().__init__(msg)
+
+
+class PersistentCallCache(CallCache):
+    """In-memory ``CallCache`` backed by a persistent store.
+
+    ``backing`` is any object with the store surface of
+    ``repro.cache.store`` (``SQLiteStore``/``FileStore``; note the
+    attribute is *not* named ``store`` — that is the base class's write
+    method). See the module docstring for mode semantics.
+    """
+
+    #: executors ask for a stable backend fingerprint when they see this
+    persistent = True
+
+    def __init__(self, backing, *, mode: str = "readwrite",
+                 max_entries: Optional[int] = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown cache mode {mode!r} "
+                             f"(expected one of {', '.join(MODES)})")
+        super().__init__(max_entries=max_entries)
+        self.backing = backing
+        self.mode = mode
+        # recordings must cover every request of the session, including
+        # the kinds the in-memory tier normally skips (resolve), or a
+        # replay of a resolve-bearing pipeline would reach the backend
+        self.cache_all_kinds = mode in ("record", "replay")
+        self.store_hits = 0
+        self.store_writes = 0
+        self.store_write_errors = 0
+        self._backend_fp_blob: Optional[str] = None
+
+    # -- CallCache hooks (called under the base class's lock) ----------------
+
+    def _backing_lookup(self, key: str) -> Optional[Tuple[Any, Any]]:
+        rec = self.backing.get(key)
+        if rec is None:
+            return None
+        entry = decode_entry(*rec)
+        self.store_hits += 1
+        return entry
+
+    def _miss(self, key: str) -> None:
+        if self.mode == "replay":
+            raise CacheMiss(key)
+
+    def _persist(self, key: str, entry: Tuple[Any, Any],
+                 kind: Optional[str]) -> None:
+        if self.mode == "replay":
+            return
+        value, usage = entry
+        try:
+            value_blob, usage_blob = encode_entry(
+                value, usage, verify=self.mode == "record")
+            if self.backing.put(key, value_blob, usage_blob, kind=kind,
+                                backend_fp=self._backend_fp_blob):
+                self.store_writes += 1
+        except Exception as e:  # noqa: BLE001 — mode decides fatality
+            if self.mode == "record":
+                # a recording with a hole replays incompletely: fail loud
+                if isinstance(e, StoreError):
+                    raise
+                raise StoreError(f"record-mode store write failed for "
+                                 f"call key {key}: {e}") from e
+            self.store_write_errors += 1
+
+    # -- executor integration ------------------------------------------------
+
+    def bind_backend(self, fp: Tuple[Any, ...]) -> None:
+        """Called by ``Executor.__init__`` with the (stable) backend
+        fingerprint: tagged onto written records and remembered in store
+        meta so ``inspect`` can say who wrote here."""
+        blob = json.dumps(list(fp), sort_keys=True, default=str)
+        self._backend_fp_blob = blob
+        if self.mode != "replay":
+            try:
+                self.backing.set_meta("last_backend_fp", blob)
+            except Exception:  # noqa: BLE001 — bookkeeping only
+                if self.mode == "record":
+                    raise
+
+    # -- accounting ----------------------------------------------------------
+
+    def clear(self) -> None:
+        """Reset the in-memory tier and session counters; the backing
+        store is deliberately untouched (cross-session warm starts)."""
+        super().clear()
+        self.store_hits = 0
+        self.store_writes = 0
+        self.store_write_errors = 0
+
+    def counters(self) -> Dict[str, int]:
+        c = super().counters()
+        c["store_hits"] = self.store_hits
+        c["store_writes"] = self.store_writes
+        c["store_write_errors"] = self.store_write_errors
+        return c
+
+    def persistent_stats(self) -> Dict[str, Any]:
+        """The persistent-tier section ``evaluation_cache_stats`` embeds
+        in every ``SearchResult.cache_stats`` / server report."""
+        return {
+            "mode": self.mode,
+            "store_hits": self.store_hits,
+            "store_writes": self.store_writes,
+            "store_write_errors": self.store_write_errors,
+            "store_entries": len(self.backing),
+        }

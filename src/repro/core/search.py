@@ -159,6 +159,7 @@ class MOARSearch:
         progressive_widening: bool = True,  # ablation: uncapped branching
         lint: bool = True,  # static-analyze candidates before evaluating
         lint_fields: Optional[List[str]] = None,  # known source fields
+        call_cache: Optional[CallCache] = None,  # e.g. a persistent tier
     ):
         self.workload = workload
         self.backend = backend
@@ -178,8 +179,12 @@ class MOARSearch:
         # tier 1 — self.cache, keyed by pipeline hash (identical candidate
         # = free); tier 2 — the executor's content-addressed call cache
         # (candidates sharing a prefix with anything already evaluated
-        # only re-execute the changed suffix)
-        self.call_cache = CallCache()
+        # only re-execute the changed suffix). An injected call_cache —
+        # e.g. repro.cache.PersistentCallCache — adds a third, durable
+        # tier: optimize() clears only the in-memory tiers, so a second
+        # search over the same store warm-starts from the recorded calls
+        self.call_cache = call_cache if call_cache is not None \
+            else CallCache()
         self.executor = Executor(backend, fail_prob=fail_prob, seed=seed,
                                  call_cache=self.call_cache)
         self.policy = AgentPolicy(seed=seed)

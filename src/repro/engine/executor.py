@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import copy
 import threading
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple, Union
@@ -154,12 +155,41 @@ class CallCache:
     so a downstream operator mutating a merged field in place (legal for
     third-party registered ops) cannot poison the cache. Whole-corpus
     payloads (UNCACHED_KINDS) never enter, keeping copies small.
+
+    ``max_entries`` bounds the memo as an LRU (hits refresh recency;
+    evictions are counted) — long serving episodes would otherwise grow
+    it without limit. The default stays unbounded: a budgeted search
+    touches a bounded key set, and eviction would perturb its hit
+    accounting.
+
+    Subclass hooks (``repro.cache.PersistentCallCache`` implements them
+    against a durable store; all three are invoked with ``_lock`` held,
+    so implementations must not re-enter this cache):
+
+    - ``_backing_lookup(key)``: consulted on a memory miss; a returned
+      entry is promoted into memory and counted as a hit;
+    - ``_miss(key)``: called after both tiers missed (replay mode turns
+      this into a hard failure);
+    - ``_persist(key, entry, kind)``: called after every ``store``.
+
+    Class attributes executors consult: ``cache_all_kinds`` overrides
+    the ``UNCACHED_KINDS`` skip list (recordings must cover every
+    request); ``persistent`` makes the executor demand a *stable*
+    backend fingerprint (``backend_fingerprint(require_stable=True)``) —
+    an instance-token key would poison a shared store.
     """
 
-    def __init__(self):
-        self.data: Dict[str, Tuple[Any, Any]] = {}
+    cache_all_kinds = False
+    persistent = False
+
+    def __init__(self, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.data: "OrderedDict[str, Tuple[Any, Any]]" = OrderedDict()
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         # dispatch sessions funnel all cache traffic through the single
         # coordinator thread, but the cache object is also shared across
         # executors (MOAR + baselines) — guard mutation regardless
@@ -173,40 +203,85 @@ class CallCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    # -- subclass hooks (called with ``_lock`` held) -------------------------
+
+    def _backing_lookup(self, key: str) -> Optional[Tuple[Any, Any]]:
+        return None
+
+    def _miss(self, key: str) -> None:
+        pass
+
+    def _persist(self, key: str, entry: Tuple[Any, Any],
+                 kind: Optional[str]) -> None:
+        pass
+
+    # -- core ----------------------------------------------------------------
+
+    def _insert(self, key: str, entry: Tuple[Any, Any]) -> None:
+        self.data[key] = entry
+        self.data.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self.data) > self.max_entries:
+                self.data.popitem(last=False)
+                self.evictions += 1
+
     def lookup(self, key: str) -> Optional[Tuple[Any, Any]]:
         with self._lock:
             entry = self.data.get(key)
-            if entry is None:
-                self.misses += 1
-                return None
-            self.hits += 1
-            return copy.deepcopy(entry)
+            if entry is not None:
+                self.data.move_to_end(key)
+                self.hits += 1
+                return copy.deepcopy(entry)
+            entry = self._backing_lookup(key)
+            if entry is not None:
+                self._insert(key, entry)
+                self.hits += 1
+                return copy.deepcopy(entry)
+            self.misses += 1
+            self._miss(key)
+            return None
 
-    def store(self, key: str, value: Any, usage: Any) -> None:
+    def store(self, key: str, value: Any, usage: Any,
+              kind: Optional[str] = None) -> None:
         entry = copy.deepcopy((value, usage))
         with self._lock:
-            self.data[key] = entry
+            self._insert(key, entry)
+            self._persist(key, entry, kind)
+
+    def counters(self) -> Dict[str, int]:
+        """Snapshot of the integer counters (serving episodes diff two
+        snapshots to report per-episode cache activity)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self.data)}
 
     def clear(self) -> None:
         with self._lock:
             self.data.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
 
 
 def evaluation_cache_stats(pipeline_hits: int, pipeline_entries: int,
                            call_cache: CallCache) -> Dict[str, Any]:
     """The two-tier cache report every optimizer exposes as
     ``SearchResult.cache_stats``: pipeline-hash tier (identical
-    candidates) + content-addressed call tier (shared-prefix reuse)."""
-    return {
+    candidates) + content-addressed call tier (shared-prefix reuse).
+    A persistent call cache contributes a third, durable tier's
+    accounting under ``"persistent"``."""
+    stats = {
         "pipeline_cache_hits": pipeline_hits,
         "pipeline_cache_entries": pipeline_entries,
         "call_cache_hits": call_cache.hits,
         "call_cache_misses": call_cache.misses,
         "call_cache_hit_rate": call_cache.hit_rate,
         "call_cache_entries": len(call_cache),
+        "call_cache_evictions": call_cache.evictions,
     }
+    persistent = getattr(call_cache, "persistent_stats", None)
+    if callable(persistent):
+        stats["persistent"] = persistent()
+    return stats
 
 
 _UNSET = object()
@@ -311,7 +386,20 @@ class Executor:
         self.max_attempts = max(1, max_attempts)
         self.call_cache = call_cache if call_cache is not None else CallCache()
         self._cache_enabled = is_deterministic(self.backend)
-        self._backend_fp = backend_fingerprint(self.backend)
+        # record/replay caches memoize every request kind (a recording
+        # must cover the whole session); a persistent cache additionally
+        # demands a declared-stable backend fingerprint — an instance
+        # token would never hit across sessions and would silently
+        # poison a shared store with unreachable records
+        self._cache_all_kinds = bool(getattr(self.call_cache,
+                                             "cache_all_kinds", False))
+        self._backend_fp = backend_fingerprint(
+            self.backend,
+            require_stable=bool(getattr(self.call_cache, "persistent",
+                                        False)))
+        bind = getattr(self.call_cache, "bind_backend", None)
+        if callable(bind) and self._cache_enabled:
+            bind(self._backend_fp)
         self._run_counter = 0  # transient failures vary across retries
         # per-thread evaluation context: the run number owning the current
         # op loop (failure-injection key) and, inside a dispatch session,
@@ -351,6 +439,13 @@ class Executor:
         return self.fail_prob > 0 and \
             _hash01(self.seed, "apifail", run_no,
                     req.op.get("name"), req.key, attempt) < self.fail_prob
+
+    def _cacheable(self, kind: str) -> bool:
+        """Whether the call cache handles this request kind: the
+        ``UNCACHED_KINDS`` skip list applies unless the cache itself
+        (record/replay modes) claims every kind."""
+        return self._cache_enabled and (
+            self._cache_all_kinds or kind not in UNCACHED_KINDS)
 
     def _cache_key(self, req: OpRequest, op_fps: Dict[int, str]) -> str:
         # the op config is shared by every request of a batch (and can
@@ -405,7 +500,7 @@ class Executor:
         op_fps: Dict[int, str] = {}
         pending: List[int] = []
         for i, req in enumerate(requests):
-            if self._cache_enabled and req.kind not in UNCACHED_KINDS:
+            if self._cacheable(req.kind):
                 keys[i] = self._cache_key(req, op_fps)
                 hit = self.call_cache.lookup(keys[i])
                 if hit is not None:
@@ -462,7 +557,8 @@ class Executor:
                     # backends may omit usage for free operations
                     usage = res.usage if res.usage is not None else Usage()
                     if keys[i] is not None:
-                        self.call_cache.store(keys[i], res.value, usage)
+                        self.call_cache.store(keys[i], res.value, usage,
+                                              kind=requests[i].kind)
                     results[i] = res.value
                     usages[i] = usage
             stats.retries += len(retry)
@@ -713,7 +809,7 @@ class Executor:
             job.stage_keys = [None] * n
             job.stage_error = None
             for li, req in enumerate(requests):
-                if self._cache_enabled and req.kind not in UNCACHED_KINDS:
+                if self._cacheable(req.kind):
                     key = self._cache_key(req, op_fps)
                     job.stage_keys[li] = key
                     hit = self.call_cache.lookup(key)
@@ -833,7 +929,8 @@ class Executor:
                         continue
                     usage = res.usage if res.usage is not None else Usage()
                     if entry.key is not None:
-                        self.call_cache.store(entry.key, res.value, usage)
+                        self.call_cache.store(entry.key, res.value, usage,
+                                              kind=entry.req.kind)
                         followers = groups[entry.key][1:]
                     else:
                         followers = []

@@ -1,0 +1,188 @@
+"""Persistent call-cache and golden-master CLI.
+
+Usage:
+    python -m repro.launch.cache inspect  --store PATH [--json]
+    python -m repro.launch.cache prune    --store PATH (--keep N | --clear)
+    python -m repro.launch.cache record   --store PATH --workload NAME
+                                          [--budget N] [--seed N]
+                                          [--optimizer NAME] [--golden NAME]
+    python -m repro.launch.cache replay   --store PATH --workload NAME
+                                          [--budget N] [--seed N]
+                                          [--optimizer NAME] [--golden NAME]
+    python -m repro.launch.cache verify   --store PATH --workload NAME
+                                          [--budget N] [--seed N]
+                                          [--optimizer NAME]
+
+``record`` runs a budgeted search against the simulated backend with a
+record-mode persistent cache, persisting every call record plus the
+golden summary. ``replay`` re-runs it with the recording as the only
+execution substrate (``ReplayBackend``: a request reaching the backend
+raises) and compares against the stored golden. ``verify`` does both
+back to back — the CI golden-replay gate. Exit status 0 = bit-identical
+replay with zero backend calls; 1 = divergence, miss, or missing golden.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.cache import (CacheMiss, StoreError, golden_diff, open_store,
+                         record_search, replay_search)
+from repro.engine.workloads import WORKLOADS, load
+
+
+def _golden_name(args: argparse.Namespace) -> str:
+    if getattr(args, "golden", None):
+        return args.golden
+    return (f"{args.optimizer}-{args.workload}-"
+            f"b{args.budget}-s{args.seed}")
+
+
+def _cmd_inspect(args: argparse.Namespace) -> int:
+    store = open_store(args.store, kind=args.kind)
+    s = store.summary()
+    if args.json:
+        print(json.dumps(s, indent=2, sort_keys=True))
+        return 0
+    print(f"store      {s['path']} ({s['backend']}, "
+          f"schema v{s['schema_version']})")
+    print(f"entries    {s['entries']}  ({s['size_bytes']} bytes)")
+    for kind, n in s["kinds"].items():
+        print(f"  kind {kind:<12} {n}")
+    for fp in s["backend_fingerprints"]:
+        print(f"  backend {fp}")
+    for name in s["goldens"]:
+        print(f"  golden  {name}")
+    return 0
+
+
+def _cmd_prune(args: argparse.Namespace) -> int:
+    store = open_store(args.store, kind=args.kind)
+    if args.clear:
+        n = store.clear()
+        g = store.drop_goldens()
+        print(f"cleared {n} call record(s), {g} golden(s)")
+        return 0
+    if args.keep is None:
+        print("prune: pass --keep N or --clear", file=sys.stderr)
+        return 2
+    n = store.prune(args.keep)
+    print(f"pruned {n} call record(s); {len(store)} kept")
+    return 0
+
+
+def _cmd_record(args: argparse.Namespace) -> int:
+    store = open_store(args.store, kind=args.kind)
+    w = load(args.workload, seed=args.seed)
+    name = _golden_name(args)
+    res, golden = record_search(store, w, budget=args.budget,
+                                seed=args.seed, optimizer=args.optimizer,
+                                golden_name=name)
+    p = res.cache_stats.get("persistent", {})
+    print(f"recorded golden {name!r}: {len(golden['evaluated'])} "
+          f"evaluation(s), budget {golden['budget_used']}, "
+          f"{p.get('store_writes', 0)} call record(s) written "
+          f"({p.get('store_entries', 0)} in store)")
+    return 0
+
+
+def _cmd_replay(args: argparse.Namespace) -> int:
+    store = open_store(args.store, kind=args.kind)
+    w = load(args.workload, seed=args.seed)
+    name = _golden_name(args)
+    expected = store.get_golden(name)
+    if expected is None:
+        print(f"replay: golden {name!r} not found in {args.store} "
+              f"(known: {store.goldens()})", file=sys.stderr)
+        return 1
+    try:
+        res, actual, submits = replay_search(
+            store, w, budget=args.budget, seed=args.seed,
+            optimizer=args.optimizer)
+    except CacheMiss as e:
+        print(f"replay FAILED: {e}", file=sys.stderr)
+        return 1
+    diffs = golden_diff(expected, actual)
+    if submits:
+        diffs.append(f"submit_calls: {submits} request(s) reached the "
+                     f"backend (expected 0)")
+    if diffs:
+        print(f"replay of golden {name!r} DIVERGED:", file=sys.stderr)
+        for d in diffs:
+            print(f"  {d}", file=sys.stderr)
+        return 1
+    hits = res.cache_stats["call_cache_hits"]
+    print(f"replayed golden {name!r} bit-identically: "
+          f"{len(actual['evaluated'])} evaluation(s), {hits} cache "
+          f"hit(s), 0 backend call(s)")
+    return 0
+
+
+def _cmd_verify(args: argparse.Namespace) -> int:
+    rc = _cmd_record(args)
+    if rc:
+        return rc
+    return _cmd_replay(args)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.cache",
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p, *, workload: bool):
+        p.add_argument("--store", required=True,
+                       help="store path (SQLite file or directory)")
+        p.add_argument("--kind", default="auto",
+                       choices=("auto", "sqlite", "file"))
+        if workload:
+            p.add_argument("--workload", required=True,
+                           choices=sorted(WORKLOADS))
+            p.add_argument("--budget", type=int, default=12)
+            p.add_argument("--seed", type=int, default=0)
+            p.add_argument("--optimizer", default="moar")
+            p.add_argument("--golden", default=None,
+                           help="golden name (default: derived from "
+                                "optimizer/workload/budget/seed)")
+
+    p = sub.add_parser("inspect", help="summarize a store")
+    common(p, workload=False)
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_inspect)
+
+    p = sub.add_parser("prune", help="drop old records (or everything)")
+    common(p, workload=False)
+    p.add_argument("--keep", type=int, default=None,
+                   help="keep the N most recent call records")
+    p.add_argument("--clear", action="store_true",
+                   help="drop all call records and goldens")
+    p.set_defaults(fn=_cmd_prune)
+
+    p = sub.add_parser("record",
+                       help="record a search + golden into the store")
+    common(p, workload=True)
+    p.set_defaults(fn=_cmd_record)
+
+    p = sub.add_parser("replay",
+                       help="replay a recorded search; gate bit-identity")
+    common(p, workload=True)
+    p.set_defaults(fn=_cmd_replay)
+
+    p = sub.add_parser("verify",
+                       help="record then replay (the CI golden gate)")
+    common(p, workload=True)
+    p.set_defaults(fn=_cmd_verify)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except StoreError as e:
+        print(f"store error: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -216,16 +216,78 @@ def batch_hint(backend: Any) -> int:
     return max(1, int(getattr(backend, "preferred_batch_size", 1)))
 
 
-def backend_fingerprint(backend: Any) -> Tuple[Any, ...]:
+#: types a fingerprint component may be built from: values whose JSON
+#: serialization (the cache-key hash input) is a pure function of the
+#: component's *content*
+_FP_LEAF_TYPES = (type(None), bool, int, float, str)
+
+
+def _check_fp_component(value: Any, path: str, owner: str) -> None:
+    """Reject fingerprint components whose hash would not be stable
+    across sessions. The cache key serializes the fingerprint with
+    ``json.dumps(..., default=str)``: an arbitrary object falls back to
+    ``str()``/``repr()``, which typically embeds the instance's memory
+    address — a different key every process, silently poisoning a
+    persistent cache with records no later session can hit."""
+    if isinstance(value, _FP_LEAF_TYPES):
+        if isinstance(value, float) and value != value:
+            raise TypeError(
+                f"{owner}.fingerprint() component {path} is NaN, which "
+                f"never compares equal — the cache key would be "
+                f"unstable")
+        return
+    if isinstance(value, (tuple, list)):
+        for i, v in enumerate(value):
+            _check_fp_component(v, f"{path}[{i}]", owner)
+        return
+    if isinstance(value, dict):
+        for k, v in value.items():
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"{owner}.fingerprint() component {path} has "
+                    f"non-string dict key {k!r}; the cache-key "
+                    f"serialization stringifies it unstably")
+            _check_fp_component(v, f"{path}[{k!r}]", owner)
+        return
+    raise TypeError(
+        f"{owner}.fingerprint() component {path} is a "
+        f"{type(value).__name__}; fingerprints must be built from "
+        f"None/bool/int/float/str (nested in tuples/lists/str-keyed "
+        f"dicts) — an arbitrary object serializes by repr(), embedding "
+        f"a per-process memory address that makes the cache key "
+        f"unstable and poisons a persistent cache")
+
+
+def backend_fingerprint(backend: Any, *,
+                        require_stable: bool = False) -> Tuple[Any, ...]:
     """Stable identity of the backend's behaviour, keying the executor's
-    call cache. Backends declare it via ``fingerprint()``; the fallback
-    tags the instance with a one-time token, confining cache sharing to
-    that instance — a token (unlike ``id()``) is never reused after
-    garbage collection, so a long-lived shared cache cannot alias two
-    backends that happened to occupy the same address."""
+    call cache. Backends declare it via ``fingerprint()``; declared
+    components are validated (plain hashable scalars/containers only —
+    anything else would key the cache on a ``repr()`` with a memory
+    address in it, a different key every session). The fallback for
+    backends without the declaration tags the instance with a one-time
+    token, confining cache sharing to that instance — a token (unlike
+    ``id()``) is never reused after garbage collection, so a long-lived
+    shared cache cannot alias two backends that happened to occupy the
+    same address. With ``require_stable`` (set by executors wired to a
+    *persistent* cache) the fallback is an error instead: an
+    instance-token key can never hit across sessions, so writing under
+    it would silently fill the shared store with unreachable records.
+    """
+    owner = type(backend).__qualname__
     fp = getattr(backend, "fingerprint", None)
     if callable(fp):
-        return tuple(fp())
+        out = tuple(fp())
+        _check_fp_component(out, "fingerprint", owner)
+        return out
+    if require_stable:
+        raise TypeError(
+            f"{owner} does not declare fingerprint(), so its call-cache "
+            f"key falls back to a per-instance token — useless and "
+            f"poisonous for a persistent cache. Declare "
+            f"fingerprint() returning the backend's stable behavioural "
+            f"identity (e.g. ('sim', seed, domain)) to enable the "
+            f"persistent tier.")
     token = getattr(backend, "_repro_fp_token", None)
     if token is None:
         token = uuid.uuid4().hex
@@ -233,8 +295,7 @@ def backend_fingerprint(backend: Any) -> Tuple[Any, ...]:
             backend._repro_fp_token = token
         except AttributeError:  # __slots__ etc.: last-resort instance id
             token = f"id:{id(backend)}"
-    return (type(backend).__qualname__, getattr(backend, "seed", None),
-            token)
+    return (owner, getattr(backend, "seed", None), token)
 
 
 def is_deterministic(backend: Any) -> bool:

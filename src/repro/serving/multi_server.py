@@ -93,6 +93,7 @@ class MultiPipelineServer(PipelineServer):
                  slo_s: Optional[float] = None, clock: Any = None,
                  executor: Optional[Executor] = None,
                  call_cache: Optional[CallCache] = None,
+                 cache_entries: int = 65536,
                  stats_mode: str = "auto", stats_window: int = 512):
         specs = _normalize_tenants(tenants)
         self._tenants: Dict[str, TenantSpec] = {}
@@ -130,8 +131,8 @@ class MultiPipelineServer(PipelineServer):
                          batch_window_s=batch_window_s, workers=workers,
                          seed=seed, fail_prob=fail_prob, slo_s=slo_s,
                          clock=clock, executor=executor,
-                         call_cache=call_cache, stats_mode=stats_mode,
-                         stats_window=stats_window)
+                         call_cache=call_cache, cache_entries=cache_entries,
+                         stats_mode=stats_mode, stats_window=stats_window)
 
     # -- tenant plumbing ------------------------------------------------------
 

@@ -590,6 +590,7 @@ class PipelineServer:
                  slo_s: Optional[float] = None, clock: Any = None,
                  executor: Optional[Executor] = None,
                  call_cache: Optional[CallCache] = None,
+                 cache_entries: int = 65536,
                  stats_mode: str = "auto", stats_window: int = 512):
         self._config = as_config(pipeline)
         validate_pipeline(self._config)
@@ -603,6 +604,14 @@ class PipelineServer:
         if stats_mode not in ("auto", "exact", "sketch"):
             raise ValueError(f"unknown stats_mode {stats_mode!r}")
         self.clock = clock if clock is not None else MonotonicClock()
+        # serving episodes are long-lived and see unbounded distinct
+        # documents: the default call cache is LRU-bounded so duplicate
+        # traffic still hits (the exact-hit tier in front of dispatch)
+        # while memory stays capped. Callers inject their own cache —
+        # e.g. a repro.cache.PersistentCallCache shared across hosts —
+        # via call_cache=, or a whole executor via executor=.
+        if executor is None and call_cache is None:
+            call_cache = CallCache(max_entries=max(1, cache_entries))
         self.executor = executor if executor is not None else Executor(
             backend, seed=seed, fail_prob=fail_prob, call_cache=call_cache)
         self.max_inflight = max(1, max_inflight)
@@ -647,6 +656,7 @@ class PipelineServer:
         self.stats = self._new_stats(self.clock.now(), trace=trace)
         self._rid = 0
         self._dispatch_base = dict(self.executor.dispatch_stats)
+        self._cache_base = self.executor.call_cache.counters()
 
     # -- queue discipline (overridden by multi-tenant hosts) ------------------
 
@@ -1046,6 +1056,16 @@ class PipelineServer:
         a reused executor."""
         dispatch = {k: v - self._dispatch_base.get(k, 0)
                     for k, v in self.executor.dispatch_stats.items()}
+        # cache counters are episode deltas like the dispatch counters;
+        # entry counts are absolute (the cache outlives episodes)
+        cc = self.executor.call_cache
+        cache = {k: v - self._cache_base.get(k, 0)
+                 for k, v in cc.counters().items() if k != "entries"}
+        cache["entries"] = len(cc)
+        persistent = getattr(cc, "persistent_stats", None)
+        if callable(persistent):
+            cache["store_entries"] = persistent()["store_entries"]
+            cache["mode"] = cc.mode
         return self.stats.report(
             elapsed_s=elapsed_s, slo_s=self.slo_s,
-            extra={"dispatch": dispatch})
+            extra={"dispatch": dispatch, "call_cache": cache})

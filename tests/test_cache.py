@@ -1,0 +1,496 @@
+"""Persistent call cache + golden-master record/replay (repro.cache).
+
+What must hold:
+
+- **Store semantics.** Call records round-trip exactly through both
+  store backends (SQLite, file), duplicate writes are idempotent
+  first-write-wins, goldens round-trip, and a schema-version mismatch
+  refuses to open instead of misreading records.
+- **Warm starts are bit-identical.** A second executor/search over the
+  same store answers recorded calls from disk — identical documents and
+  stats, fewer backend invocations — and ``optimize()``'s cache clear
+  keeps the durable tier.
+- **Replay is a closed world.** With the recording as the only
+  substrate, a recorded session reproduces bit-identically with zero
+  backend calls; any divergence (mutated pipeline) raises ``CacheMiss``.
+- **Concurrent access is safe.** Executors in racing threads sharing
+  one store produce sequential-identical results with no duplicate
+  store writes and no torn reads.
+- **Satellites.** The in-memory ``CallCache`` is LRU-boundable with
+  eviction counters; declared backend fingerprints are validated and
+  the instance-token fallback is rejected for persistent caches;
+  serving reports carry a per-episode ``call_cache`` section.
+"""
+
+from __future__ import annotations
+
+import copy
+import threading
+
+import pytest
+
+from repro.cache import (CacheMiss, FileStore, PersistentCallCache,
+                         ReplayBackend, SQLiteStore, StoreError,
+                         golden_diff, open_store, record_search,
+                         replay_search)
+from repro.cache.store import decode_entry, encode_entry
+from repro.core.search import MOARSearch
+from repro.engine.backend import SimBackend, Usage
+from repro.engine.executor import CallCache, Executor
+from repro.engine.workloads import WORKLOADS
+from repro.serving.multi_server import MultiPipelineServer
+from repro.serving.pipeline_server import PipelineServer, VirtualClock
+
+CUAD = WORKLOADS["cuad"]()
+MEDEC = WORKLOADS["medec"]()
+
+
+class CountingSimBackend(SimBackend):
+    """SimBackend that counts the requests actually reaching submit."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.submitted = 0
+
+    def submit(self, requests):
+        self.submitted += len(requests)
+        return super().submit(requests)
+
+
+def _stats_fp(stats):
+    return (stats.cost, stats.llm_calls, stats.in_tokens,
+            stats.out_tokens, stats.latency_s)
+
+
+# -- store semantics -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["sqlite", "file"])
+def test_store_roundtrip_and_first_write_wins(tmp_path, kind):
+    store = open_store(str(tmp_path / "store"), kind=kind)
+    vb, ub = encode_entry({"a": [1, 2.5, None, "x"]},
+                          Usage(in_tokens=3, out_tokens=7, calls=1))
+    assert store.get("k1") is None
+    assert store.put("k1", vb, ub, kind="map", backend_fp="fp") is True
+    # duplicate write: idempotent, reports not-written
+    assert store.put("k1", "OTHER", ub) is False
+    value, usage = decode_entry(*store.get("k1"))
+    assert value == {"a": [1, 2.5, None, "x"]}
+    assert usage == Usage(in_tokens=3, out_tokens=7, calls=1)
+    assert len(store) == 1
+    s = store.summary()
+    assert s["entries"] == 1 and s["kinds"] == {"map": 1}
+
+    store.put_golden("g", {"frontier": [[1.0, 2.0]]})
+    assert store.get_golden("g") == {"frontier": [[1.0, 2.0]]}
+    assert store.goldens() == ["g"]
+    assert store.get_golden("missing") is None
+
+
+@pytest.mark.parametrize("kind", ["sqlite", "file"])
+def test_store_prune_and_clear(tmp_path, kind):
+    store = open_store(str(tmp_path / "store"), kind=kind)
+    for i in range(5):
+        vb, ub = encode_entry(i, Usage())
+        store.put(f"k{i}", vb, ub)
+    assert store.prune(keep=2) == 3
+    assert len(store) == 2
+    assert store.clear() == 2
+    assert len(store) == 0
+
+
+def test_schema_version_mismatch_refuses_to_open(tmp_path):
+    path = str(tmp_path / "store.sqlite")
+    store = SQLiteStore(path)
+    store.set_meta("schema_version", "999")
+    store.close()
+    with pytest.raises(StoreError, match="schema version"):
+        SQLiteStore(path)
+    # file backend: same contract
+    fdir = str(tmp_path / "fdir")
+    fs = FileStore(fdir)
+    fs.set_meta("schema_version", 999)
+    with pytest.raises(StoreError, match="schema version"):
+        FileStore(fdir)
+
+
+def test_encode_entry_verify_rejects_lossy_values():
+    # tuples come back as lists; int keys come back as strings — a
+    # recording of either would replay a different value
+    with pytest.raises(StoreError, match="round trip"):
+        encode_entry((1, 2), Usage(), verify=True)
+    with pytest.raises(StoreError, match="round trip"):
+        encode_entry({1: "x"}, Usage(), verify=True)
+    # JSON-stable values pass verification unchanged
+    vb, ub = encode_entry({"k": [1, "x"]}, Usage(), verify=True)
+    assert decode_entry(vb, ub)[0] == {"k": [1, "x"]}
+
+
+def test_open_store_auto_detection(tmp_path):
+    assert open_store(str(tmp_path / "x.db")).backend_name == "sqlite"
+    d = tmp_path / "adir"
+    d.mkdir()
+    assert open_store(str(d)).backend_name == "file"
+    with pytest.raises(ValueError, match="store kind"):
+        open_store(str(tmp_path / "y"), kind="bogus")
+
+
+# -- satellite: LRU bound on the in-memory CallCache ---------------------------
+
+
+def test_call_cache_lru_bound_and_eviction_counter():
+    cc = CallCache(max_entries=2)
+    cc.store("a", 1, Usage())
+    cc.store("b", 2, Usage())
+    assert cc.lookup("a") is not None  # refreshes a's recency
+    cc.store("c", 3, Usage())          # evicts b (least recent)
+    assert cc.evictions == 1
+    assert cc.lookup("b") is None
+    assert cc.lookup("a") is not None and cc.lookup("c") is not None
+    assert cc.counters() == {"hits": 3, "misses": 1, "evictions": 1,
+                             "entries": 2}
+    cc.clear()
+    assert cc.counters() == {"hits": 0, "misses": 0, "evictions": 0,
+                             "entries": 0}
+    with pytest.raises(ValueError, match="max_entries"):
+        CallCache(max_entries=0)
+
+
+def test_call_cache_default_stays_unbounded():
+    cc = CallCache()
+    for i in range(10_000):
+        cc.store(f"k{i}", i, Usage())
+    assert len(cc) == 10_000 and cc.evictions == 0
+
+
+def test_eviction_surfaces_in_cache_stats():
+    w = CUAD
+    search = MOARSearch(w, SimBackend(seed=0, domain=w.domain), budget=4,
+                        seed=0, call_cache=CallCache(max_entries=8))
+    search.run()
+    stats = search.cache_stats()
+    assert stats["call_cache_entries"] <= 8
+    assert stats["call_cache_evictions"] > 0
+
+
+# -- satellite: fingerprint stability contract ---------------------------------
+
+
+def test_declared_fingerprint_components_validated():
+    from repro.pipeline.protocols import backend_fingerprint
+
+    class BadFp:
+        def fingerprint(self):
+            return ("sim", object())  # repr embeds a memory address
+
+    with pytest.raises(TypeError, match="repr"):
+        backend_fingerprint(BadFp())
+
+    class NestedBad:
+        def fingerprint(self):
+            return ("x", {"k": [1, {2: "v"}]})  # non-string dict key
+
+    with pytest.raises(TypeError, match="dict key"):
+        backend_fingerprint(NestedBad())
+
+    class Good:
+        def fingerprint(self):
+            return ("sim", 0, None, 1.5, {"domain": ["a", "b"]})
+
+    assert backend_fingerprint(Good()) == \
+        ("sim", 0, None, 1.5, {"domain": ["a", "b"]})
+
+
+def test_persistent_cache_rejects_fallback_fingerprint(tmp_path):
+    class NoFp:  # deterministic but anonymous: token-fallback key
+        deterministic = True
+
+        def usage_cost(self, model, usage):
+            return 0.0
+
+        def submit(self, requests):
+            return []
+
+    store = open_store(str(tmp_path / "s.sqlite"))
+    with pytest.raises(TypeError, match="fingerprint"):
+        Executor(NoFp(), call_cache=PersistentCallCache(store))
+    # the in-memory cache keeps accepting the token fallback
+    Executor(NoFp(), call_cache=CallCache())
+
+
+# -- warm starts ---------------------------------------------------------------
+
+
+def test_cross_session_warm_start_bit_identical(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    docs = CUAD.sample[:6]
+
+    cold_be = CountingSimBackend(seed=0, domain=CUAD.domain)
+    cold_ex = Executor(cold_be, seed=0,
+                       call_cache=PersistentCallCache(store))
+    cold_out, cold_stats = cold_ex.run(CUAD.initial_pipeline, docs)
+    assert cold_be.submitted > 0
+
+    # fresh process simulation: new backend, new cache, same store
+    warm_be = CountingSimBackend(seed=0, domain=CUAD.domain)
+    warm_cache = PersistentCallCache(store)
+    warm_ex = Executor(warm_be, seed=0, call_cache=warm_cache)
+    warm_out, warm_stats = warm_ex.run(CUAD.initial_pipeline, docs)
+
+    assert warm_be.submitted == 0  # every call replayed from disk
+    assert warm_cache.store_hits > 0
+    assert warm_out == cold_out
+    assert _stats_fp(warm_stats) == _stats_fp(cold_stats)
+
+
+def test_moar_warm_start_across_searches(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    w = MEDEC
+    be1 = CountingSimBackend(seed=0, domain=w.domain)
+    r1 = MOARSearch(w, be1, budget=6, seed=0,
+                    call_cache=PersistentCallCache(store)).optimize()
+    be2 = CountingSimBackend(seed=0, domain=w.domain)
+    r2 = MOARSearch(w, be2, budget=6, seed=0,
+                    call_cache=PersistentCallCache(store)).optimize()
+
+    # identical search, every measurement replayed from the store
+    assert be2.submitted < be1.submitted
+    assert [(p.acc, p.cost) for p in r2.frontier] == \
+        [(p.acc, p.cost) for p in r1.frontier]
+    assert r2.budget_used == r1.budget_used
+    p2 = r2.cache_stats["persistent"]
+    assert p2["store_hits"] > 0 and p2["mode"] == "readwrite"
+    # optimize() clears only the in-memory tiers: the store survives
+    assert p2["store_entries"] >= r1.cache_stats["persistent"][
+        "store_writes"]
+
+
+def test_optimize_clear_preserves_store(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    w = MEDEC
+    search = MOARSearch(w, SimBackend(seed=0, domain=w.domain), budget=4,
+                        seed=0, call_cache=PersistentCallCache(store))
+    search.optimize()
+    n = len(store)
+    assert n > 0
+    search.call_cache.clear()
+    assert len(search.call_cache) == 0 and len(store) == n
+
+
+# -- record / replay -----------------------------------------------------------
+
+
+def test_record_then_replay_bit_identical_zero_calls(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    res, golden = record_search(store, CUAD, budget=6, seed=0,
+                                golden_name="g")
+    assert store.get_golden("g") == golden
+    res2, golden2, submits = replay_search(store, CUAD, budget=6, seed=0)
+    assert submits == 0
+    assert golden_diff(golden, golden2) == []
+    assert [(p.acc, p.cost) for p in res2.frontier] == \
+        [(p.acc, p.cost) for p in res.frontier]
+    assert res2.cache_stats["persistent"]["mode"] == "replay"
+    # replay writes nothing
+    assert res2.cache_stats["persistent"]["store_writes"] == 0
+
+
+def test_record_mode_covers_all_request_kinds(tmp_path):
+    # resolve requests are normally UNCACHED; a recording must include
+    # them or replay of a resolve-bearing pipeline reaches the backend
+    store = open_store(str(tmp_path / "s.sqlite"))
+    pipeline = {"name": "with_resolve", "operators": [
+        dict(CUAD.initial_pipeline["operators"][0]),
+        {"name": "dedupe", "type": "resolve", "model": "llama3.2-1b",
+         "prompt": "canonicalize equivalent entries",
+         "resolve_field": "id"},
+    ]}
+    docs = CUAD.sample[:4]
+    rec = Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0,
+                   call_cache=PersistentCallCache(store, mode="record"))
+    out, stats = rec.run(pipeline, docs)
+    assert "resolve" in store.summary()["kinds"]
+
+    rb = ReplayBackend(SimBackend(seed=0, domain=CUAD.domain))
+    rep = Executor(rb, seed=0,
+                   call_cache=PersistentCallCache(store, mode="replay"))
+    out2, stats2 = rep.run(pipeline, docs)
+    assert rb.submit_calls == 0
+    assert out2 == out and _stats_fp(stats2) == _stats_fp(stats)
+
+
+def test_replay_cache_miss_on_mutated_pipeline(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    docs = CUAD.sample[:4]
+    rec = Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0,
+                   call_cache=PersistentCallCache(store, mode="record"))
+    rec.run(CUAD.initial_pipeline, docs)
+
+    mutated = copy.deepcopy(CUAD.initial_pipeline)
+    mutated["operators"][0]["prompt"] += " Respond in French."
+    rep = Executor(ReplayBackend(SimBackend(seed=0, domain=CUAD.domain)),
+                   seed=0,
+                   call_cache=PersistentCallCache(store, mode="replay"))
+    with pytest.raises(CacheMiss, match="diverged"):
+        rep.run(mutated, docs)
+    # the recorded pipeline still replays fine afterwards
+    rep.run(CUAD.initial_pipeline, docs)
+
+
+def test_replay_mode_persists_nothing(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    cache = PersistentCallCache(store, mode="replay")
+    cache.store("k", {"v": 1}, Usage())  # memory-tier only
+    assert len(store) == 0 and len(cache) == 1
+    with pytest.raises(ValueError, match="mode"):
+        PersistentCallCache(store, mode="bogus")
+
+
+def test_record_mode_write_failure_is_fatal(tmp_path):
+    class BrokenStore(FileStore):
+        def put(self, *a, **k):
+            raise OSError("disk full")
+
+    store = BrokenStore(str(tmp_path / "s"))
+    rec_cache = PersistentCallCache(store, mode="record")
+    with pytest.raises(StoreError, match="record-mode"):
+        rec_cache.store("k", {"v": 1}, Usage())
+    # readwrite swallows the failure and counts it: serving must not die
+    rw_cache = PersistentCallCache(store, mode="readwrite")
+    rw_cache.store("k", {"v": 1}, Usage())
+    assert rw_cache.store_write_errors == 1
+    assert rw_cache.lookup("k") is not None  # memory tier still serves
+
+
+# -- concurrency ---------------------------------------------------------------
+
+
+def test_concurrent_sessions_share_store_without_duplicates(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    docs = CUAD.sample[:8]
+    jobs = [(CUAD.initial_pipeline, docs[i:i + 4]) for i in (0, 4)]
+
+    # sequential reference
+    ref_ex = Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0)
+    ref = [ref_ex.run(p, d) for p, d in jobs]
+
+    caches = [PersistentCallCache(store) for _ in jobs]
+    execs = [Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0,
+                      call_cache=c) for c in caches]
+    results = [None, None]
+    errors = []
+
+    def run(i):
+        try:
+            results[i] = execs[i].run_session([jobs[i]], workers=2)[0]
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(len(jobs))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+
+    for (ref_out, ref_stats), res in zip(ref, results):
+        assert res.error is None
+        assert res.docs == ref_out  # no torn reads
+        assert _stats_fp(res.stats) == _stats_fp(ref_stats)
+    # no duplicate writes: every successful put is a distinct record
+    assert sum(c.store_writes for c in caches) == len(store)
+    assert len(store) == store.summary()["entries"]
+
+
+def test_shared_cache_instance_across_threads(tmp_path):
+    # one PersistentCallCache shared by racing executors (the serving
+    # host shape): same identical-results + no-duplicate-writes contract
+    store = open_store(str(tmp_path / "s.sqlite"))
+    cache = PersistentCallCache(store)
+    docs = MEDEC.sample[:6]
+    ref_out, ref_stats = Executor(
+        SimBackend(seed=0, domain=MEDEC.domain),
+        seed=0).run(MEDEC.initial_pipeline, docs)
+
+    outs = [None] * 4
+    errors = []
+
+    def run(i):
+        try:
+            ex = Executor(SimBackend(seed=0, domain=MEDEC.domain), seed=0,
+                          call_cache=cache)
+            outs[i] = ex.run(MEDEC.initial_pipeline, docs)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for out, stats in outs:
+        assert out == ref_out
+        assert _stats_fp(stats) == _stats_fp(ref_stats)
+    assert cache.store_writes == len(store)
+
+
+# -- serving integration -------------------------------------------------------
+
+
+def test_server_report_call_cache_section():
+    docs = [dict(MEDEC.sample[0], id=f"r{i}") for i in range(4)]
+    srv = PipelineServer(MEDEC.initial_pipeline,
+                         SimBackend(seed=0, domain=MEDEC.domain),
+                         max_batch=4, batch_window_s=0.0,
+                         clock=VirtualClock())
+    # duplicate documents: the exact-hit tier answers the repeats
+    srv.run_trace([(0.01 * i, docs[0]) for i in range(3)] +
+                  [(0.03, docs[1])])
+    rep = srv.report()
+    cc = rep["call_cache"]
+    assert cc["hits"] > 0 and cc["misses"] > 0
+    assert cc["entries"] == len(srv.executor.call_cache)
+    assert srv.executor.call_cache.max_entries == 65536
+    # a fresh episode reports fresh deltas
+    srv.run_trace([(0.0, docs[2])])
+    assert srv.report()["call_cache"]["hits"] == 0
+
+
+def test_server_with_persistent_cache_and_bound(tmp_path):
+    store = open_store(str(tmp_path / "s.sqlite"))
+    cache = PersistentCallCache(store, max_entries=16)
+    docs = [dict(MEDEC.sample[i % 4], id=f"r{i}") for i in range(6)]
+    srv = PipelineServer(MEDEC.initial_pipeline,
+                         SimBackend(seed=0, domain=MEDEC.domain),
+                         call_cache=cache, max_batch=4,
+                         batch_window_s=0.0, clock=VirtualClock())
+    srv.run_trace([(0.01 * i, d) for i, d in enumerate(docs)])
+    rep = srv.report()["call_cache"]
+    assert rep["mode"] == "readwrite"
+    assert rep["store_entries"] == len(store) > 0
+    assert rep["store_writes"] == len(store)
+
+    # a second host over the same store answers from disk
+    srv2 = PipelineServer(MEDEC.initial_pipeline,
+                          SimBackend(seed=0, domain=MEDEC.domain),
+                          call_cache=PersistentCallCache(store),
+                          max_batch=4, batch_window_s=0.0,
+                          clock=VirtualClock())
+    srv2.run_trace([(0.01 * i, d) for i, d in enumerate(docs)])
+    rep2 = srv2.report()["call_cache"]
+    assert rep2["store_hits"] > 0 and rep2["store_writes"] == 0
+
+
+def test_multi_tenant_report_inherits_call_cache_section():
+    tenants = {"a": MEDEC.initial_pipeline, "b": MEDEC.initial_pipeline}
+    srv = MultiPipelineServer(tenants,
+                              SimBackend(seed=0, domain=MEDEC.domain),
+                              max_batch=4, batch_window_s=0.0,
+                              clock=VirtualClock())
+    doc = dict(MEDEC.sample[0], id="r0")
+    srv.run_trace([(0.0, "a", doc), (0.01, "b", doc)])
+    rep = srv.report()
+    # tenant b's identical doc hits tenant a's cached calls
+    assert rep["call_cache"]["hits"] > 0

@@ -204,6 +204,13 @@ def test_run_trace_twice_reports_fresh_stats():
     # the shifted time origin costs one float rounding)
     assert rep.keys() == want.keys()
     for key, want_val in want.items():
+        if key == "call_cache":
+            # cache counters are per-episode deltas and match a fresh
+            # server; the entry count is absolute by design — the shared
+            # cache deliberately carries entries across episodes
+            assert {k: v for k, v in rep[key].items() if k != "entries"} \
+                == {k: v for k, v in want_val.items() if k != "entries"}
+            continue
         assert rep[key] == pytest.approx(want_val), key
 
 
