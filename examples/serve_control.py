@@ -1,0 +1,139 @@
+"""The serving control plane: adaptive shedding + drain-free hot swap.
+
+Two demos on deterministic virtual-time traces:
+
+1. **Static vs adaptive under a bursty flood.** Two tenants share one
+   host: a steady priority-1 stream and a tenant that floods priority-0
+   bursts. ``StaticPolicy`` (the default — exactly the pre-control-plane
+   server) serves everything and lets the backlog blow the SLO;
+   ``AdaptivePolicy`` senses recent SLO attainment, sheds the flood's
+   overflow per tenant (never a priority-1 request), and keeps the
+   served traffic inside its SLO.
+2. **Hot plan swap, DocWrangler-style.** An optimizer hands back a
+   ``SearchResult``; ``swap_plan`` promotes its best plan mid-traffic
+   with no drain — in-flight tickets finish on the old plan, later
+   admissions ride the new one — and the report records the swap with
+   both plan hashes and the before/after ``recent`` sensor readings, so
+   a human reviews the measured delta instead of trusting an
+   auto-promotion.
+
+  PYTHONPATH=src python examples/serve_control.py
+"""
+
+import random
+
+from repro.engine.backend import SimBackend
+from repro.engine.operators import clone_pipeline, pipeline_hash
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline import get_optimizer
+from repro.serving.control import AdaptivePolicy
+from repro.serving.multi_server import MultiPipelineServer, TenantSpec
+from repro.serving.pipeline_server import (PipelineServer, VirtualClock,
+                                           VirtualLatencyBackend)
+
+SLO_S = 0.4
+
+
+def _backend(workload, clock):
+    return VirtualLatencyBackend(
+        SimBackend(seed=0, domain=workload.domain), clock, base_s=0.05,
+        per_request_s=0.002, preferred_batch_size=64)
+
+
+def bursty_arrivals(workload, seed=0):
+    """A steady priority-1 Poisson stream + priority-0 floods."""
+    sample = workload.sample
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for i in range(32):
+        t += rng.expovariate(20.0)
+        out.append((t, "steady", dict(sample[i % len(sample)],
+                                      id=f"s{i}"), 1))
+    for b in range(3):
+        for i in range(24):
+            out.append((0.5 * (b + 1), "bursty",
+                        dict(sample[i % len(sample)],
+                             id=f"b{b}-{i}"), 0))
+    out.sort(key=lambda a: (a[0], a[1]))
+    return out
+
+
+def demo_shedding():
+    print("== 1. static vs adaptive under a bursty flood ==")
+    w = WORKLOADS["cuad"]()
+    arrivals = bursty_arrivals(w)
+    for label, policy in (
+            ("static", None),
+            ("adaptive", AdaptivePolicy(max_queue={"bursty": 4},
+                                        default_queue=512,
+                                        min_queue=1))):
+        clock = VirtualClock()
+        server = MultiPipelineServer(
+            [TenantSpec("steady", w.initial_pipeline, slo_s=SLO_S),
+             TenantSpec("bursty", w.initial_pipeline, slo_s=SLO_S)],
+            _backend(w, clock), max_inflight=512, max_batch=4,
+            batch_window_s=0.02, workers=2, clock=clock, slo_s=SLO_S,
+            policy=policy)
+        tickets = server.run_trace(arrivals)
+        rep = server.report()
+        shed = [tk for tk in tickets if tk.error is not None]
+        print(f"  {label:8s}: SLO attainment "
+              f"{100 * rep['slo']['attainment']:5.1f}%  "
+              f"served {rep['completed']:3d}  shed {len(shed):2d} "
+              f"{dict(rep['rejected_reasons'])}  "
+              f"hi-pri shed {sum(1 for t in shed if t.priority > 0)}")
+    print("  -> shedding the flood's overflow keeps served traffic "
+          "inside its SLO;\n     the steady tenant never loses a "
+          "request\n")
+
+
+def demo_hot_swap():
+    print("== 2. optimize, then hot-swap the winner mid-traffic ==")
+    w = WORKLOADS["cuad"]()
+    incumbent = clone_pipeline(w.initial_pipeline)
+    from dataclasses import replace
+    trimmed = replace(w, docs=w.docs[:24])  # keep the search snappy
+    search = get_optimizer("moar")(trimmed,
+                                   SimBackend(seed=0, domain=w.domain),
+                                   budget=8, seed=0, workers=4)
+    result = search.optimize()
+    print(f"  MOAR evaluated {result.budget_used} plans; best acc "
+          f"{result.best().acc:.3f}")
+
+    clock = VirtualClock()
+    server = PipelineServer(incumbent, _backend(w, clock),
+                            max_inflight=64, max_batch=4,
+                            batch_window_s=0.02, workers=2, clock=clock,
+                            slo_s=SLO_S)
+    sample = w.sample
+    arrivals = [(0.05 * i, dict(sample[i % len(sample)], id=f"r{i}"))
+                for i in range(24)]
+    # the swap fires mid-trace: swap_plan accepts the SearchResult
+    # directly, validates the plan through the static analyzer, and
+    # routes new admissions only — nothing drains
+    tickets = server.run_trace(
+        arrivals, events=[(0.6, lambda s: s.swap_plan(result))])
+    rep = server.report()
+    swap = rep["swaps"][0]
+    old = [t for t in tickets
+           if pipeline_hash(t.plan) == swap["old_hash"]]
+    new = [t for t in tickets
+           if pipeline_hash(t.plan) == swap["new_hash"]]
+    print(f"  swap at t={swap['at']:.2f}s: {swap['old_plan']} "
+          f"({swap['old_hash'][:8]}) -> {swap['new_plan']} "
+          f"({swap['new_hash'][:8]})")
+    print(f"  {len(old)} tickets finished on the old plan, "
+          f"{len(new)} admitted to the new one — zero failures: "
+          f"{all(t.error is None for t in tickets)}")
+    print(f"  sensor delta: before p95 "
+          f"{swap['before']['p95_latency_s']:.3f}s (n={swap['before']['n']}) "
+          f"-> after p95 {swap['after']['p95_latency_s']:.3f}s "
+          f"(n={swap['after']['n']})")
+    print("  -> the report carries the measured before/after window: "
+          "surface the delta,\n     let a human promote — don't "
+          "auto-trust the optimizer")
+
+
+if __name__ == "__main__":
+    demo_shedding()
+    demo_hot_swap()

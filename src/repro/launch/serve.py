@@ -19,11 +19,18 @@ over one shared ``JaxBackend`` — different tenants' requests coalesce
 into the same submit chunks and decode slots, admission is
 weighted-fair across the roster.
 
+``--policy adaptive --slo-ms N`` swaps in the control plane's feedback
+policy (SLO-sensing micro-batch window + per-tenant shedding);
+``--swap-after N`` demonstrates the drain-free hot plan swap under live
+traffic and prints the swap record.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --requests 8 --slots 4 --rps 0
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --tenants legal=cuad:2,medical=medec --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+      --policy adaptive --slo-ms 2000 --swap-after 4 --requests 8
 """
 
 from __future__ import annotations
@@ -35,6 +42,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.engine.workloads import WORKLOADS
 from repro.pipeline.model import as_config
+from repro.serving.control import AdaptivePolicy, ControlPolicy
 from repro.serving.multi_server import MultiPipelineServer, TenantSpec
 from repro.serving.pipeline_server import (MonotonicClock, PipelineServer,
                                            ServeTicket)
@@ -47,6 +55,34 @@ def pipeline_for(workload, arch: str) -> Dict[str, Any]:
     ops = [dict(op, model=arch) if "model" in op else dict(op)
            for op in config["operators"]]
     return {"name": f"{config['name']}@{arch}", "operators": ops}
+
+
+def _policy_for(name: str, *, max_queue: int
+                ) -> Optional[ControlPolicy]:
+    """CLI policy selector: None keeps the server's default
+    (StaticPolicy); "adaptive" senses recent SLO attainment and sheds
+    per tenant (the host then needs ``--slo-ms``)."""
+    if name == "static":
+        return None
+    if name == "adaptive":
+        return AdaptivePolicy(max_queue=max_queue)
+    raise SystemExit(f"--policy must be static or adaptive, got {name!r}")
+
+
+def _swap_variant(plan: Dict[str, Any]) -> Dict[str, Any]:
+    """A same-shape stand-in for an optimizer's next plan: the swap
+    demo needs a second analyzable pipeline that hashes differently."""
+    ops = [dict(op) for op in plan["operators"]]
+    ops[0] = dict(ops[0], prompt=ops[0]["prompt"] + " Be concise.")
+    return {"name": plan["name"] + "_v2", "operators": ops}
+
+
+def _print_swap(record: Dict[str, Any]) -> None:
+    before = record["before"]
+    print(f"[swap] {record['old_plan']} ({record['old_hash'][:8]}) -> "
+          f"{record['new_plan']} ({record['new_hash'][:8]}) at "
+          f"t={record['at']:.2f}s; recent before swap: n={before['n']} "
+          f"p95 {before['p95_latency_s']:.2f}s")
 
 
 def _drive(server, submits, *, rps: float, seed: int
@@ -73,7 +109,9 @@ def _drive(server, submits, *, rps: float, seed: int
 def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
                max_new: int = 8, rps: float = 0.0, workload: str = "medec",
                max_batch: Optional[int] = None, workers: int = 2,
-               seed: int = 0, verbose: bool = True
+               seed: int = 0, verbose: bool = True,
+               policy: str = "static", slo_ms: Optional[float] = None,
+               max_queue: int = 16, swap_after: int = 0
                ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
     """End-to-end online serving demo on real JAX decoding.
 
@@ -83,6 +121,12 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
     sizes the continuous batcher's decode batch; ``max_batch`` (default
     ``2 * slots``) sizes the server's coalescing window so one merged
     chunk keeps the decode slots saturated with overflow queued.
+
+    ``policy="adaptive"`` runs the control plane's feedback policy
+    (requires ``slo_ms``). ``swap_after=N`` hot-swaps the served plan
+    to a prompt variant after the Nth submission — in-flight requests
+    finish on the old plan, later ones ride the new one — and prints
+    the swap record the report also carries.
     """
     from repro.engine.backend import JaxBackend  # jax import is heavy
 
@@ -96,11 +140,22 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
     max_batch = max_batch or max(1, 2 * slots)
     server = PipelineServer(plan, backend, max_inflight=4 * max_batch,
                             max_batch=max_batch, batch_window_s=0.01,
-                            workers=workers, seed=seed, clock=clock)
+                            workers=workers, seed=seed, clock=clock,
+                            slo_s=None if slo_ms is None
+                            else slo_ms / 1000.0,
+                            policy=_policy_for(policy,
+                                               max_queue=max_queue))
     docs = [dict(w.sample[i % len(w.sample)], id=f"r{i}")
             for i in range(requests)]
+
+    def submit(i: int, doc: Dict[str, Any]) -> ServeTicket:
+        if swap_after and i == swap_after:
+            _print_swap(server.swap_plan(_swap_variant(plan)))
+        return server.submit(doc)
+
     tickets, report = _drive(
-        server, [lambda d=doc: server.submit(d) for doc in docs],
+        server, [lambda i=i, d=doc: submit(i, d)
+                 for i, doc in enumerate(docs)],
         rps=rps, seed=seed)
     if verbose:
         for tk in tickets:
@@ -118,6 +173,8 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
               f"{report['batches']} batches "
               f"(mean size {report['mean_batch_size']:.1f}) | "
               f"{report['dispatch']['submit_calls']} submit calls")
+        print(f"[serve] control: {report['control']} | "
+              f"swaps: {len(report['swaps'])}")
     return tickets, report
 
 
@@ -158,11 +215,16 @@ def parse_tenants(spec: str, arch: str
 def serve_multi_demo(arch: str, tenants: str, *, requests: int = 8,
                      slots: int = 4, max_new: int = 8, rps: float = 0.0,
                      max_batch: Optional[int] = None, workers: int = 2,
-                     seed: int = 0, verbose: bool = True
+                     seed: int = 0, verbose: bool = True,
+                     policy: str = "static",
+                     slo_ms: Optional[float] = None, max_queue: int = 16,
+                     swap_after: int = 0
                      ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
     """Multi-tenant online serving on real JAX decoding: the roster's
     plans share one backend; requests round-robin across tenants at the
-    submission side and coalesce across tenants inside the host."""
+    submission side and coalesce across tenants inside the host.
+    ``swap_after=N`` hot-swaps the *first* tenant's plan after the Nth
+    submission."""
     from repro.engine.backend import JaxBackend  # jax import is heavy
 
     roster = parse_tenants(tenants, arch)
@@ -178,13 +240,24 @@ def serve_multi_demo(arch: str, tenants: str, *, requests: int = 8,
                                  max_inflight=4 * max_batch,
                                  max_batch=max_batch,
                                  batch_window_s=0.01, workers=workers,
-                                 seed=seed, clock=clock)
+                                 seed=seed, clock=clock,
+                                 slo_s=None if slo_ms is None
+                                 else slo_ms / 1000.0,
+                                 policy=_policy_for(policy,
+                                                    max_queue=max_queue))
+
+    def submit(i: int, tenant: str, doc: Dict[str, Any]) -> ServeTicket:
+        if swap_after and i == swap_after:
+            _print_swap(server.swap_plan(
+                specs[0].name, _swap_variant(specs[0].pipeline)))
+        return server.submit(tenant, doc)
+
     submits = []
     for i in range(requests):
         spec = specs[i % len(specs)]
         sample = samples[spec.name]
         doc = dict(sample[i % len(sample)], id=f"{spec.name}-r{i}")
-        submits.append(lambda t=spec.name, d=doc: server.submit(t, d))
+        submits.append(lambda i=i, t=spec.name, d=doc: submit(i, t, d))
     tickets, report = _drive(server, submits, rps=rps, seed=seed)
     if verbose:
         print(f"[serve] {report['completed']}/{report['requests']} "
@@ -218,17 +291,36 @@ def main():
                     help="multi-tenant roster: name=workload[:weight],"
                          "... — serve all tenants from one host "
                          "(e.g. legal=cuad:2,medical=medec)")
+    ap.add_argument("--policy", default="static",
+                    choices=["static", "adaptive"],
+                    help="control policy: static (fixed window, global "
+                         "backpressure) or adaptive (SLO-sensing window "
+                         "+ per-tenant shedding; requires --slo-ms)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency SLO the adaptive policy "
+                         "senses against")
+    ap.add_argument("--max-queue", type=int, default=16,
+                    help="adaptive policy's per-tenant admitted-queue "
+                         "bound")
+    ap.add_argument("--swap-after", type=int, default=0,
+                    help="hot-swap the served plan (first tenant with "
+                         "--tenants) to a prompt variant after N "
+                         "submissions; prints the swap record")
     args = ap.parse_args()
     if args.tenants:
         serve_multi_demo(args.arch, args.tenants, requests=args.requests,
                          slots=args.slots, rps=args.rps,
                          max_new=args.max_new, max_batch=args.max_batch,
-                         workers=args.workers, seed=args.seed)
+                         workers=args.workers, seed=args.seed,
+                         policy=args.policy, slo_ms=args.slo_ms,
+                         max_queue=args.max_queue,
+                         swap_after=args.swap_after)
         return
     serve_demo(args.arch, requests=args.requests, slots=args.slots,
                rps=args.rps, max_new=args.max_new, workload=args.workload,
                max_batch=args.max_batch, workers=args.workers,
-               seed=args.seed)
+               seed=args.seed, policy=args.policy, slo_ms=args.slo_ms,
+               max_queue=args.max_queue, swap_after=args.swap_after)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,313 @@
+"""Serving control plane: pluggable admission / window / shedding policy.
+
+PRs 4-5 inlined every serving-policy decision — when to admit, how long
+to hold the micro-batch window open, when to shed — in
+``PipelineServer`` / ``MultiPipelineServer``. This module extracts them
+into an explicit :class:`ControlPolicy` object the servers consult, so
+the *mechanism* (queues, batching, ticket resolution) and the *policy*
+(what the mechanism should do under the observed load) evolve
+separately:
+
+- :class:`StaticPolicy` reproduces the pre-control-plane servers
+  bit-identically: admission is the global ``max_inflight`` bound, the
+  window is the fixed ``batch_window_s``, nothing is ever shed. It is
+  the default on both servers.
+- :class:`AdaptivePolicy` is a feedback controller. Its sensor is the
+  stats layer's ``recent`` window (:meth:`ServerStats.recent_summary`
+  — the last ``stats_window`` finished requests, the same rolling
+  window the sketch mode reports): observed SLO attainment drives
+  (a) an AIMD-adjusted micro-batch window (halve under SLO pressure,
+  recover additively toward the configured ``batch_window_s``) and
+  (b) per-tenant admission-queue bounds that tighten for tenants whose
+  recent attainment is below target, shedding that tenant's overflow
+  with priority eviction instead of backpressuring the whole host.
+
+Every admission attempt resolves to an :class:`AdmissionDecision` with
+three outcomes:
+
+========  ==================================================
+admit     take a slot now; ``evict`` optionally names a
+          queued lower-priority victim shed to make room
+wait      no capacity yet — blocking submitters wait for a
+          slot, non-blocking ones get ``ServerSaturated``
+shed      reject *now*, even for blocking callers: per-tenant
+          load shedding must not convert a flood into an
+          unbounded crowd of blocked submitters
+========  ==================================================
+
+``reason`` carries which bound fired (``"global_inflight"`` vs
+``"tenant_queue"``) into :class:`ServerSaturated` and the per-reason
+shed counters in :class:`ServerStats`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Dict, Mapping, Optional, Union
+
+from repro.pipeline.model import as_config
+
+if TYPE_CHECKING:  # circular at runtime: pipeline_server imports us
+    from repro.serving.pipeline_server import PipelineServer, ServeTicket
+
+#: admission refused by the global ``max_inflight`` bound
+GLOBAL_INFLIGHT = "global_inflight"
+#: admission refused (or a queued victim evicted) by a per-tenant
+#: queue bound
+TENANT_QUEUE = "tenant_queue"
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of one admission attempt (see module docstring)."""
+
+    admit: bool
+    shed: bool = False
+    reason: Optional[str] = None
+    evict: Optional["ServeTicket"] = None
+
+    @staticmethod
+    def wait(reason: str) -> "AdmissionDecision":
+        return AdmissionDecision(admit=False, shed=False, reason=reason)
+
+    @staticmethod
+    def shed_now(reason: str) -> "AdmissionDecision":
+        return AdmissionDecision(admit=False, shed=True, reason=reason)
+
+    @staticmethod
+    def admit_evicting(victim: "ServeTicket") -> "AdmissionDecision":
+        return AdmissionDecision(admit=True, reason=TENANT_QUEUE,
+                                 evict=victim)
+
+
+ADMIT = AdmissionDecision(admit=True)
+
+
+def resolve_plan(plan: Any) -> Dict[str, Any]:
+    """Normalize anything the swap/serve surface accepts into a pipeline
+    config dict: a ``Pipeline``, a config mapping, or a ``SearchResult``
+    (anything with a callable ``best()`` whose winner has ``.pipeline``
+    — both optimizer result types satisfy this)."""
+    best = getattr(plan, "best", None)
+    if callable(best) and not isinstance(plan, Mapping):
+        plan = best().pipeline
+    return as_config(plan)
+
+
+class ControlPolicy:
+    """Admission / window / shedding decisions for one server.
+
+    A policy instance is bound to exactly one server (:meth:`bind`, done
+    by the server constructor) and consulted under the server's
+    admission lock — implementations must not block or call back into
+    the public serving API. The server exposes the sensor surface a
+    policy may read: ``max_inflight``, ``batch_window_s``,
+    ``_queued_for(tenant)`` / ``_queue_snapshot(tenant)`` (admitted,
+    not-yet-executing tickets), and ``stats`` / ``tenant_stats`` with
+    :meth:`ServerStats.recent_summary`.
+    """
+
+    name = "abstract"
+
+    def __init__(self) -> None:
+        self.server: Optional["PipelineServer"] = None
+
+    def bind(self, server: "PipelineServer") -> None:
+        if self.server is not None and self.server is not server:
+            raise RuntimeError(
+                f"{type(self).__name__} is already bound to another "
+                f"server; policies hold per-server state — build one "
+                f"instance per host")
+        self.server = server
+
+    def reset(self) -> None:
+        """A fresh serving episode opened (start()/run_trace)."""
+
+    def window_s(self) -> float:
+        """Micro-batch window for the batch about to form. Called once
+        per batch formation; adaptive policies update their control
+        state here."""
+        raise NotImplementedError
+
+    def admit(self, *, tenant: Optional[str], priority: int,
+              inflight: int) -> AdmissionDecision:
+        """Decide one admission attempt. ``inflight`` is the current
+        queued+executing slot count (passed in because trace mode tracks
+        it outside the threaded server's counter)."""
+        raise NotImplementedError
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Control state for ``report()``'s ``control`` section. Must
+        not mutate policy state (reports are read-only)."""
+        return {}
+
+
+class StaticPolicy(ControlPolicy):
+    """The pre-control-plane behavior, bit-identical: global
+    ``max_inflight`` backpressure, fixed ``batch_window_s``, no
+    per-tenant bounds, no shedding, no eviction."""
+
+    name = "static"
+
+    def window_s(self) -> float:
+        return self.server.batch_window_s
+
+    def admit(self, *, tenant: Optional[str], priority: int,
+              inflight: int) -> AdmissionDecision:
+        if inflight < self.server.max_inflight:
+            return ADMIT
+        return AdmissionDecision.wait(GLOBAL_INFLIGHT)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"window_s": self.server.batch_window_s}
+
+
+class AdaptivePolicy(ControlPolicy):
+    """Feedback control from observed SLO attainment (see module
+    docstring).
+
+    Parameters
+    ----------
+    slo_target:
+        Attainment the controller defends (fraction of recent completed
+        requests inside their SLO). Below it, the window shrinks and
+        the under-attaining tenant's queue bound tightens.
+    max_queue:
+        Per-tenant admitted-queue bound — an int for all tenants or a
+        ``{tenant: bound}`` mapping (missing tenants use
+        ``default_queue``). The single-plan server has one implicit
+        tenant (``None``), so the bound applies to its global queue.
+    min_queue:
+        Floor the tightened bound never goes below (a tenant always
+        keeps some service — shedding is load control, not a ban).
+    window_floor_s / shrink / grow:
+        AIMD knobs for the micro-batch window: under SLO pressure the
+        window multiplies by ``shrink`` (toward ``window_floor_s``),
+        otherwise it recovers by ``grow * batch_window_s`` per batch up
+        to the configured ``batch_window_s``.
+
+    The host (or its tenants) must carry an SLO target — without one
+    the sensor has nothing to measure, so :meth:`bind` refuses.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, *, slo_target: float = 0.9,
+                 max_queue: Union[int, Mapping[str, int]] = 16,
+                 default_queue: int = 16, min_queue: int = 2,
+                 window_floor_s: float = 0.0, shrink: float = 0.5,
+                 grow: float = 0.25):
+        super().__init__()
+        if not 0.0 < slo_target <= 1.0:
+            raise ValueError(f"slo_target must be in (0, 1], "
+                             f"got {slo_target}")
+        if not 0.0 < shrink < 1.0:
+            raise ValueError(f"shrink must be in (0, 1), got {shrink}")
+        if not 0.0 < grow <= 1.0:
+            raise ValueError(f"grow must be in (0, 1], got {grow}")
+        bounds = (dict(max_queue) if isinstance(max_queue, Mapping)
+                  else None)
+        base = default_queue if bounds is not None else int(max_queue)
+        for b in ([base] + list(bounds.values() if bounds else [])):
+            if not (isinstance(b, int) and b >= 1 and math.isfinite(b)):
+                raise ValueError(f"queue bounds must be ints >= 1, "
+                                 f"got {b!r}")
+        if not 1 <= min_queue <= base:
+            raise ValueError(f"min_queue must be in [1, {base}], "
+                             f"got {min_queue}")
+        self.slo_target = slo_target
+        self._bounds = bounds
+        self._base_bound = base
+        self.min_queue = min_queue
+        self.window_floor_s = max(0.0, window_floor_s)
+        self.shrink = shrink
+        self.grow = grow
+        self._window = 0.0
+
+    def bind(self, server: "PipelineServer") -> None:
+        super().bind(server)
+        if not server._has_slo_target():
+            raise ValueError(
+                "AdaptivePolicy needs an SLO target to sense against: "
+                "set slo_s on the server or on at least one tenant")
+        self._window = server.batch_window_s
+
+    def reset(self) -> None:
+        self._window = self.server.batch_window_s
+
+    # -- sensors --------------------------------------------------------------
+
+    def _stats_for(self, tenant: Optional[str]):
+        if tenant is not None:
+            per_tenant = getattr(self.server, "tenant_stats", None)
+            if per_tenant and tenant in per_tenant:
+                return per_tenant[tenant]
+        return self.server.stats
+
+    def _attainment(self, tenant: Optional[str] = None) -> Optional[float]:
+        """Recent-window SLO attainment, or None when the sensor has no
+        signal yet (no SLO configured or no completed requests)."""
+        summary = self._stats_for(tenant).recent_summary()
+        if summary["n"] == 0:
+            return None
+        return summary["attainment"]  # None when no SLO configured
+
+    # -- actuators ------------------------------------------------------------
+
+    def window_s(self) -> float:
+        base = self.server.batch_window_s
+        attainment = self._attainment()
+        if attainment is not None:
+            if attainment < self.slo_target:
+                self._window = max(self.window_floor_s,
+                                   self._window * self.shrink)
+            else:
+                self._window = min(base, self._window + self.grow * base)
+        return self._window
+
+    def queue_bound(self, tenant: Optional[str]) -> int:
+        """Effective admitted-queue bound for ``tenant`` right now:
+        the configured bound, scaled down proportionally to the
+        tenant's recent attainment shortfall (floored at
+        ``min_queue``)."""
+        base = self._base_bound
+        if self._bounds is not None and tenant in self._bounds:
+            base = self._bounds[tenant]
+        attainment = self._attainment(tenant)
+        if attainment is None or attainment >= self.slo_target:
+            return base
+        return max(self.min_queue,
+                   int(base * attainment / self.slo_target))
+
+    def admit(self, *, tenant: Optional[str], priority: int,
+              inflight: int) -> AdmissionDecision:
+        if inflight >= self.server.max_inflight:
+            # global saturation stays backpressure (blocking submitters
+            # wait) — the per-tenant bound below is the shedding layer
+            return AdmissionDecision.wait(GLOBAL_INFLIGHT)
+        if self.server._queued_for(tenant) < self.queue_bound(tenant):
+            return ADMIT
+        queued = self.server._queue_snapshot(tenant)
+        if queued:
+            # priority eviction: shed the lowest-priority queued request
+            # (youngest among equals — the oldest has waited longest) if
+            # the incoming one outranks it; otherwise shed the arrival
+            victim = min(queued, key=lambda tk: (tk.priority, -tk.rid))
+            if victim.priority < priority:
+                return AdmissionDecision.admit_evicting(victim)
+        return AdmissionDecision.shed_now(TENANT_QUEUE)
+
+    def snapshot(self) -> Dict[str, Any]:
+        snap: Dict[str, Any] = {
+            "window_s": self._window,
+            "slo_target": self.slo_target,
+            "min_queue": self.min_queue,
+        }
+        order = getattr(self.server, "_order", None)
+        if order:
+            snap["queue_bounds"] = {name: self.queue_bound(name)
+                                    for name in order}
+        else:
+            snap["queue_bound"] = self.queue_bound(None)
+        return snap

@@ -45,8 +45,9 @@ admission/window/DRR semantics deterministically — the substrate for
 
 from __future__ import annotations
 
+import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis.analyzer import analyze as _analyze
@@ -54,6 +55,7 @@ from repro.data.documents import Document
 from repro.engine.executor import CallCache, Executor
 from repro.engine.operators import validate_pipeline
 from repro.pipeline.model import PipelineLike, as_config
+from repro.serving.control import ControlPolicy
 from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
                                            ServeTicket, ServerStats)
 
@@ -94,16 +96,20 @@ class MultiPipelineServer(PipelineServer):
                  executor: Optional[Executor] = None,
                  call_cache: Optional[CallCache] = None,
                  cache_entries: int = 65536,
-                 stats_mode: str = "auto", stats_window: int = 512):
+                 stats_mode: str = "auto", stats_window: int = 512,
+                 policy: Optional[ControlPolicy] = None):
         specs = _normalize_tenants(tenants)
         self._tenants: Dict[str, TenantSpec] = {}
         self._configs: Dict[str, Any] = {}
         for spec in specs:
             if spec.name in self._tenants:
                 raise ValueError(f"duplicate tenant name {spec.name!r}")
-            if not spec.weight > 0:
+            # non-finite weights must die here: weight=inf would make
+            # this tenant's DRR quantum infinite (it monopolizes every
+            # cycle) and weight=nan poisons every deficit comparison
+            if not (spec.weight > 0 and math.isfinite(spec.weight)):
                 raise ValueError(f"tenant {spec.name!r}: weight must be "
-                                 f"> 0, got {spec.weight}")
+                                 f"finite and > 0, got {spec.weight}")
             config = as_config(spec.pipeline)
             validate_pipeline(config)
             # refuse statically-broken tenant plans at registration
@@ -132,7 +138,8 @@ class MultiPipelineServer(PipelineServer):
                          seed=seed, fail_prob=fail_prob, slo_s=slo_s,
                          clock=clock, executor=executor,
                          call_cache=call_cache, cache_entries=cache_entries,
-                         stats_mode=stats_mode, stats_window=stats_window)
+                         stats_mode=stats_mode, stats_window=stats_window,
+                         policy=policy)
 
     # -- tenant plumbing ------------------------------------------------------
 
@@ -177,6 +184,16 @@ class MultiPipelineServer(PipelineServer):
 
     def _queued(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def _queued_for(self, tenant: Optional[str]) -> int:
+        return len(self._queues[tenant])
+
+    def _queue_snapshot(self, tenant: Optional[str]
+                        ) -> List[ServeTicket]:
+        return list(self._queues[tenant])
+
+    def _remove_queued(self, tk: ServeTicket) -> None:
+        self._queues[tk.tenant].remove(tk)
 
     def _oldest_admitted(self) -> float:
         return min(q[0].admitted_at
@@ -234,10 +251,14 @@ class MultiPipelineServer(PipelineServer):
 
     def _arrival_ticket(self, rest: Tuple, submitted_at: float
                         ) -> ServeTicket:
-        tenant, doc = rest
+        tenant, doc = rest[0], rest[1]
+        priority = int(rest[2]) if len(rest) > 2 else 0
         self._tenant(tenant)
         return self._make_ticket(doc, submitted_at=submitted_at,
-                                 tenant=tenant)
+                                 tenant=tenant, priority=priority)
+
+    def _arrival_meta(self, rest: Tuple) -> Tuple[Optional[str], int]:
+        return rest[0], (int(rest[2]) if len(rest) > 2 else 0)
 
     def analyze(self, tenant: Optional[str] = None, *,
                 source_fields: Optional[Sequence[str]] = None) -> Any:
@@ -252,12 +273,38 @@ class MultiPipelineServer(PipelineServer):
                                source_fields=source_fields)
                 for name in self._order}
 
-    def _job_config(self, tk: ServeTicket) -> Any:
-        return self._configs[tk.tenant]
-
     def _job_tags(self, batch: List[ServeTicket]
                   ) -> Optional[List[Optional[str]]]:
         return [tk.tenant for tk in batch]
+
+    # -- plan routing + hot swap ----------------------------------------------
+
+    def _plan_for(self, tenant: Optional[str]) -> Any:
+        return self._configs[tenant]
+
+    def _set_plan(self, tenant: Optional[str], config: Any) -> None:
+        self._configs[tenant] = config
+        # the spec mirrors the served plan (weight/slo_s untouched)
+        self._tenants[tenant] = replace(self._tenants[tenant],
+                                        pipeline=config)
+
+    def _swap_stats(self, tenant: Optional[str]) -> ServerStats:
+        return self.tenant_stats[tenant]
+
+    def _has_slo_target(self) -> bool:
+        return (self.slo_s is not None
+                or any(s.slo_s is not None
+                       for s in self._tenants.values()))
+
+    def swap_plan(self, tenant: str,  # type: ignore[override]
+                  plan: Any) -> Dict[str, Any]:
+        """Drain-free hot swap of ``tenant``'s plan (a ``Pipeline``,
+        config dict, or ``SearchResult``) — analyzer-gated, atomic
+        under the admission lock, in-flight tickets finish on the plan
+        they were admitted under; see the single-plan
+        :meth:`PipelineServer.swap_plan` for the full contract."""
+        self._tenant(tenant)
+        return self._swap(tenant, plan)
 
     def _observe_batch(self, batch: List[ServeTicket]) -> None:
         self.stats.observe_batch(len(batch))
@@ -274,10 +321,11 @@ class MultiPipelineServer(PipelineServer):
         self.stats.observe(record)
         self.tenant_stats[tk.tenant].observe(record)
 
-    def _count_rejected(self, tenant: Optional[str]) -> None:
-        self.stats.count_rejected()
+    def _count_rejected(self, tenant: Optional[str],
+                        reason: Optional[str] = None) -> None:
+        self.stats.count_rejected(reason)
         if tenant in self.tenant_stats:
-            self.tenant_stats[tenant].count_rejected()
+            self.tenant_stats[tenant].count_rejected(reason)
 
     def _count_cancelled(self, cancelled: List[ServeTicket]) -> None:
         self.stats.count_cancelled(len(cancelled))
@@ -287,14 +335,17 @@ class MultiPipelineServer(PipelineServer):
     # -- public surface -------------------------------------------------------
 
     def submit(self, tenant: str, doc: Document, *,  # type: ignore[override]
-               block: bool = True,
+               priority: int = 0, block: bool = True,
                timeout: Optional[float] = None) -> ServeTicket:
         """Admit one document for ``tenant``. Same admission semantics
-        as the single-plan server: blocks while all ``max_inflight``
-        slots (shared across tenants) are taken, ``block=False`` /
-        ``timeout`` raise :class:`ServerSaturated`."""
+        as the single-plan server — the control policy decides; under
+        a shedding policy a saturated tenant's requests raise
+        :class:`ServerSaturated` (``reason="tenant_queue"``) even for
+        blocking callers, and ``priority`` lets a request outrank and
+        evict a queued lower-priority one."""
         self._tenant(tenant)
-        return self._submit_doc(doc, tenant, block=block, timeout=timeout)
+        return self._submit_doc(doc, tenant, priority=priority,
+                                block=block, timeout=timeout)
 
     def serve(self, items: Sequence[Tuple[str, Document]],  # type: ignore[override]
               timeout: Optional[float] = None) -> List[ServeTicket]:
@@ -305,13 +356,15 @@ class MultiPipelineServer(PipelineServer):
             tk.wait(timeout)
         return tickets
 
-    def run_trace(self, arrivals: Sequence[Tuple[float, str, Document]]
+    def run_trace(self, arrivals: Sequence[Tuple[float, str, Document]],
+                  *, events: Optional[Sequence[Tuple[float, Any]]] = None
                   ) -> List[ServeTicket]:
         """Replay an open-loop ``(arrival_time, tenant, doc)`` schedule
-        in virtual time (see the single-plan server's ``run_trace`` for
-        the clock contract). DRR state resets with the episode, so a
-        given schedule always forms the same batches."""
-        return super().run_trace(arrivals)
+        (optional trailing per-entry ``priority``) in virtual time —
+        see the single-plan server's ``run_trace`` for the clock,
+        ``events``, and shedding contracts. DRR state resets with the
+        episode, so a given schedule always forms the same batches."""
+        return super().run_trace(arrivals, events=events)
 
     def report(self, *, elapsed_s: Optional[float] = None
                ) -> Dict[str, Any]:

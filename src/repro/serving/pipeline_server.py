@@ -31,6 +31,14 @@ Design:
   finishes every queued and in-flight request, then joins the loop
   thread; ``drain=False`` cancels queued requests (their tickets carry
   :class:`ServerClosed`) while the executing batch still completes.
+- **Control plane.** Admission, window sizing, and shedding route
+  through a :class:`~repro.serving.control.ControlPolicy`
+  (``StaticPolicy`` by default — bit-identical to the inlined
+  decisions it replaced; ``AdaptivePolicy`` senses recent SLO
+  attainment and sheds per tenant). Plans hot-swap without draining:
+  :meth:`swap_plan` routes new admissions to the new plan while
+  tickets already admitted finish on the one they were admitted under
+  (each ticket binds its plan at admission).
 
 Determinism: throughput numbers on a wall clock are not reproducible,
 so the server also runs **virtual-time traces**: ``run_trace`` replays a
@@ -54,9 +62,12 @@ from repro.analysis.analyzer import AnalysisReport, analyze as _analyze
 from repro.data.documents import Dataset, Document
 from repro.engine.executor import (CallCache, ExecutionStats, Executor,
                                    SessionResult)
-from repro.engine.operators import validate_pipeline
+from repro.engine.operators import pipeline_hash, validate_pipeline
 from repro.pipeline.model import PipelineLike, as_config
 from repro.pipeline.protocols import backend_close, batch_hint
+from repro.serving.control import (GLOBAL_INFLIGHT, TENANT_QUEUE,
+                                   ControlPolicy, StaticPolicy,
+                                   resolve_plan)
 
 
 _UNSET_SLO = object()  # "use the server's slo_s" sentinel
@@ -67,7 +78,18 @@ class ServerClosed(RuntimeError):
 
 
 class ServerSaturated(RuntimeError):
-    """All ``max_inflight`` admission slots are taken (backpressure)."""
+    """Admission refused under load. ``reason`` says which policy bound
+    fired: ``"global_inflight"`` (all ``max_inflight`` slots taken —
+    backpressure) or ``"tenant_queue"`` (a per-tenant queue bound shed
+    the request or evicted it from the queue). ``tenant`` names the
+    affected tenant on multi-tenant hosts."""
+
+    def __init__(self, message: str = "server saturated", *,
+                 reason: str = GLOBAL_INFLIGHT,
+                 tenant: Optional[str] = None):
+        super().__init__(message)
+        self.reason = reason
+        self.tenant = tenant
 
 
 # -- clocks -----------------------------------------------------------------
@@ -164,6 +186,10 @@ class ServeTicket:
     doc: Document
     submitted_at: float
     tenant: Optional[str] = None
+    priority: int = 0
+    # the pipeline config this request was admitted under — hot swaps
+    # change what *future* admissions bind, never a live ticket's plan
+    plan: Any = field(default=None, repr=False)
     admitted_at: float = 0.0
     started_at: float = 0.0
     finished_at: float = 0.0
@@ -380,6 +406,7 @@ class ServerStats:
         self.window = max(1, window)
         self.rejected = 0
         self.cancelled = 0
+        self.shed: Dict[str, int] = {}  # rejections by policy reason
         self._lock = threading.Lock()
         if mode == "exact":
             self.records: List[RequestRecord] = []
@@ -437,13 +464,45 @@ class ServerStats:
             if size > self._batch_max:
                 self._batch_max = size
 
-    def count_rejected(self) -> None:
+    def count_rejected(self, reason: Optional[str] = None) -> None:
         with self._lock:
             self.rejected += 1
+            if reason is not None:
+                self.shed[reason] = self.shed.get(reason, 0) + 1
 
     def count_cancelled(self, n: int = 1) -> None:
         with self._lock:
             self.cancelled += n
+
+    def recent_summary(self) -> Dict[str, Any]:
+        """The control plane's sensor: latency/SLO summary over the
+        rolling window of recent finished requests (sketch mode's
+        ``_recent`` deque; the last ``window`` records in exact mode).
+        ``attainment`` is None when no SLO target is configured; an
+        empty window reports ``n=0`` with optimistic attainment 1.0 —
+        policies treat no-signal as healthy."""
+        with self._lock:
+            if self.mode == "sketch":
+                recent = list(self._recent)
+            else:
+                recent = self.records[-self.window:]
+        ok = [r for r in recent if r.ok]
+        lat = sorted(r.latency_s for r in ok)
+        summary: Dict[str, Any] = {
+            "n": len(ok),
+            "mean_latency_s": sum(lat) / len(lat) if lat else 0.0,
+            "p95_latency_s": _percentile(lat, 95),
+            "slo_s": self.slo_s,
+        }
+        if self.slo_s is None:
+            summary["violations"] = None
+            summary["attainment"] = None
+        else:
+            violations = sum(1 for v in lat if v > self.slo_s)
+            summary["violations"] = violations
+            summary["attainment"] = (1.0 - violations / len(lat)
+                                     if lat else 1.0)
+        return summary
 
     def report(self, *, elapsed_s: Optional[float] = None,
                slo_s: Optional[float] = None,
@@ -463,6 +522,7 @@ class ServerStats:
             records = list(self.records)
             batches = list(self.batch_sizes)
             rejected, cancelled = self.rejected, self.cancelled
+            shed = dict(self.shed)
         completed = [r for r in records if r.ok]
         failed = [r for r in records if not r.ok]
         if elapsed_s is None:
@@ -476,6 +536,7 @@ class ServerStats:
             "completed": len(completed),
             "failed": len(failed),
             "rejected": rejected,
+            "rejected_reasons": shed,
             "cancelled": cancelled,
             "batches": len(batches),
             "mean_batch_size": (sum(batches) / len(batches)
@@ -509,6 +570,7 @@ class ServerStats:
             requests, completed = self._requests, self._completed
             failed = self._failed
             rejected, cancelled = self.rejected, self.cancelled
+            shed = dict(self.shed)
             batches = self._batches
             batch_sum, batch_max = self._batch_sum, self._batch_max
             if elapsed_s is None:
@@ -526,6 +588,7 @@ class ServerStats:
             "completed": completed,
             "failed": failed,
             "rejected": rejected,
+            "rejected_reasons": shed,
             "cancelled": cancelled,
             "batches": batches,
             "mean_batch_size": batch_sum / batches if batches else 0.0,
@@ -591,7 +654,8 @@ class PipelineServer:
                  executor: Optional[Executor] = None,
                  call_cache: Optional[CallCache] = None,
                  cache_entries: int = 65536,
-                 stats_mode: str = "auto", stats_window: int = 512):
+                 stats_mode: str = "auto", stats_window: int = 512,
+                 policy: Optional[ControlPolicy] = None):
         self._config = as_config(pipeline)
         validate_pipeline(self._config)
         # static field-flow analysis: refuse plans with error diagnostics
@@ -631,6 +695,12 @@ class PipelineServer:
         self._thread: Optional[threading.Thread] = None
         self._rid = 0
         self._dispatch_base: Dict[str, int] = {}
+        self._swaps: List[Dict[str, Any]] = []
+        # the control plane: admission / window / shedding decisions
+        # route through the policy; the default reproduces the
+        # pre-control-plane behavior bit-identically
+        self.policy = policy if policy is not None else StaticPolicy()
+        self.policy.bind(self)
         self._reset_episode(trace=True)
 
     # -- episode lifecycle ----------------------------------------------------
@@ -657,6 +727,8 @@ class PipelineServer:
         self._rid = 0
         self._dispatch_base = dict(self.executor.dispatch_stats)
         self._cache_base = self.executor.call_cache.counters()
+        self._swaps = []
+        self.policy.reset()
 
     # -- queue discipline (overridden by multi-tenant hosts) ------------------
 
@@ -665,6 +737,20 @@ class PipelineServer:
 
     def _queued(self) -> int:
         return len(self._queue)
+
+    def _queued_for(self, tenant: Optional[str]) -> int:
+        """Admitted, not-yet-executing requests charged to ``tenant``
+        (the single-plan server has one implicit tenant)."""
+        return len(self._queue)
+
+    def _queue_snapshot(self, tenant: Optional[str]
+                        ) -> List[ServeTicket]:
+        """The queued tickets a policy may pick an eviction victim
+        from. Only queued (never executing) tickets are evictable."""
+        return list(self._queue)
+
+    def _remove_queued(self, tk: ServeTicket) -> None:
+        self._queue.remove(tk)
 
     def _oldest_admitted(self) -> float:
         """Admission time of the longest-waiting queued ticket (the one
@@ -683,18 +769,30 @@ class PipelineServer:
     # -- shared batch execution ---------------------------------------------
 
     def _make_ticket(self, doc: Document, submitted_at: float,
-                     tenant: Optional[str] = None) -> ServeTicket:
+                     tenant: Optional[str] = None,
+                     priority: int = 0) -> ServeTicket:
         self._rid += 1
         return ServeTicket(rid=self._rid, doc=doc,
-                           submitted_at=submitted_at, tenant=tenant)
+                           submitted_at=submitted_at, tenant=tenant,
+                           priority=priority,
+                           plan=self._plan_for(tenant))
 
     def _arrival_ticket(self, rest: Tuple, submitted_at: float
                         ) -> ServeTicket:
         """Build the ticket for one trace-arrival entry; ``rest`` is the
-        entry minus its arrival time — ``(doc,)`` here, ``(tenant, doc)``
-        for multi-tenant hosts."""
-        (doc,) = rest
-        return self._make_ticket(doc, submitted_at=submitted_at)
+        entry minus its arrival time — ``(doc,)`` or
+        ``(doc, priority)`` here, ``(tenant, doc[, priority])`` for
+        multi-tenant hosts."""
+        doc = rest[0]
+        priority = int(rest[1]) if len(rest) > 1 else 0
+        return self._make_ticket(doc, submitted_at=submitted_at,
+                                 priority=priority)
+
+    def _arrival_meta(self, rest: Tuple) -> Tuple[Optional[str], int]:
+        """``(tenant, priority)`` of one trace-arrival entry, read
+        without building its ticket (admission decisions peek before
+        committing a request id)."""
+        return None, (int(rest[1]) if len(rest) > 1 else 0)
 
     def analyze(self, *, source_fields: Optional[Sequence[str]] = None
                 ) -> AnalysisReport:
@@ -705,8 +803,67 @@ class PipelineServer:
         return _analyze(self._config, source_fields=source_fields)
 
     def _job_config(self, tk: ServeTicket) -> Any:
-        """The pipeline the batch job for this ticket evaluates."""
+        """The pipeline the batch job for this ticket evaluates: the
+        plan bound at admission, so a hot swap never retargets a ticket
+        already in the house."""
+        return tk.plan if tk.plan is not None else self._plan_for(tk.tenant)
+
+    # -- plan routing + hot swap ----------------------------------------------
+
+    def _plan_for(self, tenant: Optional[str]) -> Any:
+        """The config new admissions for ``tenant`` bind right now."""
         return self._config
+
+    def _set_plan(self, tenant: Optional[str], config: Any) -> None:
+        self._config = config
+
+    def _swap_stats(self, tenant: Optional[str]) -> ServerStats:
+        """The stats whose ``recent`` window frames a swap's
+        before/after deltas."""
+        return self.stats
+
+    def _has_slo_target(self) -> bool:
+        """Whether any SLO target exists for a feedback policy to
+        sense against."""
+        return self.slo_s is not None
+
+    def swap_plan(self, plan: Any) -> Dict[str, Any]:
+        """Drain-free hot swap to ``plan`` (a ``Pipeline``, config
+        dict, or ``SearchResult`` — the optimizer output promotes
+        directly). The new plan is validated and gated by the static
+        analyzer first; the swap is then atomic under the admission
+        lock: tickets admitted before it (queued *or* executing) finish
+        on the plan they bound at admission, every later admission
+        binds the new plan. The executor — and with it the (persistent)
+        call cache — stays attached, so calls the old plan already paid
+        for warm-start the new one. Returns the swap record (old/new
+        plan hashes + the before-swap ``recent`` sensor summary), which
+        ``report()`` also lists under ``swaps`` with the after-swap
+        summary — measured deltas for a human to judge, not an
+        auto-promotion."""
+        return self._swap(None, plan)
+
+    def _swap(self, tenant: Optional[str], plan: Any) -> Dict[str, Any]:
+        config = resolve_plan(plan)
+        validate_pipeline(config)
+        # same gate as construction: statically-broken plans never
+        # reach admission, swaps included
+        _analyze(config).raise_for_errors()
+        with self._cond:
+            old = self._plan_for(tenant)
+            record: Dict[str, Any] = {
+                "tenant": tenant,
+                # episode-relative, like the report's elapsed_s
+                "at": self.clock.now() - self.stats.opened_at,
+                "old_plan": old.get("name", ""),
+                "new_plan": config.get("name", ""),
+                "old_hash": pipeline_hash(old),
+                "new_hash": pipeline_hash(config),
+                "before": self._swap_stats(tenant).recent_summary(),
+            }
+            self._set_plan(tenant, config)
+            self._swaps.append(record)
+        return dict(record)
 
     def _job_tags(self, batch: List[ServeTicket]
                   ) -> Optional[List[Optional[str]]]:
@@ -720,8 +877,9 @@ class PipelineServer:
                         record: RequestRecord) -> None:
         self.stats.observe(record)
 
-    def _count_rejected(self, tenant: Optional[str]) -> None:
-        self.stats.count_rejected()
+    def _count_rejected(self, tenant: Optional[str],
+                        reason: Optional[str] = None) -> None:
+        self.stats.count_rejected(reason)
 
     def _count_cancelled(self, cancelled: List[ServeTicket]) -> None:
         self.stats.count_cancelled(len(cancelled))
@@ -800,16 +958,41 @@ class PipelineServer:
     def __exit__(self, exc_type, exc, tb) -> None:
         self.shutdown(drain=exc_type is None)
 
-    def submit(self, doc: Document, *, block: bool = True,
+    def submit(self, doc: Document, *, priority: int = 0,
+               block: bool = True,
                timeout: Optional[float] = None) -> ServeTicket:
-        """Admit one document. Blocks while all ``max_inflight`` slots
-        are taken (bounded by ``timeout``); ``block=False`` raises
-        :class:`ServerSaturated` immediately instead — admission
-        pressure is the caller's signal to shed load."""
-        return self._submit_doc(doc, None, block=block, timeout=timeout)
+        """Admit one document. The control policy decides: blocking
+        submits wait out backpressure (bounded by ``timeout``),
+        ``block=False`` raises :class:`ServerSaturated` immediately,
+        and a shedding policy raises it even for blocking callers.
+        ``priority`` only matters to policies that shed: a
+        higher-priority request may evict a queued lower-priority one
+        instead of being shed itself."""
+        return self._submit_doc(doc, None, priority=priority,
+                                block=block, timeout=timeout)
+
+    def _shed_ticket(self, tk: ServeTicket, reason: str,
+                     now: float) -> None:
+        """Resolve a shed request: the ticket carries
+        :class:`ServerSaturated` and the shed is counted per reason."""
+        tk.started_at = now
+        tk.finished_at = now
+        tk.error = ServerSaturated(f"shed by {self.policy.name} "
+                                   f"policy ({reason})",
+                                   reason=reason, tenant=tk.tenant)
+        self._count_rejected(tk.tenant, reason)
+        tk._event.set()
+
+    def _evict_locked(self, victim: ServeTicket) -> None:
+        """Under ``_cond``: shed one queued (never executing) ticket so
+        a higher-priority admission can take its slot."""
+        self._remove_queued(victim)
+        self._inflight -= 1
+        self._shed_ticket(victim, TENANT_QUEUE, self.clock.now())
 
     def _submit_doc(self, doc: Document, tenant: Optional[str], *,
-                    block: bool, timeout: Optional[float]) -> ServeTicket:
+                    block: bool, timeout: Optional[float],
+                    priority: int = 0) -> ServeTicket:
         if self._thread is None:
             raise RuntimeError("server not started (call start() or use "
                                "run_trace for virtual-time serving)")
@@ -819,20 +1002,33 @@ class PipelineServer:
             while True:
                 if self._closed:
                     raise ServerClosed("server is shutting down")
-                if self._inflight < self.max_inflight:
+                decision = self.policy.admit(tenant=tenant,
+                                             priority=priority,
+                                             inflight=self._inflight)
+                if decision.admit:
+                    if decision.evict is not None:
+                        self._evict_locked(decision.evict)
                     break
-                if not block:
-                    self._count_rejected(tenant)
+                if decision.shed:
+                    self._count_rejected(tenant, decision.reason)
                     raise ServerSaturated(
-                        f"{self.max_inflight} requests in flight")
+                        f"request shed ({decision.reason})",
+                        reason=decision.reason, tenant=tenant)
+                if not block:
+                    self._count_rejected(tenant, decision.reason)
+                    raise ServerSaturated(
+                        f"{self.max_inflight} requests in flight",
+                        reason=decision.reason, tenant=tenant)
                 remaining = (None if deadline is None
                              else deadline - time.monotonic())
                 if remaining is not None and remaining <= 0:
-                    self._count_rejected(tenant)
+                    self._count_rejected(tenant, decision.reason)
                     raise ServerSaturated(
-                        f"no admission slot within {timeout}s")
+                        f"no admission slot within {timeout}s",
+                        reason=decision.reason, tenant=tenant)
                 self._cond.wait(remaining)
-            tk = self._make_ticket(doc, submitted, tenant=tenant)
+            tk = self._make_ticket(doc, submitted, tenant=tenant,
+                                   priority=priority)
             tk.admitted_at = self.clock.now()
             self._inflight += 1
             self._enqueue(tk)
@@ -879,10 +1075,13 @@ class PipelineServer:
                     break
                 # micro-batch window: the first waiting request opens it;
                 # more requests coalesce until the window closes or the
-                # batch fills (shutdown closes it early)
-                if self.batch_window_s > 0 and \
+                # batch fills (shutdown closes it early). The policy
+                # sizes the window per batch — StaticPolicy returns the
+                # fixed batch_window_s
+                window_s = self.policy.window_s()
+                if window_s > 0 and \
                         self._queued() < self.max_batch:
-                    close_at = time.monotonic() + self.batch_window_s
+                    close_at = time.monotonic() + window_s
                     while self._queued() < self.max_batch and \
                             not self._closed:
                         left = close_at - time.monotonic()
@@ -942,20 +1141,33 @@ class PipelineServer:
 
     # -- virtual-time trace mode ---------------------------------------------
 
-    def run_trace(self, arrivals: Sequence[Tuple[float, Document]]
+    def run_trace(self, arrivals: Sequence[Tuple[float, Document]], *,
+                  events: Optional[Sequence[Tuple[float, Any]]] = None
                   ) -> List[ServeTicket]:
         """Replay an open-loop arrival schedule in virtual time.
 
-        ``arrivals`` is a list of ``(arrival_time, doc)``; arrival times
+        ``arrivals`` is a list of ``(arrival_time, doc)`` — with an
+        optional trailing ``priority`` int per entry; arrival times
         are relative to the trace's start (the shared clock's position
         at the call), so schedules can always start at 0. The simulation
-        reproduces the threaded server's semantics — bounded admission,
-        micro-batch window, serial batch execution — but all waiting is
-        a clock jump and all execution time is whatever the
+        reproduces the threaded server's semantics — policy-driven
+        admission, micro-batch window, serial batch execution — but all
+        waiting is a clock jump and all execution time is whatever the
         latency-modeled backend charges, so the resulting tickets and
         :class:`ServerStats` are bit-for-bit reproducible. Requires a
         :class:`VirtualClock` (shared with the backend); refuses to run
         next to a live serving loop.
+
+        ``events`` is an optional schedule of ``(time, fn)`` control
+        actions — ``fn(server)`` runs when the virtual clock reaches
+        ``time`` (before arrivals at the same instant), which is how a
+        trace swaps a plan mid-flight deterministically::
+
+            server.run_trace(arrivals,
+                             events=[(0.5, lambda s: s.swap_plan(p2))])
+
+        Requests a shedding policy refuses still appear in the returned
+        ticket list, resolved with :class:`ServerSaturated`.
 
         Traces on one server share the executor's ``CallCache``: with a
         deterministic backend, requests already answered in an earlier
@@ -980,11 +1192,18 @@ class PipelineServer:
         # carries over — see above)
         clock = self.clock
         self._reset_episode(trace=True)
+        t0 = clock.now()
+        # one time-ordered queue of (t, kind, seq, payload): kind 0 =
+        # control event, kind 1 = arrival; events outrank arrivals at
+        # the same instant ("subsequent admissions" of a swap include
+        # same-time arrivals), seq keeps the sort stable
+        entries = [(t0 + float(a[0]), 1, i, tuple(a[1:]))
+                   for i, a in enumerate(arrivals)]
+        entries += [(t0 + float(t), 0, i, fn)
+                    for i, (t, fn) in enumerate(events or [])]
         pending: Deque[Tuple] = deque(
-            sorted(((clock.now() + float(a[0]),) + tuple(a[1:])
-                    for a in arrivals),
-                   key=lambda td: td[0]))
-        waiting: Deque[ServeTicket] = deque()  # arrived, no slot free
+            sorted(entries, key=lambda e: (e[0], e[1], e[2])))
+        waiting: Deque[ServeTicket] = deque()  # blocked submitters
         tickets: List[ServeTicket] = []        # admitted go to _enqueue
         inflight = 0
 
@@ -994,25 +1213,61 @@ class PipelineServer:
             inflight += 1
             self._enqueue(tk)
 
+        def evict(victim: ServeTicket) -> None:
+            nonlocal inflight
+            self._remove_queued(victim)
+            inflight -= 1
+            self._shed_ticket(victim, TENANT_QUEUE, clock.now())
+
+        def offer(tk: ServeTicket, at: float) -> None:
+            """One admission attempt — the trace's blocking submit:
+            admit (possibly evicting), shed now, or park as a blocked
+            submitter in ``waiting``."""
+            decision = self.policy.admit(tenant=tk.tenant,
+                                         priority=tk.priority,
+                                         inflight=inflight)
+            if decision.admit:
+                if decision.evict is not None:
+                    evict(decision.evict)
+                admit(tk, at=at)
+            elif decision.shed:
+                self._shed_ticket(tk, decision.reason, clock.now())
+            else:
+                waiting.append(tk)
+
         def intake(until: float) -> None:
-            """Arrivals due by ``until`` enter the admission flow: take
-            a free slot at their arrival time or park in ``waiting``."""
+            """Entries due by ``until``: control events fire, arrivals
+            enter the admission flow at their arrival time."""
             while pending and pending[0][0] <= until:
-                entry = pending.popleft()
-                tk = self._arrival_ticket(entry[1:], submitted_at=entry[0])
+                t, kind, _seq, payload = pending.popleft()
+                if kind == 0:
+                    payload(self)
+                    continue
+                tk = self._arrival_ticket(payload, submitted_at=t)
                 tickets.append(tk)
-                if inflight < self.max_inflight:
-                    admit(tk, at=entry[0])
-                else:
-                    waiting.append(tk)
+                offer(tk, at=t)
 
         def drain_waiting() -> None:
-            while waiting and inflight < self.max_inflight:
-                admit(waiting.popleft(), at=clock.now())
+            while waiting:
+                tk = waiting[0]
+                decision = self.policy.admit(tenant=tk.tenant,
+                                             priority=tk.priority,
+                                             inflight=inflight)
+                if decision.admit:
+                    waiting.popleft()
+                    if decision.evict is not None:
+                        evict(decision.evict)
+                    admit(tk, at=clock.now())
+                elif decision.shed:
+                    # the tenant saturated while this submitter waited
+                    self._shed_ticket(waiting.popleft(),
+                                      decision.reason, clock.now())
+                else:
+                    break
 
         while pending or waiting or self._queued():
             if not self._queued() and not waiting:
-                # idle: jump to the next arrival
+                # idle: jump to the next arrival or control event
                 clock.advance_to(pending[0][0])
             intake(clock.now())
             drain_waiting()
@@ -1024,15 +1279,31 @@ class PipelineServer:
             # mid-execution admission times — and in-window arrivals
             # join until the batch fills
             window_open = max(self._oldest_admitted(), clock.now())
-            window_close = window_open + self.batch_window_s
+            window_close = window_open + self.policy.window_s()
             while (self._queued() < self.max_batch
-                   and inflight < self.max_inflight
                    and pending and pending[0][0] <= window_close):
-                entry = pending.popleft()
-                clock.advance_to(entry[0])
-                tk = self._arrival_ticket(entry[1:], submitted_at=entry[0])
+                t, kind, _seq, payload = pending[0]
+                if kind == 0:
+                    pending.popleft()
+                    clock.advance_to(t)
+                    payload(self)
+                    continue
+                tenant, priority = self._arrival_meta(payload)
+                decision = self.policy.admit(tenant=tenant,
+                                             priority=priority,
+                                             inflight=inflight)
+                if not decision.admit and not decision.shed:
+                    break  # would block: a later intake parks it
+                pending.popleft()
+                clock.advance_to(t)
+                tk = self._arrival_ticket(payload, submitted_at=t)
                 tickets.append(tk)
-                admit(tk, at=entry[0])
+                if decision.shed:
+                    self._shed_ticket(tk, decision.reason, clock.now())
+                    continue
+                if decision.evict is not None:
+                    evict(decision.evict)
+                admit(tk, at=t)
             if self._queued() < self.max_batch:
                 # a live server cannot know no further request is coming:
                 # it always waits the window out
@@ -1053,9 +1324,18 @@ class PipelineServer:
         counters (submit calls, merged stages/requests) of *this serving
         episode* — deltas since start()/run_trace, so the coalescing
         evidence sits next to the latency evidence it belongs to even on
-        a reused executor."""
+        a reused executor. ``control`` snapshots the policy's state;
+        ``swaps`` lists this episode's hot swaps, each with the plan
+        hashes and the ``recent`` sensor summary measured before the
+        swap and again at report time."""
         dispatch = {k: v - self._dispatch_base.get(k, 0)
                     for k, v in self.executor.dispatch_stats.items()}
+        control = {"policy": self.policy.name}
+        control.update(self.policy.snapshot())
+        swaps = [dict(rec,
+                      after=self._swap_stats(rec["tenant"]
+                                             ).recent_summary())
+                 for rec in self._swaps]
         # cache counters are episode deltas like the dispatch counters;
         # entry counts are absolute (the cache outlives episodes)
         cc = self.executor.call_cache
@@ -1068,4 +1348,5 @@ class PipelineServer:
             cache["mode"] = cc.mode
         return self.stats.report(
             elapsed_s=elapsed_s, slo_s=self.slo_s,
-            extra={"dispatch": dispatch, "call_cache": cache})
+            extra={"dispatch": dispatch, "call_cache": cache,
+                   "control": control, "swaps": swaps})

@@ -1,0 +1,545 @@
+"""Serving control plane: policies, per-tenant shedding, hot plan swap.
+
+The contracts under test:
+
+- **StaticPolicy is the status quo.** A server with the default policy
+  and one with an explicit ``StaticPolicy`` produce bit-identical
+  tickets and reports on the same trace — the control-plane extraction
+  changed structure, not behavior.
+- **Shedding is per tenant, prioritized, and observable.** Under
+  ``AdaptivePolicy`` a flooding tenant's overflow is shed (blocking
+  callers included) with ``reason="tenant_queue"``, higher-priority
+  arrivals evict queued lower-priority ones, other tenants are
+  untouched, and every shed is counted per tenant and per reason.
+  ``ServerSaturated`` carries which bound fired.
+- **The sensor drives the actuators.** Recent SLO attainment below
+  target shrinks the micro-batch window (AIMD) and tightens queue
+  bounds; recovery reopens both.
+- **Hot swap is drain-free and gated.** ``swap_plan`` mid-trace routes
+  subsequent admissions to the new plan while already-admitted tickets
+  finish on the old one (both can share a batch), statically-broken
+  plans are refused with the incumbent untouched, ``SearchResult``
+  promotes directly, and the swap lands in ``report()`` with both plan
+  hashes. With a persistent store that already holds both plans' calls,
+  a swapped server serves in replay mode with zero backend calls.
+"""
+
+import threading
+
+import pytest
+
+from repro.cache import (PersistentCallCache, ReplayBackend, open_store)
+from repro.engine.backend import SimBackend
+from repro.engine.executor import Executor
+from repro.engine.operators import clone_pipeline, pipeline_hash
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline.optimizers import PlanPoint, SearchResult
+from repro.pipeline.spec import PipelineValidationError
+from repro.serving.control import (GLOBAL_INFLIGHT, TENANT_QUEUE,
+                                   AdaptivePolicy, StaticPolicy,
+                                   resolve_plan)
+from repro.serving.multi_server import (MultiPipelineServer, TenantSpec,
+                                        UnknownTenant)
+from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
+                                           ServerSaturated, ServerStats,
+                                           VirtualClock,
+                                           VirtualLatencyBackend)
+
+CUAD = WORKLOADS["cuad"]()
+MEDEC = WORKLOADS["medec"]()
+
+
+def _docs(workload, n, prefix="r"):
+    return [dict(workload.sample[i % len(workload.sample)],
+                 id=f"{prefix}{i}") for i in range(n)]
+
+
+def _variant(workload, suffix=" Be terse."):
+    """A same-shape plan that hashes (and answers) differently."""
+    cfg = clone_pipeline(workload.initial_pipeline)
+    cfg["name"] = cfg["name"] + "_v2"
+    cfg["operators"][0]["prompt"] += suffix
+    return cfg
+
+
+def _trace_server(workload, *, policy=None, max_batch=8, workers=2,
+                  base_s=0.05, window_s=0.02, max_inflight=32,
+                  slo_s=None, pipeline=None, **kw):
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        SimBackend(seed=0, domain=workload.domain), clock, base_s=base_s,
+        preferred_batch_size=64)
+    return PipelineServer(
+        pipeline if pipeline is not None else workload.initial_pipeline,
+        backend, max_inflight=max_inflight, max_batch=max_batch,
+        batch_window_s=window_s, workers=workers, clock=clock,
+        slo_s=slo_s, policy=policy, **kw)
+
+
+def _multi_trace_server(specs, workload, *, policy=None, max_batch=8,
+                        workers=2, base_s=0.05, window_s=0.02,
+                        max_inflight=64, slo_s=None):
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(
+        SimBackend(seed=0, domain=workload.domain), clock, base_s=base_s,
+        preferred_batch_size=64)
+    return MultiPipelineServer(specs, backend, max_inflight=max_inflight,
+                               max_batch=max_batch,
+                               batch_window_s=window_s, workers=workers,
+                               clock=clock, slo_s=slo_s, policy=policy)
+
+
+def _ticket_fp(tk):
+    return (tk.rid, tk.submitted_at, tk.admitted_at, tk.started_at,
+            tk.finished_at, type(tk.error).__name__, tk.docs)
+
+
+# -- StaticPolicy == the pre-control-plane server ------------------------------
+
+
+def test_static_policy_explicit_equals_default_single():
+    docs = _docs(CUAD, 10)
+    arrivals = [(0.008 * i, d) for i, d in enumerate(docs)]
+    outs = []
+    for policy in (None, StaticPolicy()):
+        srv = _trace_server(CUAD, policy=policy, max_batch=4,
+                            max_inflight=6, slo_s=0.5)
+        tks = srv.run_trace(arrivals)
+        outs.append(([_ticket_fp(t) for t in tks], srv.report()))
+    assert outs[0][0] == outs[1][0]
+    # reports identical except the policy's own label
+    assert outs[0][1] == outs[1][1]
+    assert outs[0][1]["control"]["policy"] == "static"
+
+
+def test_static_policy_explicit_equals_default_multi():
+    specs = [TenantSpec("a", CUAD.initial_pipeline, weight=2.0,
+                        slo_s=0.5),
+             TenantSpec("b", MEDEC.initial_pipeline, weight=1.0)]
+    docs_a = _docs(CUAD, 6, "a")
+    docs_b = _docs(MEDEC, 6, "b")
+    arrivals = sorted(
+        [(0.01 * i, "a", d) for i, d in enumerate(docs_a)] +
+        [(0.013 * i, "b", d) for i, d in enumerate(docs_b)],
+        key=lambda e: e[0])
+    outs = []
+    for policy in (None, StaticPolicy()):
+        # MEDEC domain backend serves both (SimBackend answers any op)
+        srv = _multi_trace_server(specs, MEDEC, policy=policy,
+                                  max_batch=4, max_inflight=8)
+        tks = srv.run_trace(arrivals)
+        outs.append(([_ticket_fp(t) for t in tks], srv.report()))
+    assert outs[0] == outs[1]
+
+
+def test_static_policy_never_sheds_and_reports_global_reason():
+    srv = _trace_server(CUAD, max_batch=2, max_inflight=2, window_s=0.0)
+    # a burst far beyond max_inflight: every request still completes
+    # (blocked submitters wait), nothing is shed
+    tks = srv.run_trace([(0.0, d) for d in _docs(CUAD, 7)])
+    assert all(t.error is None for t in tks)
+    rep = srv.report()
+    assert rep["rejected"] == 0 and rep["rejected_reasons"] == {}
+
+
+# -- satellite: ServerSaturated.reason + per-reason shed counters --------------
+
+
+class GateBackend(SimBackend):
+    """Blocks every submit until the test releases the gate."""
+
+    concurrent_submit = False
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def submit(self, requests):
+        self.entered.set()
+        assert self.gate.wait(10), "test never released the gate"
+        return super().submit(requests)
+
+
+def test_saturated_carries_global_inflight_reason_threaded():
+    be = GateBackend(seed=0, domain=MEDEC.domain)
+    docs = _docs(MEDEC, 3)
+    srv = PipelineServer(MEDEC.initial_pipeline, be, max_inflight=2,
+                         max_batch=2, batch_window_s=0.001, workers=2)
+    srv.start()
+    t0, t1 = srv.submit(docs[0]), srv.submit(docs[1])
+    assert be.entered.wait(10)
+    with pytest.raises(ServerSaturated) as exc:
+        srv.submit(docs[2], block=False)
+    assert exc.value.reason == GLOBAL_INFLIGHT
+    assert exc.value.tenant is None
+    be.gate.set()
+    assert t0.result(timeout=10) and t1.result(timeout=10)
+    srv.shutdown()
+    rep = srv.report()
+    assert rep["rejected"] == 1
+    assert rep["rejected_reasons"] == {GLOBAL_INFLIGHT: 1}
+
+
+def test_adaptive_sheds_saturated_tenant_even_blocking_threaded():
+    be = GateBackend(seed=0, domain=MEDEC.domain)
+    srv = PipelineServer(
+        MEDEC.initial_pipeline, be, max_inflight=16, max_batch=1,
+        batch_window_s=0.001, workers=1, slo_s=5.0,
+        policy=AdaptivePolicy(max_queue=1, min_queue=1))
+    srv.start()
+    docs = _docs(MEDEC, 4)
+    t0 = srv.submit(docs[0])
+    assert be.entered.wait(10)   # t0 executing, queue empty
+    t1 = srv.submit(docs[1])     # queued: bound (1) reached
+    with pytest.raises(ServerSaturated) as exc:
+        srv.submit(docs[2])      # blocking, but shed — not parked
+    assert exc.value.reason == TENANT_QUEUE
+    # a higher-priority submit evicts the queued low-priority t1
+    t2 = srv.submit(docs[3], priority=1)
+    assert isinstance(t1.error, ServerSaturated)
+    assert t1.error.reason == TENANT_QUEUE
+    be.gate.set()
+    assert t0.result(timeout=10) and t2.result(timeout=10)
+    srv.shutdown()
+    rep = srv.report()
+    assert rep["rejected"] == 2
+    assert rep["rejected_reasons"] == {TENANT_QUEUE: 2}
+
+
+# -- per-tenant shedding + priority eviction in traces -------------------------
+
+
+def _shed_specs():
+    return [TenantSpec("steady", CUAD.initial_pipeline, weight=1.0,
+                       slo_s=5.0),
+            TenantSpec("flood", MEDEC.initial_pipeline, weight=1.0,
+                       slo_s=5.0)]
+
+
+def _shed_arrivals():
+    steady = _docs(CUAD, 2, "s")
+    flood = _docs(MEDEC, 6, "f")
+    hp = dict(MEDEC.sample[0], id="hp0")
+    return ([(0.0, "steady", steady[0]), (0.03, "steady", steady[1])] +
+            [(0.001 * i, "flood", d, 0) for i, d in enumerate(flood)] +
+            [(0.005, "flood", hp, 1)])
+
+
+def test_adaptive_sheds_flooding_tenant_only_with_priority_eviction():
+    srv = _multi_trace_server(
+        _shed_specs(), MEDEC,
+        policy=AdaptivePolicy(max_queue=2, min_queue=1), window_s=0.02)
+    tks = srv.run_trace(_shed_arrivals())
+    by_tenant = {}
+    for tk in tks:
+        by_tenant.setdefault(tk.tenant, []).append(tk)
+
+    # the steady tenant is untouched by the flood next door
+    assert all(t.error is None for t in by_tenant["steady"])
+
+    flood = by_tenant["flood"]
+    served = [t for t in flood if t.error is None]
+    shed = [t for t in flood if t.error is not None]
+    # bound 2 admits the first two flood docs; the rest shed at arrival,
+    # and the priority-1 arrival evicts the youngest queued priority-0
+    # ticket instead of being shed itself
+    assert len(shed) == 5
+    assert all(isinstance(t.error, ServerSaturated) for t in shed)
+    assert all(t.error.reason == TENANT_QUEUE for t in shed)
+    assert all(t.error.tenant == "flood" for t in shed)
+    assert [t.doc["id"] for t in served] == ["f0", "hp0"]
+    evicted = [t for t in shed if t.admitted_at > 0.0]
+    assert [t.doc["id"] for t in evicted] == ["f1"]
+
+    rep = srv.report()
+    assert rep["rejected"] == 5
+    assert rep["rejected_reasons"] == {TENANT_QUEUE: 5}
+    assert rep["tenants"]["flood"]["rejected"] == 5
+    assert rep["tenants"]["flood"]["rejected_reasons"] == \
+        {TENANT_QUEUE: 5}
+    assert rep["tenants"]["steady"]["rejected"] == 0
+
+
+def test_adaptive_trace_is_reproducible():
+    reports = []
+    for _ in range(2):
+        srv = _multi_trace_server(
+            _shed_specs(), MEDEC,
+            policy=AdaptivePolicy(max_queue=2, min_queue=1),
+            window_s=0.02)
+        srv.run_trace(_shed_arrivals())
+        reports.append(srv.report())
+    assert reports[0] == reports[1]
+
+
+# -- the sensor drives the actuators ------------------------------------------
+
+
+def _record(rid, latency, ok=True):
+    return RequestRecord(rid=rid, submitted_at=0.0, started_at=0.0,
+                         finished_at=latency, ok=ok, batch_size=1)
+
+
+def test_adaptive_window_aimd_shrinks_and_recovers():
+    srv = _trace_server(CUAD, slo_s=0.1, window_s=0.02,
+                        policy=AdaptivePolicy(slo_target=0.9,
+                                              max_queue=8, min_queue=2))
+    policy = srv.policy
+    assert policy.window_s() == pytest.approx(0.02)  # no signal yet
+    for i in range(6):  # every recent request violates the 0.1s SLO
+        srv.stats.observe(_record(i, 0.5))
+    assert srv.stats.recent_summary()["attainment"] == 0.0
+    w1 = policy.window_s()
+    w2 = policy.window_s()
+    assert w1 == pytest.approx(0.01) and w2 == pytest.approx(0.005)
+    # the queue bound tightens to the floor with attainment at zero
+    assert policy.queue_bound(None) == 2
+    assert srv.report()["control"]["queue_bound"] == 2
+    # recovery: healthy recent window -> additive re-opening, capped
+    for i in range(600):  # roll the violators out of the window
+        srv.stats.observe(_record(100 + i, 0.01))
+    assert policy.queue_bound(None) == 8
+    w3 = policy.window_s()
+    assert w3 == pytest.approx(0.005 + 0.25 * 0.02)
+    for _ in range(10):
+        policy.window_s()
+    assert policy.window_s() == pytest.approx(0.02)  # capped at base
+
+
+def test_adaptive_shrinks_window_end_to_end():
+    # base_s=0.05 >> slo_s=0.01: every completed request violates, so
+    # the controller walks the window down batch after batch
+    srv = _trace_server(CUAD, slo_s=0.01, window_s=0.02, max_batch=2,
+                        policy=AdaptivePolicy(slo_target=0.9,
+                                              max_queue=32))
+    docs = _docs(CUAD, 10)
+    tks = srv.run_trace([(0.2 * i, d) for i, d in enumerate(docs)])
+    assert all(t.error is None for t in tks)
+    rep = srv.report()
+    assert rep["control"]["policy"] == "adaptive"
+    assert rep["control"]["window_s"] < 0.02
+    assert rep["control"]["slo_target"] == 0.9
+
+
+def test_adaptive_policy_requires_slo_target():
+    with pytest.raises(ValueError, match="SLO target"):
+        _trace_server(CUAD, policy=AdaptivePolicy())  # no slo anywhere
+    # a tenant-level slo satisfies the multi-tenant host
+    srv = _multi_trace_server(
+        [TenantSpec("a", CUAD.initial_pipeline, slo_s=0.5)], CUAD,
+        policy=AdaptivePolicy())
+    assert srv.policy.name == "adaptive"
+
+
+def test_policy_binds_to_one_server_only():
+    policy = StaticPolicy()
+    _trace_server(CUAD, policy=policy)
+    with pytest.raises(RuntimeError, match="bound"):
+        _trace_server(CUAD, policy=policy)
+
+
+# -- hot plan swap -------------------------------------------------------------
+
+
+def test_swap_plan_mid_trace_no_drain():
+    plan_a = clone_pipeline(CUAD.initial_pipeline)
+    plan_b = _variant(CUAD)
+    docs = _docs(CUAD, 3)
+    srv = _trace_server(CUAD, window_s=0.05, base_s=0.05)
+    # r0/r1 admitted before the swap at t=0.02, r2 after — all three
+    # coalesce into ONE batch, so the swap provably drained nothing
+    tks = srv.run_trace(
+        [(0.0, docs[0]), (0.01, docs[1]), (0.03, docs[2])],
+        events=[(0.02, lambda s: s.swap_plan(plan_b))])
+    assert all(t.error is None for t in tks)
+    assert [pipeline_hash(t.plan) for t in tks] == [
+        pipeline_hash(plan_a), pipeline_hash(plan_a),
+        pipeline_hash(plan_b)]
+    assert len({t.started_at for t in tks}) == 1  # one shared batch
+
+    # outputs match direct execution of the plan each ticket bound
+    ex = Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0)
+    for tk, plan in zip(tks, (plan_a, plan_a, plan_b)):
+        out, _ = ex.run(plan, [tk.doc])
+        assert tk.docs == out
+
+    rep = srv.report()
+    assert len(rep["swaps"]) == 1
+    swap = rep["swaps"][0]
+    assert swap["old_hash"] == pipeline_hash(plan_a)
+    assert swap["new_hash"] == pipeline_hash(plan_b)
+    assert swap["at"] == pytest.approx(0.02)
+    assert swap["before"]["n"] == 0       # nothing finished pre-swap
+    assert swap["after"]["n"] == 3        # measured again at report time
+    assert rep["completed"] == 3
+
+
+def test_swap_rejected_by_analyzer_keeps_incumbent():
+    bad = _variant(CUAD)
+    bad["operators"][0]["model"] = "no_such_model"
+    srv = _trace_server(CUAD)
+    old_hash = pipeline_hash(srv._plan_for(None))
+    with pytest.raises(PipelineValidationError):
+        srv.swap_plan(bad)
+    assert pipeline_hash(srv._plan_for(None)) == old_hash
+    assert srv.report()["swaps"] == []
+    # the incumbent still serves
+    tks = srv.run_trace([(0.0, _docs(CUAD, 1)[0])])
+    assert tks[0].error is None
+
+
+def test_swap_accepts_search_result():
+    plan_b = _variant(CUAD)
+    result = SearchResult(
+        optimizer="moar", budget_used=1, wall_s=0.0,
+        evaluated=[PlanPoint(pipeline=plan_b, acc=0.9, cost=1.0)],
+        frontier=[PlanPoint(pipeline=plan_b, acc=0.9, cost=1.0)])
+    assert resolve_plan(result) == plan_b
+    srv = _trace_server(CUAD)
+    record = srv.swap_plan(result)
+    assert record["new_hash"] == pipeline_hash(plan_b)
+    assert pipeline_hash(srv._plan_for(None)) == pipeline_hash(plan_b)
+
+
+def test_multi_swap_routes_one_tenant_only():
+    plan_b = _variant(MEDEC)
+    specs = [TenantSpec("a", MEDEC.initial_pipeline),
+             TenantSpec("b", MEDEC.initial_pipeline)]
+    srv = _multi_trace_server(specs, MEDEC, window_s=0.0)
+    docs = _docs(MEDEC, 2)
+    tks = srv.run_trace(
+        [(0.0, "a", docs[0]), (0.0, "b", docs[0]),
+         (0.4, "a", docs[1]), (0.4, "b", docs[1])],
+        events=[(0.3, lambda s: s.swap_plan("b", plan_b))])
+    assert all(t.error is None for t in tks)
+    plans = {(tk.tenant, tk.doc["id"]): pipeline_hash(tk.plan)
+             for tk in tks}
+    initial = pipeline_hash(srv._plan_for("a"))
+    assert plans[("a", "r0")] == plans[("a", "r1")] == initial
+    assert plans[("b", "r0")] == initial
+    assert plans[("b", "r1")] == pipeline_hash(plan_b)
+    rep = srv.report()
+    assert [s["tenant"] for s in rep["swaps"]] == ["b"]
+    with pytest.raises(UnknownTenant):
+        srv.swap_plan("nope", plan_b)
+
+
+def test_threaded_swap_in_flight_finishes_on_old_plan():
+    be = GateBackend(seed=0, domain=CUAD.domain)
+    plan_b = _variant(CUAD)
+    srv = PipelineServer(CUAD.initial_pipeline, be, max_inflight=8,
+                         max_batch=1, batch_window_s=0.0, workers=1)
+    srv.start()
+    docs = _docs(CUAD, 2)
+    t0 = srv.submit(docs[0])
+    assert be.entered.wait(10)          # t0's batch is executing
+    srv.swap_plan(plan_b)               # no drain: returns immediately
+    t1 = srv.submit(docs[1])            # admitted under the new plan
+    be.gate.set()
+    assert t0.result(timeout=10) and t1.result(timeout=10)
+    srv.shutdown()
+    ex = Executor(SimBackend(seed=0, domain=CUAD.domain), seed=0)
+    assert t0.docs == ex.run(CUAD.initial_pipeline, [docs[0]])[0]
+    assert t1.docs == ex.run(plan_b, [docs[1]])[0]
+
+
+# -- satellite: hot swap x persistent cache (zero-call replay) -----------------
+
+
+def test_swap_warm_starts_from_persistent_store(tmp_path):
+    plan_a = clone_pipeline(MEDEC.initial_pipeline)
+    plan_b = _variant(MEDEC)
+    docs = _docs(MEDEC, 4)
+    store = open_store(str(tmp_path / "swap.sqlite"))
+
+    # record both plans' calls over the docs into one store
+    rec = Executor(SimBackend(seed=0, domain=MEDEC.domain), seed=0,
+                   call_cache=PersistentCallCache(store))
+    want_a = [rec.run(plan_a, [d])[0] for d in docs]
+    want_b = [rec.run(plan_b, [d])[0] for d in docs]
+    assert len(store) > 0
+
+    # replay serving: the store is the only substrate — a request
+    # reaching the backend raises CacheMiss and fails its ticket
+    clock = VirtualClock()
+    rb = ReplayBackend(SimBackend(seed=0, domain=MEDEC.domain))
+    backend = VirtualLatencyBackend(rb, clock, base_s=0.05)
+    srv = PipelineServer(plan_a, backend, max_batch=2,
+                         batch_window_s=0.01, workers=2, clock=clock,
+                         call_cache=PersistentCallCache(store,
+                                                        mode="replay"))
+    tks = srv.run_trace(
+        [(0.1 * i, d) for i, d in enumerate(docs)],
+        events=[(0.15, lambda s: s.swap_plan(plan_b))])
+    assert all(t.error is None for t in tks)
+    assert rb.submit_calls == 0  # the whole episode, swap included
+    hashes = [pipeline_hash(t.plan) for t in tks]
+    assert hashes[:2] == [pipeline_hash(plan_a)] * 2
+    assert hashes[2:] == [pipeline_hash(plan_b)] * 2
+    for tk, want in zip(tks, [want_a[0], want_a[1],
+                              want_b[2], want_b[3]]):
+        assert tk.docs == want
+    rep = srv.report()
+    assert rep["call_cache"]["mode"] == "replay"
+    assert len(rep["swaps"]) == 1
+
+
+# -- satellite: P2Quantile / MetricSketch edge behavior ------------------------
+
+
+def test_p2_quantile_tiny_samples_are_exact():
+    from repro.serving.pipeline_server import P2Quantile, _percentile
+    for n in range(1, 5):
+        vals = [float(i + 1) for i in range(n)]
+        q = P2Quantile(0.95)
+        for v in vals:
+            q.observe(v)
+        assert q.value() == _percentile(sorted(vals), 95.0)
+    assert P2Quantile(0.5)._heights == []
+    assert P2Quantile(0.5).value() == 0.0  # empty stream
+
+
+def test_p2_quantile_constant_stream_stays_constant():
+    from repro.serving.pipeline_server import P2Quantile
+    for q in (0.5, 0.95, 0.99):
+        est = P2Quantile(q)
+        for _ in range(100):
+            est.observe(7.25)
+        assert est.value() == 7.25
+
+
+def test_metric_sketch_tiny_and_constant():
+    from repro.serving.pipeline_server import MetricSketch
+    m = MetricSketch()
+    assert m.dist() == {"p50": 0.0, "p95": 0.0, "p99": 0.0,
+                        "mean": 0.0, "max": 0.0}
+    m.observe(3.0)
+    d = m.dist()  # n=1: every percentile IS the sample
+    assert d["p50"] == d["p95"] == d["p99"] == d["max"] == 3.0
+    assert d["mean"] == 3.0
+    c = MetricSketch()
+    for _ in range(50):
+        c.observe(2.0)
+    d = c.dist()
+    assert d == {"p50": 2.0, "p95": 2.0, "p99": 2.0,
+                 "mean": 2.0, "max": 2.0}
+
+
+def test_recent_summary_both_modes():
+    for mode in ("exact", "sketch"):
+        st = ServerStats(mode=mode, slo_s=0.1, window=4)
+        assert st.recent_summary() == {
+            "n": 0, "mean_latency_s": 0.0, "p95_latency_s": 0.0,
+            "slo_s": 0.1, "violations": 0, "attainment": 1.0}
+        for i in range(6):  # first two violators roll out of window=4
+            st.observe(_record(i, 0.5 if i < 2 else 0.01))
+        s = st.recent_summary()
+        assert s["n"] == 4 and s["violations"] == 0
+        assert s["attainment"] == 1.0
+        assert s["mean_latency_s"] == pytest.approx(0.01)
+    # no SLO configured: attainment is no-signal, not a number
+    st = ServerStats(mode="sketch", slo_s=None)
+    st.observe(_record(1, 0.5))
+    s = st.recent_summary()
+    assert s["violations"] is None and s["attainment"] is None

@@ -209,6 +209,12 @@ def test_tenant_spec_validation():
     with pytest.raises(ValueError, match="weight"):
         MultiPipelineServer([("a", CUAD.initial_pipeline, 0.0)],
                             SimBackend(seed=0))
+    # regression: `weight > 0` alone let inf/nan through — inf makes
+    # the DRR quantum infinite, so one tenant monopolizes every cycle
+    for bad in (float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="finite"):
+            MultiPipelineServer([("a", CUAD.initial_pipeline, bad)],
+                                SimBackend(seed=0))
     srv = MultiPipelineServer({"m": MEDEC.initial_pipeline},
                               SimBackend(seed=0))
     assert srv.tenants == ("m",)

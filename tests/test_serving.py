@@ -314,10 +314,12 @@ def test_admission_backpressure_threaded():
     t0, t1 = srv.submit(docs[0]), srv.submit(docs[1])
     assert be.entered.wait(10)
     # both slots taken: non-blocking and bounded-wait submits shed load
-    with pytest.raises(ServerSaturated):
+    with pytest.raises(ServerSaturated) as exc:
         srv.submit(docs[2], block=False)
-    with pytest.raises(ServerSaturated):
+    assert exc.value.reason == "global_inflight"
+    with pytest.raises(ServerSaturated) as exc:
         srv.submit(docs[2], timeout=0.05)
+    assert exc.value.reason == "global_inflight"
     be.gate.set()
     assert t0.result(timeout=10) and t1.result(timeout=10)
     t2 = srv.submit(docs[2])     # slots free again: blocking submit works
@@ -325,6 +327,7 @@ def test_admission_backpressure_threaded():
     srv.shutdown()
     rep = srv.report()
     assert rep["rejected"] == 2 and rep["completed"] == 3
+    assert rep["rejected_reasons"] == {"global_inflight": 2}
 
 
 # -- per-request failure isolation ---------------------------------------------
