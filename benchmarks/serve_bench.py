@@ -35,20 +35,33 @@ heterogeneous tenants (one workload pipeline each, weighted) share one
   expectation within one DRR cycle (the scheduler's granularity), and
   no tenant misses the first scheduling cycle.
 
+``--adaptive`` runs the control-plane benchmark (StaticPolicy
+bit-identity, adaptive-vs-static SLO attainment, drain-free hot swap);
+``--reopt`` runs the serve-and-optimize benchmark (idle-loop
+bit-identity, mid-trace auto-promotion improving the measured cost/SLO
+mix on a drifted trace, warm-started from the serving path's
+persistent store).
+
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json BENCH_serve.json
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --tenants 3 \\
       --json BENCH_serve_multitenant.json
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --reopt \\
+      --json BENCH_serve_reopt.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import random
+import tempfile
+import warnings
 from collections import Counter
 from typing import Any, Dict, List, Tuple
 
+from repro.cache import PersistentCallCache, open_store
 from repro.engine.backend import SimBackend
 from repro.engine.executor import Executor
 from repro.engine.operators import clone_pipeline, pipeline_hash
@@ -58,6 +71,7 @@ from repro.serving.multi_server import MultiPipelineServer, TenantSpec
 from repro.serving.pipeline_server import (PipelineServer, ServeTicket,
                                            VirtualClock,
                                            VirtualLatencyBackend)
+from repro.serving.reopt import ReoptLoop
 
 
 def poisson_arrivals(workload, n: int, rps: float, seed: int
@@ -76,7 +90,7 @@ def poisson_arrivals(workload, n: int, rps: float, seed: int
 
 def run_mode(workload, arrivals, *, max_batch: int, workers: int,
              base_ms: float, per_request_ms: float, window_ms: float,
-             max_inflight: int, slo_ms: float, seed: int, policy=None
+             max_inflight: int, slo_s: float, seed: int, policy=None
              ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
     clock = VirtualClock()
     backend = VirtualLatencyBackend(
@@ -87,7 +101,7 @@ def run_mode(workload, arrivals, *, max_batch: int, workers: int,
                             max_inflight=max_inflight, max_batch=max_batch,
                             batch_window_s=window_ms / 1000.0,
                             workers=workers, clock=clock,
-                            slo_s=slo_ms / 1000.0, policy=policy)
+                            slo_s=slo_s, policy=policy)
     tickets = server.run_trace(arrivals)
     return tickets, server.report()
 
@@ -100,7 +114,7 @@ def _usage_fp(tickets: List[ServeTicket]) -> Dict[str, Tuple]:
 
 def bench(workload_name: str, *, n: int, rps: float, seed: int,
           base_ms: float, per_request_ms: float, window_ms: float,
-          max_batch: int, workers: int, max_inflight: int, slo_ms: float,
+          max_batch: int, workers: int, max_inflight: int, slo_s: float,
           min_speedup: float) -> Dict[str, Any]:
     w = WORKLOADS[workload_name]()
     arrivals = poisson_arrivals(w, n, rps, seed)
@@ -116,7 +130,7 @@ def bench(workload_name: str, *, n: int, rps: float, seed: int,
         tks, rep = run_mode(w, arrivals, base_ms=base_ms,
                             per_request_ms=per_request_ms,
                             window_ms=window_ms, max_inflight=max_inflight,
-                            slo_ms=slo_ms, seed=seed, **kw)
+                            slo_s=slo_s, seed=seed, **kw)
         tickets[label], reports[label] = tks, rep
         lat = rep["latency_s"]
         print(f"  {label:12s}: {rep['throughput_rps']:7.1f} req/s  "
@@ -208,7 +222,7 @@ def _mt_usage_fp(tickets: List[ServeTicket]) -> Dict[str, Tuple]:
 def bench_multitenant(n_tenants: int, *, n_per_tenant: int, rps: float,
                       seed: int, base_ms: float, per_request_ms: float,
                       window_ms: float, max_batch: int, workers: int,
-                      max_inflight: int, slo_ms: float,
+                      max_inflight: int, slo_s: float,
                       min_speedup: float) -> Dict[str, Any]:
     specs = _tenant_specs(n_tenants)
     names = [s.name for s in specs]
@@ -224,7 +238,7 @@ def bench_multitenant(n_tenants: int, *, n_per_tenant: int, rps: float,
                            per_request_ms=per_request_ms, seed=seed),
         max_inflight=max_inflight, max_batch=max_batch,
         batch_window_s=window_ms / 1000.0, workers=workers, clock=clock,
-        slo_s=slo_ms / 1000.0)
+        slo_s=slo_s)
     tickets = server.run_trace(arrivals)
     coal = server.report()
     assert all(tk.error is None for tk in tickets)
@@ -243,7 +257,7 @@ def bench_multitenant(n_tenants: int, *, n_per_tenant: int, rps: float,
                         per_request_ms=per_request_ms, seed=seed),
             max_inflight=max_inflight, max_batch=max_batch,
             batch_window_s=window_ms / 1000.0, workers=workers,
-            clock=c2, slo_s=slo_ms / 1000.0)
+            clock=c2, slo_s=slo_s)
         solo_tks = solo.run_trace(sub)
         rep = solo.report()
         seq_elapsed += rep["elapsed_s"]
@@ -346,7 +360,7 @@ def _ticket_fp(tickets: List[ServeTicket]) -> List[Tuple]:
 def _identity_phase(*, n: int, rps: float, seed: int, base_ms: float,
                     per_request_ms: float, window_ms: float,
                     max_batch: int, workers: int, max_inflight: int,
-                    slo_ms: float) -> Dict[str, Any]:
+                    slo_s: float) -> Dict[str, Any]:
     """Gate: the control-plane extraction is behavior-preserving — a
     server with the default policy and one with an explicit
     ``StaticPolicy`` produce bit-identical tickets, outputs, and
@@ -359,7 +373,7 @@ def _identity_phase(*, n: int, rps: float, seed: int, base_ms: float,
                             workers=workers, base_ms=base_ms,
                             per_request_ms=per_request_ms,
                             window_ms=window_ms,
-                            max_inflight=max_inflight, slo_ms=slo_ms,
+                            max_inflight=max_inflight, slo_s=slo_s,
                             seed=seed, policy=policy)
         runs.append((_ticket_fp(tks),
                      {tk.doc["id"]: tk.docs for tk in tks}, rep))
@@ -400,7 +414,7 @@ def _bursty_arrivals(seed: int, *, steady_n: int, steady_rps: float,
 
 def _bursty_phase(*, seed: int, base_ms: float, per_request_ms: float,
                   window_ms: float, max_batch: int, workers: int,
-                  slo_ms: float, steady_n: int, steady_rps: float,
+                  slo_s: float, steady_n: int, steady_rps: float,
                   bursts: int, burst_size: int, burst_gap_s: float,
                   burst_queue: int) -> Dict[str, Any]:
     """Gate: at equal load, AdaptivePolicy strictly improves the steady
@@ -411,7 +425,6 @@ def _bursty_phase(*, seed: int, base_ms: float, per_request_ms: float,
                                 steady_rps=steady_rps, bursts=bursts,
                                 burst_size=burst_size,
                                 burst_gap_s=burst_gap_s)
-    slo_s = slo_ms / 1000.0
     results: Dict[str, Any] = {}
     for label in ("static", "adaptive"):
         specs = [TenantSpec("steady", w.initial_pipeline, weight=1.0,
@@ -476,7 +489,7 @@ def _bursty_phase(*, seed: int, base_ms: float, per_request_ms: float,
 
 def _swap_phase(*, seed: int, base_ms: float, per_request_ms: float,
                 window_ms: float, max_batch: int, workers: int,
-                slo_ms: float, n: int, gap_s: float,
+                slo_s: float, n: int, gap_s: float,
                 swap_at_s: float) -> Dict[str, Any]:
     """Gate: a mid-trace ``swap_plan`` drains nothing — tickets
     admitted before the swap resolve on the old plan, later ones on the
@@ -498,7 +511,7 @@ def _swap_phase(*, seed: int, base_ms: float, per_request_ms: float,
             preferred_batch_size=64),
         max_inflight=4 * n, max_batch=max_batch,
         batch_window_s=window_ms / 1000.0, workers=workers,
-        clock=clock, slo_s=slo_ms / 1000.0)
+        clock=clock, slo_s=slo_s)
     tks = server.run_trace(
         [(gap_s * i, d) for i, d in enumerate(docs)],
         events=[(swap_at_s, lambda s: s.swap_plan(plan_b))])
@@ -530,7 +543,7 @@ def _swap_phase(*, seed: int, base_ms: float, per_request_ms: float,
 
 def bench_adaptive(*, seed: int, base_ms: float, per_request_ms: float,
                    window_ms: float, max_batch: int, workers: int,
-                   max_inflight: int, slo_ms: float, n: int,
+                   max_inflight: int, slo_s: float, n: int,
                    rps: float) -> Dict[str, Any]:
     print(f"== control plane: identity + bursty shedding + hot swap "
           f"(seed {seed}) ==")
@@ -539,19 +552,161 @@ def bench_adaptive(*, seed: int, base_ms: float, per_request_ms: float,
                                window_ms=window_ms, max_batch=max_batch,
                                workers=workers,
                                max_inflight=max_inflight,
-                               slo_ms=slo_ms)
+                               slo_s=slo_s)
     bursty = _bursty_phase(seed=seed, base_ms=base_ms,
                            per_request_ms=per_request_ms,
                            window_ms=window_ms, max_batch=4,
-                           workers=workers, slo_ms=400.0, steady_n=32,
+                           workers=workers, slo_s=0.4, steady_n=32,
                            steady_rps=20.0, bursts=3, burst_size=24,
                            burst_gap_s=0.5, burst_queue=4)
     swap = _swap_phase(seed=seed, base_ms=base_ms,
                        per_request_ms=per_request_ms,
                        window_ms=window_ms, max_batch=max_batch,
-                       workers=workers, slo_ms=slo_ms, n=12,
+                       workers=workers, slo_s=slo_s, n=12,
                        gap_s=0.05, swap_at_s=0.3)
     return {"identity": identity, "bursty": bursty, "swap": swap}
+
+
+# -- serve-and-optimize: disabled-loop identity + drifted-trace promotion -----
+
+
+def _reopt_plan(workload) -> Dict[str, Any]:
+    """The drifted incumbent: the workload's plan pinned to a big
+    model — what an optimizer chose for yesterday's traffic mix."""
+    cfg = clone_pipeline(workload.initial_pipeline)
+    cfg["name"] += "_big"
+    for op in cfg["operators"]:
+        if op.get("model"):
+            op["model"] = "gemma3-27b"
+    return cfg
+
+
+def bench_reopt(*, seed: int, base_ms: float, per_request_ms: float,
+                window_ms: float, max_batch: int, workers: int,
+                max_inflight: int, slo_s: float, n: int,
+                gap_s: float, reopt_at_s: float, budget: int,
+                reservoir: int) -> Dict[str, Any]:
+    """Two gates for the serve-and-optimize loop, both deterministic:
+
+    - **disabled-loop identity**: a server with a ``ReoptLoop``
+      attached but never triggered serves bit-identically to a plain
+      server — tickets, outputs, and report (modulo the ``reopt``
+      section only the loop-bearing report carries);
+    - **drifted-trace promotion**: with the incumbent pinned to an
+      expensive model, a mid-trace ``run_once`` warm-starts from the
+      persistent store the serving path wrote
+      (``cache_stats["persistent"]``), auto-promotes a
+      Pareto-dominating candidate through the unified ``swap_plan``,
+      and the post-swap tickets measure a strictly better cost/SLO mix.
+    """
+    w = WORKLOADS["cuad"]()
+    print(f"== serve-and-optimize: identity + drifted-trace promotion "
+          f"(seed {seed}) ==")
+
+    def trace_server(clock, store_path=None, store_mode="readwrite",
+                     pipeline=None):
+        backend = VirtualLatencyBackend(
+            SimBackend(seed=seed, domain=w.domain), clock,
+            base_s=base_ms / 1000.0,
+            per_request_s=per_request_ms / 1000.0,
+            preferred_batch_size=64)
+        cache = (PersistentCallCache(open_store(store_path),
+                                     mode=store_mode)
+                 if store_path else None)
+        return PipelineServer(
+            pipeline if pipeline is not None else w.initial_pipeline,
+            backend, max_inflight=max_inflight, max_batch=max_batch,
+            batch_window_s=window_ms / 1000.0, workers=workers,
+            clock=clock, slo_s=slo_s, call_cache=cache)
+
+    docs = [dict(w.sample[i % len(w.sample)], id=f"r{i}")
+            for i in range(n)]
+    arrivals = [(gap_s * i, d) for i, d in enumerate(docs)]
+
+    # -- phase 1: loop attached but idle == no loop at all ------------------
+    plain = trace_server(VirtualClock())
+    plain_tks = plain.run_trace(arrivals)
+    plain_rep = plain.report()
+    looped = trace_server(VirtualClock())
+    ReoptLoop(looped, w, backend=SimBackend(seed=seed, domain=w.domain))
+    loop_tks = looped.run_trace(arrivals)
+    loop_rep = looped.report()
+    reopt_section = loop_rep.pop("reopt")
+    assert _ticket_fp(plain_tks) == _ticket_fp(loop_tks), \
+        "an idle ReoptLoop changed ticket timelines"
+    assert {tk.doc["id"]: tk.docs for tk in plain_tks} == \
+        {tk.doc["id"]: tk.docs for tk in loop_tks}, \
+        "an idle ReoptLoop changed per-document outputs"
+    assert plain_rep == loop_rep, \
+        "an idle ReoptLoop changed the serving report"
+    assert reopt_section["runs"] == [] and \
+        reopt_section["promotions"] == 0
+    print(f"  identity    : idle loop == no loop over {n} requests "
+          f"(tickets, outputs, report bit-identical)")
+
+    # -- phase 2: drifted trace, mid-trace auto-promotion -------------------
+    store_path = os.path.join(tempfile.mkdtemp(prefix="reopt_bench_"),
+                              "calls.db")
+    clock = VirtualClock()
+    server = trace_server(clock, store_path=store_path,
+                          pipeline=_reopt_plan(w))
+    loop = ReoptLoop(
+        server, w, backend=SimBackend(seed=seed, domain=w.domain),
+        call_cache=PersistentCallCache(open_store(store_path)),
+        mode="auto", budget=budget, seed=seed,
+        reservoir_size=reservoir, min_samples=4)
+    tks = server.run_trace(
+        arrivals, events=[(reopt_at_s, lambda s: loop.run_once())])
+    assert all(tk.error is None for tk in tks)
+    rep = server.report()
+    run = rep["reopt"]["runs"][-1]
+    assert run["status"] == "promoted", \
+        f"drifted trace did not promote: {run['status']}"
+    assert len(rep["swaps"]) == 1 and \
+        rep["swaps"][0]["new_hash"] == run["candidate"]["hash"]
+    persistent = run["cache"]["persistent"]
+    assert persistent["store_hits"] >= reservoir, \
+        "background search did not warm-start from the serving store"
+    assert persistent["store_write_errors"] == 0
+
+    # the promotion must improve the measured cost/SLO mix: per-request
+    # cost strictly down on the promoted plan, SLO attainment not worse
+    new_hash = run["candidate"]["hash"]
+    on_old = [tk for tk in tks if pipeline_hash(tk.plan) != new_hash]
+    on_new = [tk for tk in tks if pipeline_hash(tk.plan) == new_hash]
+    assert on_old and on_new, "promotion leg degenerate"
+    cost_old = sum(tk.stats.cost for tk in on_old) / len(on_old)
+    cost_new = sum(tk.stats.cost for tk in on_new) / len(on_new)
+    assert cost_new < cost_old, \
+        (f"promoted plan did not cut measured per-request cost: "
+         f"{cost_new:.6f} >= {cost_old:.6f}")
+    att_old = sum(tk.latency_s <= slo_s for tk in on_old) / len(on_old)
+    att_new = sum(tk.latency_s <= slo_s for tk in on_new) / len(on_new)
+    assert att_new >= att_old, \
+        (f"promoted plan worsened SLO attainment: "
+         f"{att_new:.3f} < {att_old:.3f}")
+    print(f"  promotion   : {run['incumbent']['plan']} -> "
+          f"{run['candidate']['note']} at t={run['at']:.2f}s "
+          f"({len(on_old)} tickets on old plan, {len(on_new)} on new)")
+    print(f"  cost/SLO    : per-request cost {cost_old:.6f} -> "
+          f"{cost_new:.6f} ({cost_new / cost_old:.2f}x), attainment "
+          f"{100 * att_old:.1f}% -> {100 * att_new:.1f}% | store "
+          f"hits {persistent['store_hits']} "
+          f"writes {persistent['store_writes']}")
+    return {
+        "requests": n,
+        "seed": seed,
+        "identity": {"requests": n, "identical": True},
+        "promotion": {
+            "run": run,
+            "swap": rep["swaps"][0],
+            "cost_per_request": {"old": cost_old, "new": cost_new},
+            "slo_attainment": {"old": att_old, "new": att_new},
+            "on_old_plan": len(on_old),
+            "on_new_plan": len(on_new),
+        },
+        "report": rep,
+    }
 
 
 def main():
@@ -568,6 +723,11 @@ def main():
                          "StaticPolicy bit-identity, adaptive-vs-static "
                          "SLO attainment on a bursty trace, and the "
                          "drain-free mid-trace hot swap")
+    ap.add_argument("--reopt", action="store_true",
+                    help="run the serve-and-optimize benchmark instead: "
+                         "gates bit-identical serving with an idle loop "
+                         "and a mid-trace auto-promotion improving the "
+                         "measured cost/SLO mix on a drifted trace")
     ap.add_argument("--workloads", nargs="*", default=None)
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--rps", type=float, default=None,
@@ -584,19 +744,46 @@ def main():
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--max-inflight", type=int, default=64)
-    ap.add_argument("--slo-ms", type=float, default=2000.0)
+    ap.add_argument("--slo-s", type=float, default=None,
+                    help="per-request latency SLO in seconds "
+                         "(default 2.0)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="deprecated alias of --slo-s (milliseconds)")
     ap.add_argument("--min-speedup", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the report artifact (BENCH_serve.json)")
     args = ap.parse_args()
+    slo_s = args.slo_s
+    if args.slo_ms is not None:
+        warnings.warn("--slo-ms is deprecated; use --slo-s (seconds)",
+                      DeprecationWarning)
+        if slo_s is None:
+            slo_s = args.slo_ms / 1000.0
+    if slo_s is None:
+        slo_s = 2.0
+    if args.reopt:
+        result = bench_reopt(
+            seed=args.seed, base_ms=args.base_ms,
+            per_request_ms=args.per_request_ms,
+            window_ms=args.window_ms, max_batch=args.max_batch,
+            workers=args.workers, max_inflight=args.max_inflight,
+            slo_s=slo_s, n=24 if args.smoke else max(args.requests, 48),
+            gap_s=0.03, reopt_at_s=0.5 if args.smoke else 1.0,
+            budget=16, reservoir=8 if args.smoke else 12)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"bench": "serve_reopt",
+                           "results": [result]}, f, indent=2)
+            print(f"wrote {args.json}")
+        return
     if args.adaptive:
         result = bench_adaptive(
             seed=args.seed, base_ms=args.base_ms,
             per_request_ms=args.per_request_ms,
             window_ms=args.window_ms, max_batch=args.max_batch,
             workers=args.workers, max_inflight=args.max_inflight,
-            slo_ms=args.slo_ms,
+            slo_s=slo_s,
             n=24 if args.smoke else args.requests,
             rps=args.rps if args.rps is not None else 200.0)
         if args.json:
@@ -612,7 +799,7 @@ def main():
             # across tenants pays — 2.5x measured vs the 2x floor
             kw = dict(n_per_tenant=16, rps=60.0, base_ms=50.0,
                       per_request_ms=2.0, window_ms=20.0, max_batch=16,
-                      workers=4, max_inflight=96, slo_ms=2000.0,
+                      workers=4, max_inflight=96, slo_s=2.0,
                       min_speedup=args.min_speedup, seed=args.seed)
         else:
             kw = dict(n_per_tenant=args.requests,
@@ -622,7 +809,7 @@ def main():
                       per_request_ms=args.per_request_ms,
                       window_ms=args.window_ms, max_batch=args.max_batch,
                       workers=args.workers,
-                      max_inflight=args.max_inflight, slo_ms=args.slo_ms,
+                      max_inflight=args.max_inflight, slo_s=slo_s,
                       min_speedup=args.min_speedup, seed=args.seed)
         result = bench_multitenant(args.tenants, **kw)
         if args.json:
@@ -635,7 +822,7 @@ def main():
         names = args.workloads or ["cuad"]
         kw = dict(n=24, rps=200.0, base_ms=50.0, per_request_ms=2.0,
                   window_ms=20.0, max_batch=16, workers=4, max_inflight=64,
-                  slo_ms=2000.0, min_speedup=args.min_speedup,
+                  slo_s=2.0, min_speedup=args.min_speedup,
                   seed=args.seed)
     else:
         names = args.workloads or ["cuad", "medec"]
@@ -645,7 +832,7 @@ def main():
                   per_request_ms=args.per_request_ms,
                   window_ms=args.window_ms, max_batch=args.max_batch,
                   workers=args.workers, max_inflight=args.max_inflight,
-                  slo_ms=args.slo_ms, min_speedup=args.min_speedup,
+                  slo_s=slo_s, min_speedup=args.min_speedup,
                   seed=args.seed)
     results = [bench(name, **kw) for name in names]
     if args.json:

@@ -1,0 +1,119 @@
+"""Serve-and-optimize: the loop that tracks drifting traffic.
+
+One deterministic virtual-time story in two modes. A server ships with
+yesterday's plan — the initial pipeline pinned to a big expensive
+model — and serves live traffic while a :class:`ReoptLoop`:
+
+1. reservoir-samples the served documents (bounded, seeded, per
+   tenant) off the finished-request path;
+2. re-optimizes in the background with ``MOARSearch`` over the *same*
+   persistent call store the serving path writes — every call the
+   server already paid for replays at zero backend cost, so the search
+   only spends budget on changed candidate suffixes;
+3. scores candidates on the live objective mix (accuracy + measured
+   cost + SLO attainment anchored to ``recent_summary()``) and, among
+   the candidates that Pareto-dominate the incumbent's measured point:
+
+   - ``auto`` mode promotes the best one mid-trace through the unified
+     ``swap_plan`` — no drain, recorded in ``report()["swaps"]`` and
+     ``report()["reopt"]`` with before/after windows;
+   - ``propose`` mode (DocWrangler-style) emits the same candidate as
+     a ``PromotionProposal`` with measured deltas and a golden summary
+     and leaves the serving plan alone until ``apply()``.
+
+  PYTHONPATH=src python examples/serve_reopt.py
+"""
+
+import os
+import tempfile
+
+from repro.cache import PersistentCallCache, open_store
+from repro.engine.backend import SimBackend
+from repro.engine.operators import clone_pipeline, pipeline_hash
+from repro.engine.workloads import WORKLOADS
+from repro.serving import (PipelineServer, ReoptLoop, VirtualClock,
+                           VirtualLatencyBackend)
+
+SLO_S = 0.5
+
+
+def yesterdays_plan(workload):
+    """What an optimizer picked for last week's traffic: every LLM op
+    on a 27B model. Today's documents don't need it."""
+    cfg = clone_pipeline(workload.initial_pipeline)
+    cfg["name"] += "_big"
+    for op in cfg["operators"]:
+        if op.get("model"):
+            op["model"] = "gemma3-27b"
+    return cfg
+
+
+def serve(workload, store_path, mode):
+    clock = VirtualClock()
+    backend = SimBackend(seed=0, domain=workload.domain)
+    server = PipelineServer(
+        yesterdays_plan(workload),
+        VirtualLatencyBackend(backend, clock, base_s=0.05,
+                              preferred_batch_size=64),
+        max_inflight=64, max_batch=8, batch_window_s=0.02, workers=2,
+        clock=clock, slo_s=SLO_S,
+        # the serving path records every paid call durably...
+        call_cache=PersistentCallCache(open_store(store_path)))
+    loop = ReoptLoop(
+        server, workload,
+        backend=backend,  # search off the serving clock, same keys
+        # ...and the background search replays them for free
+        call_cache=PersistentCallCache(open_store(store_path)),
+        mode=mode, budget=16, seed=0, reservoir_size=12, min_samples=4)
+    sample = workload.sample
+    arrivals = [(0.03 * i, dict(sample[i % len(sample)], id=f"r{i}"))
+                for i in range(60)]
+    tickets = server.run_trace(
+        arrivals, events=[(1.0, lambda s: loop.run_once())])
+    return server, loop, tickets
+
+
+def main():
+    w = WORKLOADS["cuad"]()
+    store_path = os.path.join(tempfile.mkdtemp(prefix="reopt_demo_"),
+                              "calls.db")
+
+    print("== auto mode: promote the dominating candidate mid-trace ==")
+    server, loop, tickets = serve(w, store_path, "auto")
+    rep = server.report()
+    run = rep["reopt"]["runs"][-1]
+    inc, cand = run["incumbent"], run["candidate"]
+    print(f"  sampled {run['sampled']}/{run['seen']} served docs; "
+          f"search warm-started with "
+          f"{run['cache']['persistent']['store_hits']} store hits")
+    print(f"  incumbent {inc['plan']} measured acc {inc['acc']:.2f} "
+          f"cost {inc['cost']:.4f}")
+    print(f"  promoted  {cand['note']} measured acc {cand['acc']:.2f} "
+          f"cost {cand['cost']:.4f} (deltas: acc "
+          f"{run['deltas']['acc']:+.2f}, cost {run['deltas']['cost']:+.4f})")
+    swap = rep["swaps"][0]
+    on_new = [t for t in tickets
+              if pipeline_hash(t.plan) == swap["new_hash"]]
+    print(f"  swap at t={swap['at']:.2f}s, {len(on_new)} tickets rode "
+          f"the new plan; before n={run['before']['n']} -> after "
+          f"n={run['after']['n']} requests in the sensor window\n")
+
+    print("== propose mode: same candidate, human holds the pen ==")
+    # the store is warm now: this whole run — serving AND search —
+    # replays without new backend work
+    server, loop, _ = serve(w, store_path, "propose")
+    [proposal] = loop.proposals
+    print(f"  proposal: swap to {proposal.candidate.note} "
+          f"(score {proposal.incumbent_score:.3f} -> "
+          f"{proposal.candidate_score:.3f})")
+    print(f"  serving plan untouched: "
+          f"{server.report()['swaps'] == []}; golden summary covers "
+          f"{len(proposal.golden['evaluated'])} evaluated plans")
+    record = proposal.apply(server)
+    print(f"  after sign-off, apply() promotes through the same "
+          f"swap_plan: {record['old_hash'][:8]} -> "
+          f"{record['new_hash'][:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,10 +19,14 @@ over one shared ``JaxBackend`` — different tenants' requests coalesce
 into the same submit chunks and decode slots, admission is
 weighted-fair across the roster.
 
-``--policy adaptive --slo-ms N`` swaps in the control plane's feedback
-policy (SLO-sensing micro-batch window + per-tenant shedding);
-``--swap-after N`` demonstrates the drain-free hot plan swap under live
-traffic and prints the swap record.
+``--policy adaptive --slo-s N`` swaps in the control plane's feedback
+policy (SLO-sensing micro-batch window + per-tenant shedding; SLO
+targets are seconds everywhere — ``--slo-ms`` survives as a deprecated
+alias); ``--swap-after N`` demonstrates the drain-free hot plan swap
+under live traffic and prints the swap record; ``--reopt`` attaches a
+``ReoptLoop`` that reservoir-samples the served documents and runs one
+re-optimization pass against the live backend once the trace drains,
+promoting (``auto``) or proposing (``propose``) a Pareto-better plan.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
@@ -30,7 +34,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --tenants legal=cuad:2,medical=medec --requests 8
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-      --policy adaptive --slo-ms 2000 --swap-after 4 --requests 8
+      --policy adaptive --slo-s 2 --swap-after 4 --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+      --requests 8 --reopt --reopt-mode propose
 """
 
 from __future__ import annotations
@@ -38,7 +44,8 @@ from __future__ import annotations
 import argparse
 import random
 import time
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.engine.workloads import WORKLOADS
 from repro.pipeline.model import as_config
@@ -46,6 +53,7 @@ from repro.serving.control import AdaptivePolicy, ControlPolicy
 from repro.serving.multi_server import MultiPipelineServer, TenantSpec
 from repro.serving.pipeline_server import (MonotonicClock, PipelineServer,
                                            ServeTicket)
+from repro.serving.reopt import ReoptLoop
 
 
 def pipeline_for(workload, arch: str) -> Dict[str, Any]:
@@ -69,6 +77,19 @@ def _policy_for(name: str, *, max_queue: int
     raise SystemExit(f"--policy must be static or adaptive, got {name!r}")
 
 
+def _resolve_slo(slo_s: Optional[float], slo_ms: Optional[float],
+                 ) -> Optional[float]:
+    """One SLO unit: seconds. ``slo_ms`` is the deprecated
+    milliseconds alias; an explicit ``slo_s`` wins when both are
+    passed."""
+    if slo_ms is not None:
+        warnings.warn("slo_ms is deprecated; pass slo_s (seconds)",
+                      DeprecationWarning, stacklevel=3)
+        if slo_s is None:
+            slo_s = slo_ms / 1000.0
+    return slo_s
+
+
 def _swap_variant(plan: Dict[str, Any]) -> Dict[str, Any]:
     """A same-shape stand-in for an optimizer's next plan: the swap
     demo needs a second analyzable pipeline that hashes differently."""
@@ -85,12 +106,35 @@ def _print_swap(record: Dict[str, Any]) -> None:
           f"p95 {before['p95_latency_s']:.2f}s")
 
 
-def _drive(server, submits, *, rps: float, seed: int
+def _print_reopt(entry: Dict[str, Any]) -> None:
+    where = f" tenant {entry['tenant']}" if entry.get("tenant") else ""
+    head = (f"[reopt]{where} {entry['status']} "
+            f"({entry['sampled']}/{entry['seen']} docs sampled)")
+    if entry["status"] in ("promoted", "proposed"):
+        inc, cand = entry["incumbent"], entry["candidate"]
+        print(f"{head}: {inc['plan']} (acc {inc['acc']:.2f}, "
+              f"cost {inc['cost']:.4f}) -> {cand['note']} "
+              f"(acc {cand['acc']:.2f}, cost {cand['cost']:.4f})")
+    else:
+        print(f"{head}: {entry.get('reason', 'no dominating candidate')}")
+
+
+def _reopt_loop(server, workload, *, mode: str, budget: int,
+                seed: int) -> ReoptLoop:
+    """The CLI's serve-and-optimize attachment: sample every served
+    document (small trace), search against the live backend."""
+    return ReoptLoop(server, workload, mode=mode, budget=budget,
+                     seed=seed, reservoir_size=8, min_samples=2)
+
+
+def _drive(server, submits, *, rps: float, seed: int,
+           after_drain: Optional[Callable[[], None]] = None
            ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
     """Shared open-loop drive: start the server, pace the ``submits``
     callables (each admits one request) at Poisson ``rps`` (0 = all at
-    once), drain, shut down (closing the backend), and report against
-    wall time."""
+    once), drain, run ``after_drain`` (the re-optimization hook — the
+    backend is still open), shut down (closing the backend), and
+    report against wall time."""
     rng = random.Random(seed)
     t0 = time.monotonic()
     server.start()
@@ -101,6 +145,8 @@ def _drive(server, submits, *, rps: float, seed: int
                 time.sleep(rng.expovariate(rps))
             tickets.append(submit())
         server.drain()
+        if after_drain is not None:
+            after_drain()
     finally:
         server.shutdown(close_backend=True)
     return tickets, server.report(elapsed_s=time.monotonic() - t0)
@@ -110,8 +156,10 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
                max_new: int = 8, rps: float = 0.0, workload: str = "medec",
                max_batch: Optional[int] = None, workers: int = 2,
                seed: int = 0, verbose: bool = True,
-               policy: str = "static", slo_ms: Optional[float] = None,
-               max_queue: int = 16, swap_after: int = 0
+               policy: str = "static", slo_s: Optional[float] = None,
+               max_queue: int = 16, swap_after: int = 0,
+               reopt: bool = False, reopt_mode: str = "auto",
+               reopt_budget: int = 8, slo_ms: Optional[float] = None
                ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
     """End-to-end online serving demo on real JAX decoding.
 
@@ -123,13 +171,19 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
     chunk keeps the decode slots saturated with overflow queued.
 
     ``policy="adaptive"`` runs the control plane's feedback policy
-    (requires ``slo_ms``). ``swap_after=N`` hot-swaps the served plan
+    (requires ``slo_s``, in seconds; ``slo_ms`` is a deprecated
+    milliseconds alias). ``swap_after=N`` hot-swaps the served plan
     to a prompt variant after the Nth submission — in-flight requests
     finish on the old plan, later ones ride the new one — and prints
-    the swap record the report also carries.
+    the swap record the report also carries. ``reopt=True`` attaches a
+    :class:`~repro.serving.reopt.ReoptLoop` that samples the served
+    documents and runs one re-optimization pass once the trace drains
+    (the live backend is still open), auto-promoting or proposing per
+    ``reopt_mode``.
     """
     from repro.engine.backend import JaxBackend  # jax import is heavy
 
+    slo_s = _resolve_slo(slo_s, slo_ms)
     w = WORKLOADS[workload]()
     plan = pipeline_for(w, arch)
     # one clock for host and batcher: scheduler timestamps join the
@@ -141,10 +195,11 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
     server = PipelineServer(plan, backend, max_inflight=4 * max_batch,
                             max_batch=max_batch, batch_window_s=0.01,
                             workers=workers, seed=seed, clock=clock,
-                            slo_s=None if slo_ms is None
-                            else slo_ms / 1000.0,
+                            slo_s=slo_s,
                             policy=_policy_for(policy,
                                                max_queue=max_queue))
+    loop = (_reopt_loop(server, w, mode=reopt_mode, budget=reopt_budget,
+                        seed=seed) if reopt else None)
     docs = [dict(w.sample[i % len(w.sample)], id=f"r{i}")
             for i in range(requests)]
 
@@ -153,10 +208,15 @@ def serve_demo(arch: str, *, requests: int = 8, slots: int = 4,
             _print_swap(server.swap_plan(_swap_variant(plan)))
         return server.submit(doc)
 
+    def reoptimize() -> None:
+        assert loop is not None
+        _print_reopt(loop.run_once())
+
     tickets, report = _drive(
         server, [lambda i=i, d=doc: submit(i, d)
                  for i, doc in enumerate(docs)],
-        rps=rps, seed=seed)
+        rps=rps, seed=seed,
+        after_drain=reoptimize if loop is not None else None)
     if verbose:
         for tk in tickets:
             n_out = len(tk.docs) if tk.docs is not None else 0
@@ -217,21 +277,25 @@ def serve_multi_demo(arch: str, tenants: str, *, requests: int = 8,
                      max_batch: Optional[int] = None, workers: int = 2,
                      seed: int = 0, verbose: bool = True,
                      policy: str = "static",
-                     slo_ms: Optional[float] = None, max_queue: int = 16,
-                     swap_after: int = 0
+                     slo_s: Optional[float] = None, max_queue: int = 16,
+                     swap_after: int = 0, reopt: bool = False,
+                     reopt_mode: str = "auto", reopt_budget: int = 8,
+                     slo_ms: Optional[float] = None
                      ) -> Tuple[List[ServeTicket], Dict[str, Any]]:
     """Multi-tenant online serving on real JAX decoding: the roster's
     plans share one backend; requests round-robin across tenants at the
     submission side and coalesce across tenants inside the host.
     ``swap_after=N`` hot-swaps the *first* tenant's plan after the Nth
-    submission."""
+    submission; ``reopt=True`` re-optimizes every tenant from its own
+    reservoir once the trace drains."""
     from repro.engine.backend import JaxBackend  # jax import is heavy
 
+    slo_s = _resolve_slo(slo_s, slo_ms)
     roster = parse_tenants(tenants, arch)
     specs = [spec for spec, _ in roster]
+    workloads = {spec.name: WORKLOADS[wname]() for spec, wname in roster}
     # tenant name keys the roster; its workload's sample feeds traffic
-    samples = {spec.name: WORKLOADS[wname]().sample
-               for spec, wname in roster}
+    samples = {name: w.sample for name, w in workloads.items()}
     clock = MonotonicClock()
     backend = JaxBackend(seed=seed, max_new_tokens=max_new,
                          decode_slots=slots, clock=clock)
@@ -240,17 +304,23 @@ def serve_multi_demo(arch: str, tenants: str, *, requests: int = 8,
                                  max_inflight=4 * max_batch,
                                  max_batch=max_batch,
                                  batch_window_s=0.01, workers=workers,
-                                 seed=seed, clock=clock,
-                                 slo_s=None if slo_ms is None
-                                 else slo_ms / 1000.0,
+                                 seed=seed, clock=clock, slo_s=slo_s,
                                  policy=_policy_for(policy,
                                                     max_queue=max_queue))
+    loop = (_reopt_loop(server, workloads, mode=reopt_mode,
+                        budget=reopt_budget, seed=seed)
+            if reopt else None)
 
     def submit(i: int, tenant: str, doc: Dict[str, Any]) -> ServeTicket:
         if swap_after and i == swap_after:
             _print_swap(server.swap_plan(
-                specs[0].name, _swap_variant(specs[0].pipeline)))
+                _swap_variant(specs[0].pipeline), tenant=specs[0].name))
         return server.submit(tenant, doc)
+
+    def reoptimize() -> None:
+        assert loop is not None
+        for entry in loop.run_all():
+            _print_reopt(entry)
 
     submits = []
     for i in range(requests):
@@ -258,7 +328,9 @@ def serve_multi_demo(arch: str, tenants: str, *, requests: int = 8,
         sample = samples[spec.name]
         doc = dict(sample[i % len(sample)], id=f"{spec.name}-r{i}")
         submits.append(lambda i=i, t=spec.name, d=doc: submit(i, t, d))
-    tickets, report = _drive(server, submits, rps=rps, seed=seed)
+    tickets, report = _drive(server, submits, rps=rps, seed=seed,
+                             after_drain=reoptimize if loop is not None
+                             else None)
     if verbose:
         print(f"[serve] {report['completed']}/{report['requests']} "
               f"requests in {report['elapsed_s']:.1f}s | "
@@ -295,10 +367,12 @@ def main():
                     choices=["static", "adaptive"],
                     help="control policy: static (fixed window, global "
                          "backpressure) or adaptive (SLO-sensing window "
-                         "+ per-tenant shedding; requires --slo-ms)")
+                         "+ per-tenant shedding; requires --slo-s)")
+    ap.add_argument("--slo-s", type=float, default=None,
+                    help="per-request latency SLO in seconds the "
+                         "adaptive policy senses against")
     ap.add_argument("--slo-ms", type=float, default=None,
-                    help="per-request latency SLO the adaptive policy "
-                         "senses against")
+                    help="deprecated alias of --slo-s (milliseconds)")
     ap.add_argument("--max-queue", type=int, default=16,
                     help="adaptive policy's per-tenant admitted-queue "
                          "bound")
@@ -306,21 +380,36 @@ def main():
                     help="hot-swap the served plan (first tenant with "
                          "--tenants) to a prompt variant after N "
                          "submissions; prints the swap record")
+    ap.add_argument("--reopt", action="store_true",
+                    help="attach a ReoptLoop: reservoir-sample served "
+                         "documents and run one background "
+                         "re-optimization pass after the trace drains")
+    ap.add_argument("--reopt-mode", default="auto",
+                    choices=["auto", "propose"],
+                    help="auto-promote a dominating candidate through "
+                         "swap_plan, or emit a PromotionProposal")
+    ap.add_argument("--reopt-budget", type=int, default=8,
+                    help="evaluation budget of the background search")
     args = ap.parse_args()
     if args.tenants:
         serve_multi_demo(args.arch, args.tenants, requests=args.requests,
                          slots=args.slots, rps=args.rps,
                          max_new=args.max_new, max_batch=args.max_batch,
                          workers=args.workers, seed=args.seed,
-                         policy=args.policy, slo_ms=args.slo_ms,
-                         max_queue=args.max_queue,
-                         swap_after=args.swap_after)
+                         policy=args.policy, slo_s=args.slo_s,
+                         slo_ms=args.slo_ms, max_queue=args.max_queue,
+                         swap_after=args.swap_after, reopt=args.reopt,
+                         reopt_mode=args.reopt_mode,
+                         reopt_budget=args.reopt_budget)
         return
     serve_demo(args.arch, requests=args.requests, slots=args.slots,
                rps=args.rps, max_new=args.max_new, workload=args.workload,
                max_batch=args.max_batch, workers=args.workers,
-               seed=args.seed, policy=args.policy, slo_ms=args.slo_ms,
-               max_queue=args.max_queue, swap_after=args.swap_after)
+               seed=args.seed, policy=args.policy, slo_s=args.slo_s,
+               slo_ms=args.slo_ms, max_queue=args.max_queue,
+               swap_after=args.swap_after, reopt=args.reopt,
+               reopt_mode=args.reopt_mode,
+               reopt_budget=args.reopt_budget)
 
 
 if __name__ == "__main__":

@@ -63,8 +63,43 @@ class SearchResult:
     def name(self) -> str:  # BaselineResult compatibility
         return self.optimizer
 
-    def best(self) -> PlanPoint:
-        return max(self.evaluated, key=lambda p: p.acc)
+    def best(self, weights: Optional[Mapping[str, float]] = None, *,
+             objectives: Optional[Mapping[str, Callable[[PlanPoint],
+                                                        float]]] = None
+             ) -> PlanPoint:
+        """The winning plan under an objective mix.
+
+        With no ``weights`` (the default, and what ``swap_plan``'s
+        ``resolve_plan`` relies on): the highest-accuracy evaluated
+        plan. With ``weights``, each evaluated plan scores
+        ``weights["acc"] * acc - weights["cost"] * cost`` plus
+        ``weights[name] * objectives[name](plan)`` for every extra
+        objective (e.g. an SLO-attainment estimate from live serving
+        stats); the maximum wins. Missing weight keys default to 0.
+        Ties break toward higher accuracy, then lower cost — so among
+        equal-score plans the Pareto-dominant one (Def. 2.1
+        tie-domination: equal accuracy at strictly lower cost) is
+        selected deterministically.
+        """
+        if not weights:
+            return max(self.evaluated, key=lambda p: p.acc)
+        extra = dict(objectives or {})
+        unknown = set(weights) - {"acc", "cost"} - set(extra)
+        if unknown:
+            raise KeyError(f"best() weights name objectives with no "
+                           f"estimator: {sorted(unknown)}")
+
+        def score(p: PlanPoint) -> float:
+            s = (weights.get("acc", 0.0) * p.acc
+                 - weights.get("cost", 0.0) * p.cost)
+            for name, fn in extra.items():
+                w = weights.get(name, 0.0)
+                if w:
+                    s += w * fn(p)
+            return s
+
+        return max(self.evaluated,
+                   key=lambda p: (score(p), p.acc, -p.cost))
 
 
 @runtime_checkable

@@ -1,0 +1,45 @@
+"""Public serving surface.
+
+Import servers, tenancy, control policies, and the serve-and-optimize
+loop from here — the ``pipeline_server`` / ``multi_server`` /
+``control`` / ``reopt`` modules are implementation layout, not API::
+
+    from repro.serving import (PipelineServer, MultiPipelineServer,
+                               TenantSpec, AdaptivePolicy, ReoptLoop)
+"""
+
+from repro.serving.control import (AdaptivePolicy, AdmissionDecision,
+                                   ControlPolicy, StaticPolicy,
+                                   resolve_plan)
+from repro.serving.multi_server import MultiPipelineServer, TenantSpec
+from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
+                                           ServeTicket, ServerClosed,
+                                           ServerSaturated, ServerStats,
+                                           SwapRecord, VirtualClock,
+                                           VirtualLatencyBackend,
+                                           validate_slo)
+from repro.serving.reopt import (PromotionProposal, ReoptLoop,
+                                 ReservoirSampler)
+
+__all__ = [
+    "AdaptivePolicy",
+    "AdmissionDecision",
+    "ControlPolicy",
+    "MultiPipelineServer",
+    "PipelineServer",
+    "PromotionProposal",
+    "ReoptLoop",
+    "RequestRecord",
+    "ReservoirSampler",
+    "ServeTicket",
+    "ServerClosed",
+    "ServerSaturated",
+    "ServerStats",
+    "StaticPolicy",
+    "SwapRecord",
+    "TenantSpec",
+    "VirtualClock",
+    "VirtualLatencyBackend",
+    "resolve_plan",
+    "validate_slo",
+]

@@ -46,6 +46,7 @@ admission/window/DRR semantics deterministically — the substrate for
 from __future__ import annotations
 
 import math
+import warnings
 from collections import deque
 from dataclasses import dataclass, replace
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
@@ -57,19 +58,24 @@ from repro.engine.operators import validate_pipeline
 from repro.pipeline.model import PipelineLike, as_config
 from repro.serving.control import ControlPolicy
 from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
-                                           ServeTicket, ServerStats)
+                                           ServeTicket, ServerStats,
+                                           SwapRecord, validate_slo)
 
 
 @dataclass(frozen=True)
 class TenantSpec:
     """One hosted tenant: a named optimized plan plus its serving
     policy — ``weight`` is the DRR scheduling share (relative to the
-    other tenants), ``slo_s`` the tenant's own latency target."""
+    other tenants), ``slo_s`` the tenant's own latency target in
+    seconds (positive, finite; validated at construction)."""
 
     name: str
     pipeline: PipelineLike
     weight: float = 1.0
     slo_s: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        validate_slo(self.slo_s, f"TenantSpec {self.name!r}")
 
 
 class UnknownTenant(KeyError):
@@ -296,13 +302,34 @@ class MultiPipelineServer(PipelineServer):
                 or any(s.slo_s is not None
                        for s in self._tenants.values()))
 
-    def swap_plan(self, tenant: str,  # type: ignore[override]
-                  plan: Any) -> Dict[str, Any]:
+    def swap_plan(self, plan: Any, _legacy_plan: Any = None, *,
+                  tenant: Optional[str] = None) -> SwapRecord:
         """Drain-free hot swap of ``tenant``'s plan (a ``Pipeline``,
         config dict, or ``SearchResult``) — analyzer-gated, atomic
         under the admission lock, in-flight tickets finish on the plan
         they were admitted under; see the single-plan
-        :meth:`PipelineServer.swap_plan` for the full contract."""
+        :meth:`PipelineServer.swap_plan` for the full contract.
+
+        The signature is unified with the single-plan server:
+        ``swap_plan(plan, tenant="name")``, with ``tenant`` required
+        here. The pre-unification positional form
+        ``swap_plan(tenant, plan)`` still works but emits a
+        ``DeprecationWarning``.
+        """
+        if _legacy_plan is not None:
+            if tenant is not None:
+                raise TypeError(
+                    "swap_plan() got both a second positional argument "
+                    "(the deprecated (tenant, plan) form) and tenant=")
+            warnings.warn(
+                "MultiPipelineServer.swap_plan(tenant, plan) is "
+                "deprecated; call swap_plan(plan, tenant=tenant)",
+                DeprecationWarning, stacklevel=2)
+            plan, tenant = _legacy_plan, plan
+        if tenant is None:
+            raise ValueError(
+                f"multi-tenant swap needs tenant= naming which plan to "
+                f"replace (serving: {self._order})")
         self._tenant(tenant)
         return self._swap(tenant, plan)
 

@@ -55,8 +55,10 @@ import math
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from collections.abc import Mapping
+from dataclasses import dataclass, field, fields as _dc_fields
+from typing import (Any, Callable, Deque, Dict, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 from repro.analysis.analyzer import AnalysisReport, analyze as _analyze
 from repro.data.documents import Dataset, Document
@@ -71,6 +73,56 @@ from repro.serving.control import (GLOBAL_INFLIGHT, TENANT_QUEUE,
 
 
 _UNSET_SLO = object()  # "use the server's slo_s" sentinel
+
+
+def validate_slo(slo_s: Optional[float], what: str) -> Optional[float]:
+    """SLO targets are seconds, positive, and finite — everywhere.
+    ``None`` (no target) passes through. Raises ``ValueError`` naming
+    ``what`` otherwise; shared by both server constructors and
+    ``TenantSpec``."""
+    if slo_s is None:
+        return None
+    slo = float(slo_s)
+    if not (slo > 0 and math.isfinite(slo)):
+        raise ValueError(f"{what}: slo_s must be a positive finite "
+                         f"number of seconds, got {slo_s!r}")
+    return slo
+
+
+@dataclass(frozen=True)
+class SwapRecord(Mapping):
+    """Typed record of one hot plan swap — what :meth:`swap_plan`
+    returns on both servers. ``before`` is the swapped stats'
+    ``recent_summary()`` taken under the admission lock at swap time;
+    ``report()`` lists the same record (as a plain dict) under
+    ``swaps`` with an ``after`` summary measured at report time.
+
+    Implements the ``Mapping`` protocol, so pre-existing dict-style
+    access (``record["new_hash"]``, ``dict(record)``) keeps working.
+    """
+
+    tenant: Optional[str]
+    at: float
+    old_plan: str
+    new_plan: str
+    old_hash: str
+    new_hash: str
+    before: Dict[str, Any]
+
+    def __getitem__(self, key: str) -> Any:
+        if key in self.__dataclass_fields__:
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.__dataclass_fields__)
+
+    def __len__(self) -> int:
+        return len(_dc_fields(self))
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {name: getattr(self, name)
+                for name in self.__dataclass_fields__}
 
 
 class ServerClosed(RuntimeError):
@@ -682,7 +734,7 @@ class PipelineServer:
         self.max_batch = max(1, max_batch)
         self.batch_window_s = max(0.0, batch_window_s)
         self.workers = max(1, workers)
-        self.slo_s = slo_s
+        self.slo_s = validate_slo(slo_s, type(self).__name__)
         # "auto": exact records for virtual-time traces (bit-reproducible
         # reports), bounded sketch for the long-lived threaded loop
         self.stats_mode = stats_mode
@@ -695,7 +747,13 @@ class PipelineServer:
         self._thread: Optional[threading.Thread] = None
         self._rid = 0
         self._dispatch_base: Dict[str, int] = {}
-        self._swaps: List[Dict[str, Any]] = []
+        self._swaps: List[SwapRecord] = []
+        # finished-request observers (fn(ticket, record)) — the feed a
+        # ReoptLoop's per-tenant reservoir samples from; the attached
+        # loop (if any) contributes report()'s "reopt" section
+        self._request_observers: List[Callable[[ServeTicket,
+                                                RequestRecord], None]] = []
+        self._reopt: Any = None
         # the control plane: admission / window / shedding decisions
         # route through the policy; the default reproduces the
         # pre-control-plane behavior bit-identically
@@ -827,7 +885,8 @@ class PipelineServer:
         sense against."""
         return self.slo_s is not None
 
-    def swap_plan(self, plan: Any) -> Dict[str, Any]:
+    def swap_plan(self, plan: Any, *,
+                  tenant: Optional[str] = None) -> SwapRecord:
         """Drain-free hot swap to ``plan`` (a ``Pipeline``, config
         dict, or ``SearchResult`` — the optimizer output promotes
         directly). The new plan is validated and gated by the static
@@ -836,14 +895,24 @@ class PipelineServer:
         on the plan they bound at admission, every later admission
         binds the new plan. The executor — and with it the (persistent)
         call cache — stays attached, so calls the old plan already paid
-        for warm-start the new one. Returns the swap record (old/new
-        plan hashes + the before-swap ``recent`` sensor summary), which
-        ``report()`` also lists under ``swaps`` with the after-swap
-        summary — measured deltas for a human to judge, not an
-        auto-promotion."""
+        for warm-start the new one. Returns the :class:`SwapRecord`
+        (old/new plan hashes + the before-swap ``recent`` sensor
+        summary), which ``report()`` also lists under ``swaps`` with
+        the after-swap summary — measured deltas for a human to judge,
+        not an auto-promotion.
+
+        One signature across both servers: the single-plan host serves
+        one implicit tenant, so ``tenant`` must stay ``None`` here;
+        ``MultiPipelineServer`` requires it.
+        """
+        if tenant is not None:
+            raise ValueError(
+                f"single-plan server hosts no named tenants (got "
+                f"tenant={tenant!r}); tenant= addresses a "
+                f"MultiPipelineServer plan")
         return self._swap(None, plan)
 
-    def _swap(self, tenant: Optional[str], plan: Any) -> Dict[str, Any]:
+    def _swap(self, tenant: Optional[str], plan: Any) -> SwapRecord:
         config = resolve_plan(plan)
         validate_pipeline(config)
         # same gate as construction: statically-broken plans never
@@ -851,19 +920,19 @@ class PipelineServer:
         _analyze(config).raise_for_errors()
         with self._cond:
             old = self._plan_for(tenant)
-            record: Dict[str, Any] = {
-                "tenant": tenant,
+            record = SwapRecord(
+                tenant=tenant,
                 # episode-relative, like the report's elapsed_s
-                "at": self.clock.now() - self.stats.opened_at,
-                "old_plan": old.get("name", ""),
-                "new_plan": config.get("name", ""),
-                "old_hash": pipeline_hash(old),
-                "new_hash": pipeline_hash(config),
-                "before": self._swap_stats(tenant).recent_summary(),
-            }
+                at=self.clock.now() - self.stats.opened_at,
+                old_plan=old.get("name", ""),
+                new_plan=config.get("name", ""),
+                old_hash=pipeline_hash(old),
+                new_hash=pipeline_hash(config),
+                before=self._swap_stats(tenant).recent_summary(),
+            )
             self._set_plan(tenant, config)
             self._swaps.append(record)
-        return dict(record)
+        return record
 
     def _job_tags(self, batch: List[ServeTicket]
                   ) -> Optional[List[Optional[str]]]:
@@ -876,6 +945,18 @@ class PipelineServer:
     def _observe_record(self, tk: ServeTicket,
                         record: RequestRecord) -> None:
         self.stats.observe(record)
+
+    def add_request_observer(
+            self, observe: Callable[[ServeTicket, RequestRecord], None]
+    ) -> None:
+        """Register ``observe(ticket, record)`` to run on the serving
+        path after every finished request (both drive modes, both
+        servers). Observers run on the batch-execution path: they must
+        be fast and must not call back into the serving API. This is
+        the feed a :class:`~repro.serving.reopt.ReoptLoop` samples
+        served documents from."""
+        with self._cond:
+            self._request_observers.append(observe)
 
     def _count_rejected(self, tenant: Optional[str],
                         reason: Optional[str] = None) -> None:
@@ -917,12 +998,15 @@ class PipelineServer:
             tk.error = res.error
             tk.finished_at = end
             st = res.stats or ExecutionStats()
-            self._observe_record(tk, RequestRecord(
+            record = RequestRecord(
                 rid=tk.rid, submitted_at=tk.submitted_at,
                 started_at=tk.started_at, finished_at=tk.finished_at,
                 ok=res.error is None, batch_size=len(batch),
                 llm_calls=st.llm_calls, in_tokens=st.in_tokens,
-                out_tokens=st.out_tokens, cost=st.cost))
+                out_tokens=st.out_tokens, cost=st.cost)
+            self._observe_record(tk, record)
+            for observe in self._request_observers:
+                observe(tk, record)
             tk._event.set()
 
     # -- threaded mode -------------------------------------------------------
@@ -1346,7 +1430,11 @@ class PipelineServer:
         if callable(persistent):
             cache["store_entries"] = persistent()["store_entries"]
             cache["mode"] = cc.mode
+        extra = {"dispatch": dispatch, "call_cache": cache,
+                 "control": control, "swaps": swaps}
+        if self._reopt is not None:
+            # the attached re-optimization loop's run history — absent
+            # on plain servers, so loop-free reports stay bit-identical
+            extra["reopt"] = self._reopt.snapshot()
         return self.stats.report(
-            elapsed_s=elapsed_s, slo_s=self.slo_s,
-            extra={"dispatch": dispatch, "call_cache": cache,
-                   "control": control, "swaps": swaps})
+            elapsed_s=elapsed_s, slo_s=self.slo_s, extra=extra)

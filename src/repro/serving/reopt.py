@@ -1,0 +1,493 @@
+"""Serve-and-optimize: continuous background re-optimization from live
+traffic, promoted through the unified serving ``swap_plan`` API.
+
+The repo's optimizers find Pareto-better plans than what they started
+from; the serving layer hot-swaps plans without draining; the
+persistent call cache makes every served request a durable, replayable
+measurement. :class:`ReoptLoop` closes the loop between the three:
+
+1. **Sample.** A bounded, seeded per-tenant reservoir (Algorithm R)
+   samples recently *served* documents off the servers' finished-
+   request path (:meth:`PipelineServer.add_request_observer`). The
+   reservoir is a uniform sample of everything served since the last
+   re-optimization — it tracks drift in the live document
+   distribution, which a frozen optimization-time sample cannot.
+2. **Search.** :meth:`run_once` rebuilds the tenant's
+   :class:`~repro.engine.workloads.Workload` around the sampled
+   documents (initial pipeline = the tenant's *current* plan) and runs
+   ``MOARSearch`` through the deterministic round engine. The search
+   shares the serving path's ``open_store(...)``-backed
+   :class:`~repro.cache.PersistentCallCache`: every call the serving
+   path already paid for replays from the store at zero backend cost,
+   so the search only executes the *changed suffix* of each candidate
+   against the backend (``cache_stats["persistent"]`` in the run entry
+   proves the warm start).
+3. **Promote.** Candidates are scored on the live objective mix —
+   measured accuracy proxy + measured cost + an SLO-attainment
+   estimate anchored to the serving stats' ``recent_summary()`` — via
+   ``SearchResult.best(weights, objectives=...)``. Promotion is gated
+   on Pareto domination of the incumbent's measured (acc, cost) point
+   (Def. 2.1 — equal accuracy at strictly lower cost dominates): the
+   best-scoring *dominating* candidate is promoted through the unified
+   ``swap_plan(plan, tenant=...)`` in ``auto`` mode. In ``propose`` mode
+   (DocWrangler-style human-in-the-loop) the same winner is emitted as
+   a :class:`PromotionProposal` carrying the measured before-state,
+   per-objective deltas, and a golden summary of the search run — the
+   serving plan is NOT mutated until someone calls
+   :meth:`PromotionProposal.apply`.
+
+Every run — skipped, kept, proposed, or promoted — is recorded; the
+attached server surfaces the history as ``report()["reopt"]``, with
+promotions additionally landing in ``report()["swaps"]`` like any
+other hot swap.
+
+Determinism: driven from ``run_trace(events=[(t, fn)])`` with an
+explicit deterministic search backend, a re-optimizing trace is
+bit-reproducible end to end — which is what
+``benchmarks/serve_bench.py --reopt`` gates in CI. For live traffic,
+:meth:`start` runs the same ``run_once`` on a background daemon thread
+every ``interval_s`` seconds.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass, field, replace as _dc_replace
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+from repro.core import pareto
+from repro.data.documents import Document
+from repro.engine.operators import pipeline_hash
+from repro.engine.workloads import Workload
+from repro.pipeline.optimizers import PlanPoint, SearchResult
+from repro.serving.pipeline_server import (PipelineServer, RequestRecord,
+                                           ServeTicket, SwapRecord)
+
+MODES = ("auto", "propose")
+
+#: default live objective mix: accuracy first, measured cost and the
+#: SLO-attainment estimate as the serving-side counterweights
+DEFAULT_WEIGHTS: Dict[str, float] = {"acc": 1.0, "cost": 1.0, "slo": 0.25}
+
+
+class ReservoirSampler:
+    """Algorithm R: a bounded uniform sample of an unbounded stream.
+
+    Seeded (``random.Random``), so the same served stream yields the
+    same reservoir — the property that keeps re-optimizing traces
+    reproducible. ``seen`` counts every observed document; ``docs()``
+    returns a snapshot copy of the current sample."""
+
+    def __init__(self, size: int, seed: Any = 0):
+        if size < 1:
+            raise ValueError(f"reservoir size must be >= 1, got {size}")
+        self.size = size
+        self.seen = 0
+        self._rng = random.Random(seed)
+        self._docs: List[Document] = []
+
+    def observe(self, doc: Document) -> None:
+        self.seen += 1
+        if len(self._docs) < self.size:
+            self._docs.append(doc)
+            return
+        j = self._rng.randrange(self.seen)
+        if j < self.size:
+            self._docs[j] = doc
+
+    def docs(self) -> List[Document]:
+        return list(self._docs)
+
+    def __len__(self) -> int:
+        return len(self._docs)
+
+
+@dataclass(frozen=True)
+class PromotionProposal:
+    """A candidate swap surfaced for human sign-off (``propose`` mode).
+
+    Carries everything a reviewer needs to judge the promotion: the
+    candidate config, the incumbent's and candidate's *measured*
+    points on the reservoir sample, their scores under the live
+    objective mix, the per-objective deltas, the serving stats'
+    ``recent_summary()`` at proposal time, and a golden summary of the
+    search run that produced it (the persistent store holds the full
+    recording, so the proposal ships replayable). ``apply(server)``
+    executes the swap through the same unified ``swap_plan`` the auto
+    mode uses."""
+
+    tenant: Optional[str]
+    pipeline: Dict[str, Any]
+    incumbent: PlanPoint
+    candidate: PlanPoint
+    incumbent_score: float
+    candidate_score: float
+    deltas: Dict[str, float]
+    before: Dict[str, Any]
+    golden: Dict[str, Any] = field(default_factory=dict)
+
+    def apply(self, server: PipelineServer) -> SwapRecord:
+        """Promote the proposed plan on ``server`` (drain-free,
+        analyzer-gated — the normal ``swap_plan`` contract)."""
+        return server.swap_plan(self.pipeline, tenant=self.tenant)
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-friendly digest (what the run history records)."""
+        return {
+            "tenant": self.tenant,
+            "plan": self.pipeline.get("name", ""),
+            "hash": pipeline_hash(self.pipeline),
+            "incumbent": _point_digest(self.incumbent),
+            "candidate": _point_digest(self.candidate),
+            "incumbent_score": self.incumbent_score,
+            "candidate_score": self.candidate_score,
+            "deltas": dict(self.deltas),
+            "before": dict(self.before),
+            "golden": dict(self.golden),
+        }
+
+
+def _point_digest(p: PlanPoint) -> Dict[str, Any]:
+    return {"plan": p.pipeline.get("name", ""),
+            "hash": pipeline_hash(p.pipeline),
+            "acc": p.acc, "cost": p.cost, "note": p.note}
+
+
+class ReoptLoop:
+    """Continuous background re-optimization for one server (single- or
+    multi-tenant). See the module docstring for the design.
+
+    Parameters
+    ----------
+    server:
+        The :class:`PipelineServer` / ``MultiPipelineServer`` to track.
+        The loop registers itself as a finished-request observer and as
+        the server's ``report()["reopt"]`` source; one loop per server.
+    workload:
+        The tenant's :class:`~repro.engine.workloads.Workload` (domain,
+        scorer, tags), or a ``{tenant: Workload}`` mapping for
+        multi-tenant hosts. Only the *shape* is used — ``run_once``
+        replaces ``docs`` with the reservoir sample and
+        ``initial_pipeline`` with the tenant's live plan.
+    backend:
+        Deterministic backend the background search evaluates against.
+        Defaults to the server's executor backend; virtual-time traces
+        should pass the *inner* deterministic backend (same fingerprint,
+        so persistent-cache keys match the serving path's) to keep
+        search round trips off the serving clock.
+    call_cache:
+        The evaluation call cache the search runs over — pass a
+        :class:`~repro.cache.PersistentCallCache` over the *same*
+        ``open_store(...)`` as the serving path for the zero-cost
+        warm start. Defaults to a search-private in-memory cache.
+    mode:
+        ``"auto"`` promotes a Pareto-dominating winner through
+        ``swap_plan`` immediately; ``"propose"`` emits a
+        :class:`PromotionProposal` instead and leaves the plan alone.
+    weights:
+        Live objective mix for ``SearchResult.best(weights, ...)``;
+        keys ``acc``, ``cost``, ``slo``. Defaults to
+        :data:`DEFAULT_WEIGHTS`.
+    budget / seed / search_workers:
+        Forwarded to ``MOARSearch``; the search is budget-clamped and
+        deterministic, so a background run is a bounded, reproducible
+        job.
+    reservoir_size / min_samples:
+        Per-tenant reservoir bound and the minimum sampled documents
+        before a run searches (below it the run records ``skipped``).
+    interval_s:
+        Cadence of the threaded mode (:meth:`start`).
+    search_factory:
+        Override hook: ``fn(workload, backend, budget, seed, workers,
+        call_cache) -> optimizer`` returning anything with
+        ``optimize() -> SearchResult``.
+    """
+
+    def __init__(self, server: PipelineServer, workload: Any, *,
+                 backend: Any = None, call_cache: Any = None,
+                 mode: str = "auto",
+                 weights: Optional[Mapping[str, float]] = None,
+                 budget: int = 12, seed: int = 0,
+                 search_workers: int = 1, reservoir_size: int = 16,
+                 min_samples: int = 4, interval_s: float = 30.0,
+                 search_factory: Optional[Callable[..., Any]] = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown reopt mode {mode!r} "
+                             f"(expected one of {', '.join(MODES)})")
+        if getattr(server, "_reopt", None) is not None:
+            raise RuntimeError("server already has a ReoptLoop attached")
+        if isinstance(workload, Mapping):
+            self._workloads: Optional[Dict[Optional[str], Workload]] = \
+                dict(workload)
+            self._default_workload: Optional[Workload] = None
+        else:
+            self._workloads = None
+            self._default_workload = workload
+        self.server = server
+        self.backend = (backend if backend is not None
+                        else server.executor.backend)
+        self.call_cache = call_cache
+        self.mode = mode
+        self.weights = dict(weights) if weights else dict(DEFAULT_WEIGHTS)
+        self.budget = budget
+        self.seed = seed
+        self.search_workers = max(1, search_workers)
+        self.reservoir_size = reservoir_size
+        self.min_samples = max(1, min_samples)
+        self.interval_s = interval_s
+        self._search_factory = search_factory
+        self._lock = threading.Lock()
+        self._reservoirs: Dict[Optional[str], ReservoirSampler] = {}
+        self.runs: List[Dict[str, Any]] = []
+        self.proposals: List[PromotionProposal] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        server.add_request_observer(self._observe)
+        server._reopt = self
+
+    # -- the sampling side (runs on the serving path) -------------------------
+
+    def _reservoir(self, tenant: Optional[str]) -> ReservoirSampler:
+        res = self._reservoirs.get(tenant)
+        if res is None:
+            # str-seeded Random hashes via sha512 — stable across runs
+            res = ReservoirSampler(self.reservoir_size,
+                                   seed=f"{self.seed}:{tenant}")
+            self._reservoirs[tenant] = res
+        return res
+
+    def _observe(self, tk: ServeTicket, record: RequestRecord) -> None:
+        if not record.ok:
+            return  # failed/shed requests are not live distribution
+        with self._lock:
+            self._reservoir(tk.tenant).observe(dict(tk.doc))
+
+    # -- one re-optimization run ----------------------------------------------
+
+    def tenants(self) -> List[Optional[str]]:
+        """The tenants this loop re-optimizes: the host's roster, or
+        the single-plan server's one implicit ``None`` tenant."""
+        order = getattr(self.server, "_order", None)
+        return list(order) if order else [None]
+
+    def _workload_for(self, tenant: Optional[str]) -> Workload:
+        if self._workloads is not None:
+            wl = self._workloads.get(tenant)
+            if wl is None:
+                raise KeyError(f"no workload registered for tenant "
+                               f"{tenant!r} (have "
+                               f"{sorted(map(str, self._workloads))})")
+            return wl
+        assert self._default_workload is not None
+        return self._default_workload
+
+    def _search(self, workload: Workload) -> Any:
+        if self._search_factory is not None:
+            return self._search_factory(
+                workload, self.backend, budget=self.budget,
+                seed=self.seed, workers=self.search_workers,
+                call_cache=self.call_cache)
+        from repro.core.search import MOARSearch  # heavy import, lazy
+        kw: Dict[str, Any] = {}
+        if self.call_cache is not None:
+            kw["call_cache"] = self.call_cache
+        return MOARSearch(workload, self.backend, budget=self.budget,
+                          seed=self.seed, workers=self.search_workers,
+                          **kw)
+
+    def _slo_estimator(self, before: Mapping[str, Any],
+                       incumbent: Optional[PlanPoint]
+                       ) -> Callable[[PlanPoint], float]:
+        """SLO-attainment estimate per candidate, anchored to live
+        measurements: a candidate's latency is proxied as the recent
+        mean latency scaled by its cost ratio to the incumbent (cost
+        and latency are both token-volume-driven on every backend in
+        the tree), then scored against the tenant's SLO — 1.0 inside
+        the target, decaying as the estimate overshoots. With no SLO
+        target or no latency signal every candidate scores 1.0 (the
+        objective goes inert rather than inventing a signal)."""
+        slo = before.get("slo_s")
+        mean = before.get("mean_latency_s") or 0.0
+        base_cost = (incumbent.cost
+                     if incumbent is not None and incumbent.cost > 0
+                     else None)
+
+        def estimate(p: PlanPoint) -> float:
+            if slo is None or mean <= 0 or base_cost is None:
+                return 1.0
+            est_latency = mean * (p.cost / base_cost)
+            return 1.0 if est_latency <= slo else slo / est_latency
+
+        return estimate
+
+    def _score(self, p: PlanPoint,
+               slo_fn: Callable[[PlanPoint], float]) -> float:
+        w = self.weights
+        return (w.get("acc", 0.0) * p.acc - w.get("cost", 0.0) * p.cost
+                + w.get("slo", 0.0) * slo_fn(p))
+
+    def run_once(self, tenant: Optional[str] = None) -> Dict[str, Any]:
+        """One full sample → search → score → promote/propose pass for
+        ``tenant``. Returns the run entry it appends to :attr:`runs`
+        (and to ``report()["reopt"]["runs"]``)."""
+        server = self.server
+        with self._lock:
+            res = self._reservoir(tenant)
+            docs, seen = res.docs(), res.seen
+        entry: Dict[str, Any] = {
+            "tenant": tenant,
+            "at": server.clock.now() - server.stats.opened_at,
+            "sampled": len(docs),
+            "seen": seen,
+            "mode": self.mode,
+        }
+        if len(docs) < self.min_samples:
+            entry["status"] = "skipped"
+            entry["reason"] = (f"reservoir holds {len(docs)} docs < "
+                               f"min_samples={self.min_samples}")
+            self.runs.append(entry)
+            return entry
+
+        incumbent_cfg = server._plan_for(tenant)
+        base = self._workload_for(tenant)
+        workload = _dc_replace(base, name=f"{base.name}@reopt",
+                               docs=docs, initial_pipeline=incumbent_cfg)
+        result: SearchResult = self._search(workload).optimize()
+        entry["budget_used"] = result.budget_used
+        entry["evaluated"] = len(result.evaluated)
+        entry["cache"] = dict(result.cache_stats)
+
+        before = server._swap_stats(tenant).recent_summary()
+        entry["before"] = before
+        inc_hash = pipeline_hash(incumbent_cfg)
+        incumbent = next((p for p in result.evaluated
+                          if pipeline_hash(p.pipeline) == inc_hash), None)
+        if incumbent is None:
+            # the root is always evaluated first, so this only fires on
+            # a custom search_factory that dropped it — keep the plan
+            entry["status"] = "kept"
+            entry["reason"] = "incumbent not measured by the search"
+            self.runs.append(entry)
+            return entry
+
+        slo_fn = self._slo_estimator(before, incumbent)
+        winner = result.best(self.weights, objectives={"slo": slo_fn})
+        entry["incumbent"] = dict(_point_digest(incumbent),
+                                  score=self._score(incumbent, slo_fn))
+        entry["winner"] = dict(_point_digest(winner),
+                               score=self._score(winner, slo_fn))
+        # promotion gate: only candidates that Pareto-dominate the
+        # incumbent's measured (acc, cost) point qualify (Def. 2.1
+        # tie-domination, so "same accuracy, strictly cheaper"
+        # promotes); among them the live objective mix picks the one to
+        # ship. A merely better-scoring but dominated-on-neither-axis
+        # plan — e.g. a pricier rewrite the mix happens to like — never
+        # silently replaces a serving plan in auto mode.
+        dominating = [p for p in result.evaluated
+                      if pareto.dominates(p, incumbent)]
+        if not dominating:
+            entry["status"] = "kept"
+            self.runs.append(entry)
+            return entry
+        candidate = max(dominating,
+                        key=lambda p: (self._score(p, slo_fn),
+                                       p.acc, -p.cost))
+        cand_score = self._score(candidate, slo_fn)
+        entry["candidate"] = dict(_point_digest(candidate),
+                                  score=cand_score)
+        entry["deltas"] = {
+            "acc": candidate.acc - incumbent.acc,
+            "cost": candidate.cost - incumbent.cost,
+            "slo": slo_fn(candidate) - slo_fn(incumbent),
+            "score": cand_score - entry["incumbent"]["score"],
+        }
+        if self.mode == "auto":
+            swap = server.swap_plan(candidate.pipeline, tenant=tenant)
+            entry["status"] = "promoted"
+            entry["swap"] = swap.as_dict()
+        else:
+            from repro.cache import golden_from_result
+            proposal = PromotionProposal(
+                tenant=tenant, pipeline=candidate.pipeline,
+                incumbent=incumbent, candidate=candidate,
+                incumbent_score=entry["incumbent"]["score"],
+                candidate_score=cand_score,
+                deltas=dict(entry["deltas"]), before=before,
+                golden=golden_from_result(result))
+            self.proposals.append(proposal)
+            entry["status"] = "proposed"
+            entry["proposal"] = len(self.proposals) - 1
+        self.runs.append(entry)
+        return entry
+
+    def run_all(self) -> List[Dict[str, Any]]:
+        """``run_once`` over every tenant (roster order)."""
+        return [self.run_once(t) for t in self.tenants()]
+
+    # -- threaded mode --------------------------------------------------------
+
+    def start(self) -> "ReoptLoop":
+        """Run :meth:`run_all` every ``interval_s`` seconds on a daemon
+        thread (live servers only — trace mode drives :meth:`run_once`
+        through ``run_trace(events=...)`` instead)."""
+        if getattr(self.server.clock, "virtual", False):
+            raise TypeError("threaded re-optimization needs a real-time "
+                            "clock; drive run_once via run_trace events "
+                            "for VirtualClock serving")
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="repro-reopt-loop",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.run_all()
+            except Exception:  # noqa: BLE001 — a failed run must not
+                # kill the loop thread; the next interval retries
+                continue
+
+    def stop(self, timeout: Optional[float] = None) -> bool:
+        """Stop the threaded loop; returns whether it joined."""
+        self._stop.set()
+        thread, self._thread = self._thread, None
+        if thread is None:
+            return True
+        thread.join(timeout)
+        return not thread.is_alive()
+
+    # -- reporting ------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """``report()["reopt"]``: loop config + run history. Promoted
+        runs gain an ``after`` recent summary measured now — the
+        before/after delta of each promotion, next to the matching
+        entry in ``report()["swaps"]``."""
+        runs = []
+        for entry in self.runs:
+            e = dict(entry)
+            if e.get("status") == "promoted":
+                e["after"] = self.server._swap_stats(
+                    e["tenant"]).recent_summary()
+            runs.append(e)
+        reservoirs = {
+            str(t): {"sampled": len(r), "seen": r.seen}
+            for t, r in sorted(self._reservoirs.items(),
+                               key=lambda kv: str(kv[0]))}
+        return {
+            "mode": self.mode,
+            "weights": dict(self.weights),
+            "budget": self.budget,
+            "reservoir_size": self.reservoir_size,
+            "min_samples": self.min_samples,
+            "reservoirs": reservoirs,
+            "promotions": sum(1 for e in self.runs
+                              if e.get("status") == "promoted"),
+            "proposals": [p.summary() for p in self.proposals],
+            "runs": runs,
+        }

@@ -1,0 +1,452 @@
+"""Serve-and-optimize loop + the unified serving API.
+
+The contracts under test:
+
+- **The loop closes the paper's loop.** On a deterministic drifted
+  trace (incumbent pinned to an expensive model), ``ReoptLoop`` in
+  ``auto`` mode reservoir-samples served documents, re-optimizes in
+  the background against the *same* persistent store the serving path
+  writes, and promotes a Pareto-dominating candidate through the
+  unified ``swap_plan`` — recorded in ``report()["swaps"]`` and
+  ``report()["reopt"]`` with before/after recent summaries.
+- **Served traffic is free measurement.** The search's incumbent
+  evaluation replays entirely from serving-paid calls
+  (``cache_stats["persistent"]["store_hits"]``), and a second loop run
+  over a warm store completes against a ``ReplayBackend`` with zero
+  backend calls while promoting the *same* candidate.
+- **Propose mode never mutates.** The same candidate ships as a
+  ``PromotionProposal`` with measured deltas and a golden summary; the
+  serving plan changes only on ``apply()``.
+- **The unified swap surface.** One ``swap_plan(plan, *, tenant=None)``
+  signature on both servers returning a typed ``SwapRecord`` that
+  still quacks like the old dict; the legacy multi positional form
+  warns; SLO targets are seconds, positive, finite, validated at
+  construction.
+- **``SearchResult.best(weights=...)``** implements the live objective
+  mix: cost-only, SLO-weighted, and tie-domination selection, while
+  the no-weights default keeps ``resolve_plan`` resolving
+  highest-accuracy.
+"""
+
+import threading
+
+import pytest
+
+from repro.cache import PersistentCallCache, ReplayBackend, open_store
+from repro.engine.backend import SimBackend
+from repro.engine.operators import clone_pipeline, pipeline_hash
+from repro.engine.workloads import WORKLOADS
+from repro.pipeline.optimizers import PlanPoint, SearchResult
+from repro.serving import (MultiPipelineServer, PipelineServer,
+                           PromotionProposal, ReoptLoop, ReservoirSampler,
+                           SwapRecord, TenantSpec, VirtualClock,
+                           VirtualLatencyBackend, resolve_plan,
+                           validate_slo)
+
+CUAD = WORKLOADS["cuad"]()
+
+BUDGET = 16  # enough for rewrite directives to dominate the big model
+RESERVOIR = 12
+
+
+def _expensive_plan(workload):
+    """The drifted incumbent: the initial plan pinned to a big model, so
+    the model-substitution sweep + rewrites find strictly dominating
+    (higher-acc, lower-cost) candidates on the live sample."""
+    cfg = clone_pipeline(workload.initial_pipeline)
+    cfg["name"] += "_big"
+    for op in cfg["operators"]:
+        if op.get("model"):
+            op["model"] = "gemma3-27b"
+    return cfg
+
+
+def _docs(workload, n, prefix="r"):
+    return [dict(workload.sample[i % len(workload.sample)],
+                 id=f"{prefix}{i}") for i in range(n)]
+
+
+def _trace_server(store_path, inner, *, pipeline=None, mode="readwrite"):
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(inner, clock, base_s=0.05,
+                                    preferred_batch_size=64)
+    cache = PersistentCallCache(open_store(store_path), mode=mode)
+    return PipelineServer(
+        pipeline if pipeline is not None else _expensive_plan(CUAD),
+        backend, max_inflight=64, max_batch=8, batch_window_s=0.02,
+        workers=2, clock=clock, slo_s=0.5, call_cache=cache)
+
+
+def _reopt_trace(store_path, inner, *, mode, store_mode="readwrite",
+                 reopt_at=1.0):
+    """One 60-doc trace with a re-optimization run at t=reopt_at."""
+    server = _trace_server(store_path, inner, mode=store_mode)
+    loop = ReoptLoop(
+        server, CUAD, backend=inner,
+        call_cache=PersistentCallCache(open_store(store_path),
+                                       mode=store_mode),
+        mode=mode, budget=BUDGET, seed=0, reservoir_size=RESERVOIR,
+        min_samples=4)
+    arrivals = [(i * 0.03, d) for i, d in enumerate(_docs(CUAD, 60))]
+    tickets = server.run_trace(
+        arrivals, events=[(reopt_at, lambda s: loop.run_once())])
+    return server, loop, tickets
+
+
+@pytest.fixture(scope="module")
+def promoted(tmp_path_factory):
+    """The acceptance trace: auto mode promotes mid-trace against a
+    store the serving path is writing. Shared by the tests below (the
+    store stays warm for the replay phase)."""
+    store_path = str(tmp_path_factory.mktemp("reopt") / "calls.db")
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    server, loop, tickets = _reopt_trace(store_path, sim, mode="auto")
+    return {"store_path": store_path, "server": server, "loop": loop,
+            "tickets": tickets, "report": server.report()}
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: auto-promotion from live traffic
+# ---------------------------------------------------------------------------
+
+
+def test_auto_promotes_dominating_candidate(promoted):
+    run = promoted["loop"].runs[-1]
+    assert run["status"] == "promoted"
+    cand, inc = run["candidate"], run["incumbent"]
+    # Def. 2.1 domination on the measured sample
+    assert cand["acc"] >= inc["acc"] and cand["cost"] < inc["cost"]
+    assert run["deltas"]["cost"] < 0
+    # promoted through the unified swap surface: in report()["swaps"]
+    rep = promoted["report"]
+    assert len(rep["swaps"]) == 1
+    assert rep["swaps"][0]["new_hash"] == cand["hash"]
+    assert rep["swaps"][0]["old_hash"] == inc["hash"]
+    # the serving plan really moved
+    live = pipeline_hash(promoted["server"]._plan_for(None))
+    assert live == cand["hash"]
+
+
+def test_promotion_recorded_in_report_reopt(promoted):
+    rep = promoted["report"]
+    reopt = rep["reopt"]
+    assert reopt["mode"] == "auto" and reopt["promotions"] == 1
+    run = reopt["runs"][-1]
+    # before/after recent summaries ride with the promotion
+    assert run["before"]["n"] > 0
+    assert run["after"]["n"] >= run["before"]["n"]
+    assert {"incumbent", "candidate", "deltas", "swap"} <= set(run)
+    assert run["swap"]["new_hash"] == run["candidate"]["hash"]
+    # reservoir accounting: bounded sample, full stream seen
+    assert reopt["reservoirs"]["None"]["sampled"] == RESERVOIR
+    assert reopt["reservoirs"]["None"]["seen"] == 60
+
+
+def test_search_warm_starts_from_serving_store(promoted):
+    run = promoted["loop"].runs[-1]
+    persistent = run["cache"]["persistent"]
+    # the incumbent candidate is cache-warm: its evaluation calls were
+    # paid by the serving path and replay from the store at zero
+    # backend cost (one call per reservoir doc for the one-op plan)
+    assert persistent["store_hits"] >= RESERVOIR
+    assert persistent["store_write_errors"] == 0
+
+
+def test_replay_run_makes_zero_backend_calls(promoted):
+    # second loop over the now-complete store: the whole trace AND the
+    # whole background search replay; the backend is never asked
+    rb = ReplayBackend(SimBackend(seed=0, domain=CUAD.domain))
+    server, loop, tickets = _reopt_trace(
+        promoted["store_path"], rb, mode="auto", store_mode="replay")
+    run = loop.runs[-1]
+    assert run["status"] == "promoted"
+    assert rb.submit_calls == 0
+    assert run["cache"]["persistent"]["store_writes"] == 0
+    assert run["cache"]["persistent"]["store_hits"] > 0
+    # deterministic: same candidate as the live run
+    live = promoted["loop"].runs[-1]
+    assert run["candidate"]["hash"] == live["candidate"]["hash"]
+    assert [t.error is None for t in tickets] == \
+        [t.error is None for t in promoted["tickets"]]
+
+
+def test_propose_mode_emits_without_mutating(promoted):
+    rb = ReplayBackend(SimBackend(seed=0, domain=CUAD.domain))
+    server, loop, _ = _reopt_trace(
+        promoted["store_path"], rb, mode="propose", store_mode="replay")
+    run = loop.runs[-1]
+    assert run["status"] == "proposed"
+    # the serving plan did NOT move
+    assert pipeline_hash(server._plan_for(None)) == \
+        run["incumbent"]["hash"]
+    assert server.report()["swaps"] == []
+    # the same candidate auto mode promoted, as a reviewable proposal
+    [proposal] = loop.proposals
+    assert isinstance(proposal, PromotionProposal)
+    live = promoted["loop"].runs[-1]
+    assert pipeline_hash(proposal.pipeline) == live["candidate"]["hash"]
+    assert proposal.deltas["cost"] < 0
+    assert len(proposal.golden["evaluated"]) > 0  # replayable summary
+    assert server.report()["reopt"]["proposals"][0]["hash"] == \
+        live["candidate"]["hash"]
+    # sign-off path: apply() promotes through the same unified swap
+    record = proposal.apply(server)
+    assert isinstance(record, SwapRecord)
+    assert record["new_hash"] == live["candidate"]["hash"]
+    assert len(server.report()["swaps"]) == 1
+
+
+def test_loop_skips_below_min_samples(tmp_path):
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    server = _trace_server(str(tmp_path / "calls.db"), sim)
+    loop = ReoptLoop(server, CUAD, backend=sim, min_samples=4)
+    entry = loop.run_once()
+    assert entry["status"] == "skipped" and "min_samples" in entry["reason"]
+    assert server.report()["reopt"]["promotions"] == 0
+
+
+def test_plain_server_report_has_no_reopt_key(tmp_path):
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    server = _trace_server(str(tmp_path / "calls.db"), sim)
+    server.run_trace([(i * 0.03, d) for i, d in enumerate(_docs(CUAD, 8))])
+    assert "reopt" not in server.report()
+
+
+def test_one_loop_per_server(tmp_path):
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    server = _trace_server(str(tmp_path / "calls.db"), sim)
+    ReoptLoop(server, CUAD, backend=sim)
+    with pytest.raises(RuntimeError, match="already has a ReoptLoop"):
+        ReoptLoop(server, CUAD, backend=sim)
+
+
+def test_start_refuses_virtual_clock(tmp_path):
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    server = _trace_server(str(tmp_path / "calls.db"), sim)
+    loop = ReoptLoop(server, CUAD, backend=sim)
+    with pytest.raises(TypeError, match="real-time clock"):
+        loop.start()
+
+
+def test_threaded_loop_runs_and_stops():
+    # live mode: real clock, daemon thread ticks run_all; min_samples
+    # above anything served keeps each tick a cheap recorded skip
+    backend = SimBackend(seed=0, domain=CUAD.domain)
+    server = PipelineServer(CUAD.initial_pipeline, backend,
+                            max_inflight=8, max_batch=4,
+                            batch_window_s=0.0, workers=2)
+    server.start()
+    loop = ReoptLoop(server, CUAD, backend=backend, min_samples=10**6,
+                     interval_s=0.02)
+    loop.start()
+    deadline = threading.Event()
+    for _ in range(200):
+        if loop.runs:
+            break
+        deadline.wait(0.02)
+    assert loop.stop(timeout=5.0)
+    server.shutdown()
+    assert loop.runs and loop.runs[0]["status"] == "skipped"
+
+
+def test_multi_tenant_loop_promotes_one_tenant(tmp_path):
+    store_path = str(tmp_path / "calls.db")
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(sim, clock, base_s=0.05,
+                                    preferred_batch_size=64)
+    specs = [TenantSpec("a", _expensive_plan(CUAD), slo_s=0.5),
+             TenantSpec("b", CUAD.initial_pipeline, slo_s=0.5)]
+    server = MultiPipelineServer(
+        specs, backend, max_inflight=64, max_batch=8,
+        batch_window_s=0.02, workers=2, clock=clock,
+        call_cache=PersistentCallCache(open_store(store_path)))
+    loop = ReoptLoop(
+        server, {"a": CUAD, "b": CUAD}, backend=sim,
+        call_cache=PersistentCallCache(open_store(store_path)),
+        mode="auto", budget=BUDGET, seed=0,
+        reservoir_size=RESERVOIR, min_samples=4)
+    assert loop.tenants() == ["a", "b"]
+    b_hash = pipeline_hash(server._plan_for("b"))
+    docs = _docs(CUAD, 60)
+    arrivals = [(i * 0.03, "a" if i % 2 else "b", d)
+                for i, d in enumerate(docs)]
+    server.run_trace(arrivals,
+                     events=[(1.2, lambda s: loop.run_once("a"))])
+    run = loop.runs[-1]
+    assert run["tenant"] == "a" and run["status"] == "promoted"
+    rep = server.report()
+    assert [s["tenant"] for s in rep["swaps"]] == ["a"]
+    # tenant b untouched; per-tenant reservoirs fed independently
+    assert pipeline_hash(server._plan_for("b")) == b_hash
+    assert rep["reopt"]["reservoirs"]["b"]["seen"] > 0
+
+
+# ---------------------------------------------------------------------------
+# reservoir sampling
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_bounded_seeded_uniform():
+    a, b = ReservoirSampler(8, seed=7), ReservoirSampler(8, seed=7)
+    for i in range(500):
+        a.observe({"id": i})
+        b.observe({"id": i})
+    assert len(a) == 8 and a.seen == 500
+    assert a.docs() == b.docs()  # same seed, same stream -> same sample
+    assert ReservoirSampler(8, seed=8).size == 8
+    c = ReservoirSampler(8, seed=9)
+    for i in range(500):
+        c.observe({"id": i})
+    assert c.docs() != a.docs()  # different seed, different sample
+    # late items do get sampled (it is not "first 8 wins")
+    assert any(d["id"] >= 8 for d in a.docs())
+
+
+def test_reservoir_rejects_nonpositive_size():
+    with pytest.raises(ValueError, match="size"):
+        ReservoirSampler(0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: unified swap_plan + SwapRecord + SLO validation
+# ---------------------------------------------------------------------------
+
+
+def _live_pair(tmp_path):
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    return _trace_server(str(tmp_path / "calls.db"), sim)
+
+
+def test_swap_record_is_mapping(tmp_path):
+    server = _live_pair(tmp_path)
+    plan_b = clone_pipeline(CUAD.initial_pipeline)
+    plan_b["name"] += "_v2"
+    record = server.swap_plan(plan_b)
+    assert isinstance(record, SwapRecord)
+    assert record["new_hash"] == pipeline_hash(plan_b)
+    assert dict(record)["old_hash"] == record.old_hash
+    assert set(record) == {"tenant", "at", "old_plan", "new_plan",
+                           "old_hash", "new_hash", "before"}
+    assert record.as_dict()["tenant"] is None
+
+
+def test_single_server_swap_rejects_tenant(tmp_path):
+    server = _live_pair(tmp_path)
+    with pytest.raises(ValueError, match="tenant"):
+        server.swap_plan(CUAD.initial_pipeline, tenant="a")
+
+
+def _multi(tmp_path):
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    clock = VirtualClock()
+    backend = VirtualLatencyBackend(sim, clock, base_s=0.05)
+    specs = [TenantSpec("a", CUAD.initial_pipeline),
+             TenantSpec("b", CUAD.initial_pipeline)]
+    return MultiPipelineServer(specs, backend, max_inflight=16,
+                               max_batch=4, batch_window_s=0.02,
+                               workers=2, clock=clock)
+
+
+def test_multi_swap_unified_signature(tmp_path):
+    server = _multi(tmp_path)
+    plan_b = clone_pipeline(CUAD.initial_pipeline)
+    plan_b["name"] += "_v2"
+    record = server.swap_plan(plan_b, tenant="a")
+    assert record.tenant == "a"
+    assert record["new_hash"] == pipeline_hash(plan_b)
+    with pytest.raises(ValueError, match="tenant"):
+        server.swap_plan(plan_b)  # tenant required on the multi host
+
+
+def test_multi_swap_legacy_form_warns(tmp_path):
+    server = _multi(tmp_path)
+    plan_b = clone_pipeline(CUAD.initial_pipeline)
+    plan_b["name"] += "_v2"
+    with pytest.warns(DeprecationWarning, match="swap_plan"):
+        record = server.swap_plan("b", plan_b)
+    assert record.tenant == "b"
+    assert record["new_hash"] == pipeline_hash(plan_b)
+    with pytest.raises(TypeError, match="both"):
+        server.swap_plan("b", plan_b, tenant="a")
+
+
+def test_slo_seconds_validated_everywhere(tmp_path):
+    assert validate_slo(None, "x") is None
+    assert validate_slo(0.25, "x") == 0.25
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="slo_s"):
+            validate_slo(bad, "x")
+    with pytest.raises(ValueError, match="slo_s"):
+        TenantSpec("a", CUAD.initial_pipeline, slo_s=-0.5)
+    sim = SimBackend(seed=0, domain=CUAD.domain)
+    with pytest.raises(ValueError, match="slo_s"):
+        PipelineServer(CUAD.initial_pipeline, sim, slo_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: SearchResult.best under an objective mix
+# ---------------------------------------------------------------------------
+
+
+def _pt(name, acc, cost):
+    return PlanPoint(pipeline={"name": name, "operators": []},
+                     acc=acc, cost=cost)
+
+
+def _result(points):
+    return SearchResult(optimizer="test", evaluated=points,
+                        frontier=points, budget_used=len(points),
+                        wall_s=0.0)
+
+
+def test_best_default_is_highest_accuracy():
+    res = _result([_pt("cheap", 0.6, 0.1), _pt("strong", 0.9, 5.0)])
+    assert res.best().pipeline["name"] == "strong"
+
+
+def test_best_cost_only_weights():
+    res = _result([_pt("cheap", 0.6, 0.1), _pt("mid", 0.8, 1.0),
+                   _pt("strong", 0.9, 5.0)])
+    assert res.best({"cost": 1.0}).pipeline["name"] == "cheap"
+
+
+def test_best_tie_breaks_by_domination():
+    # equal score under acc-only weights (same acc): the strictly
+    # cheaper plan — the Def. 2.1 tie-dominator — wins
+    res = _result([_pt("pricey", 0.8, 5.0), _pt("lean", 0.8, 0.2)])
+    assert res.best({"acc": 1.0}).pipeline["name"] == "lean"
+
+
+def test_best_slo_weighted_objective():
+    res = _result([_pt("fast", 0.80, 0.5), _pt("slow", 0.82, 0.6)])
+    slo = {"fast": 1.0, "slow": 0.0}  # attainment estimate per plan
+
+    def attain(p):
+        return slo[p.pipeline["name"]]
+
+    # accuracy alone prefers "slow"; a live mix with a meaningful SLO
+    # weight flips the choice to the attaining plan
+    assert res.best({"acc": 1.0}).pipeline["name"] == "slow"
+    pick = res.best({"acc": 1.0, "slo": 1.0}, objectives={"slo": attain})
+    assert pick.pipeline["name"] == "fast"
+
+
+def test_best_unknown_weight_raises():
+    res = _result([_pt("a", 0.5, 0.5)])
+    with pytest.raises(KeyError, match="latency"):
+        res.best({"acc": 1.0, "latency": 1.0})
+
+
+def test_swap_plan_still_resolves_best_pipeline(tmp_path):
+    # regression: resolve_plan(search_result) == best().pipeline, and
+    # swap_plan accepts the SearchResult directly
+    res = _result([_pt("cheap", 0.6, 0.1), _pt("strong", 0.9, 5.0)])
+    assert resolve_plan(res)["name"] == "strong"
+    server = _live_pair(tmp_path)
+    strong = clone_pipeline(CUAD.initial_pipeline)
+    strong["name"] += "_strong"
+    record = server.swap_plan(_result(
+        [_pt("cheap", 0.6, 0.1),
+         PlanPoint(pipeline=strong, acc=0.9, cost=5.0)]))
+    assert record["new_hash"] == pipeline_hash(strong)
