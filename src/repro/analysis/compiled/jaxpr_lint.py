@@ -1,0 +1,120 @@
+"""Jaxpr-level lint: unintended f32 upcasts in bf16 model code.
+
+The rule is FLOP-share based, not per-dot: bf16 models legitimately run
+*small* f32 islands (the MoE router matmul, SSD state recurrences — both
+numerically deliberate), so flagging every f32 ``dot_general`` would
+drown the signal. What a forgotten ``astype(bf16)`` actually does is
+poison the *main* matmul path — jnp type promotion drags every
+downstream projection up to f32 — so the share of total dot FLOPs
+executed in f32 jumps from a few percent to most of the trace. We trace
+the function (no compile), walk the jaxpr including sub-jaxprs with scan
+lengths as execution multipliers, and flag when the f32 share crosses
+``F32_SHARE_BUDGET``.
+
+Measured on the in-tree zoo (reduced configs, prefill+decode traces):
+attention-family models sit at 0.000, MoE routers at ~0.003, and the
+SSD-heaviest trace (mamba2 prefill) at 0.105 — all intentional. A
+single unconverted activation path puts the share above 0.5.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+
+from repro.analysis.compiled.diagnostics import (
+    DTYPE_UPCAST, SEV_WARNING, CompiledDiagnostic, diag)
+
+#: maximum tolerated fraction of trip-weighted dot FLOPs in f32 for a
+#: bf16-model trace; comfortably above the intentional SSD/router islands
+#: (max observed in-tree: 0.105) and far below a poisoned main path.
+F32_SHARE_BUDGET = 0.25
+
+
+def _sub_jaxprs(params: Dict[str, Any]) -> Iterator[Any]:
+    """Yield every inner jaxpr held by an eqn's params (scan/while/cond
+    bodies, custom_jvp call jaxprs, ...)."""
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for vv in vals:
+            inner = getattr(vv, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield inner
+            elif hasattr(vv, "eqns"):
+                yield vv
+
+
+def iter_eqns(jaxpr: Any, mult: float = 1.0
+              ) -> Iterator[Tuple[Any, float]]:
+    """Depth-first walk over (eqn, execution multiplier). ``scan`` bodies
+    multiply by their static length; ``while`` bodies have no static trip
+    count at the jaxpr level, so they count once (the HLO-side transfer
+    lint owns trip-weighted accounting)."""
+    for eqn in jaxpr.eqns:
+        yield eqn, mult
+        sub_mult = mult
+        if eqn.primitive.name == "scan":
+            sub_mult = mult * float(eqn.params.get("length", 1))
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, sub_mult)
+
+
+def _dot_flops(eqn: Any) -> float:
+    lhs = eqn.invars[0].aval
+    (lhs_contract, _), _ = eqn.params["dimension_numbers"]
+    k = 1
+    for i in lhs_contract:
+        k *= lhs.shape[i]
+    out_elems = 1
+    for d in eqn.outvars[0].aval.shape:
+        out_elems *= d
+    return 2.0 * out_elems * k
+
+
+def f32_dot_share(jaxpr: Any) -> Tuple[float, float, List[Dict[str, Any]]]:
+    """Returns (f32_share, total_dot_flops, top f32 dots by FLOPs)."""
+    total = 0.0
+    f32 = 0.0
+    f32_dots: List[Dict[str, Any]] = []
+    for eqn, mult in iter_eqns(jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        flops = _dot_flops(eqn) * mult
+        total += flops
+        dtypes = [str(v.aval.dtype) for v in eqn.invars[:2]]
+        if all(dt == "float32" for dt in dtypes):
+            f32 += flops
+            f32_dots.append({
+                "flops": flops,
+                "lhs_shape": tuple(eqn.invars[0].aval.shape),
+                "rhs_shape": tuple(eqn.invars[1].aval.shape),
+            })
+    f32_dots.sort(key=lambda d: -d["flops"])
+    share = f32 / total if total > 0 else 0.0
+    return share, total, f32_dots[:3]
+
+
+def check_dtype_upcast(fn: Callable, *args: Any, subject: str, site: str,
+                       model_dtype: str = "bfloat16",
+                       budget: float = F32_SHARE_BUDGET,
+                       **kwargs: Any) -> List[CompiledDiagnostic]:
+    """Trace ``fn(*args, **kwargs)`` and flag a dominant-f32 matmul path.
+
+    Only meaningful for reduced-precision models; f32-native configs are
+    skipped (everything would trivially be f32)."""
+    if model_dtype not in ("bfloat16", "float16"):
+        return []
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    share, total, top = f32_dot_share(jaxpr.jaxpr)
+    if total <= 0 or share <= budget:
+        return []
+    shapes = ", ".join(
+        f"{d['lhs_shape']}x{d['rhs_shape']}" for d in top)
+    return [diag(
+        DTYPE_UPCAST, SEV_WARNING, subject, site,
+        f"{share:.0%} of dot FLOPs run in f32 in a {model_dtype} model "
+        f"(budget {budget:.0%}); largest f32 dots: {shapes} — a missing "
+        f"astype({model_dtype}) upstream promotes the whole matmul path",
+        f32_share=round(share, 4), budget=budget,
+        top_f32_dots=top)]

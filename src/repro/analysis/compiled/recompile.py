@@ -1,0 +1,78 @@
+"""Recompilation-risk lint over the serving jit sites.
+
+Two churn sources exist in the serving path, both detectable without
+executing a step:
+
+1. **Prefill shape churn.** The continuous batcher prefills each
+   admitted prompt as a ``(1, S)`` batch; every distinct ``S`` is a
+   distinct jit cache key. Unbucketed, a stream of natural-language
+   prompts retraces prefill once per distinct length. The scheduler
+   right-pads prompts to ``scheduler.PREFILL_BUCKET`` multiples (safe
+   under causal attention: logits at the true last position never see
+   the pads), so the census of reachable prefill shapes must stay small.
+   This check replays the scheduler's own ``bucket_len`` over every
+   admissible prompt length and flags a census above
+   ``PREFILL_SHAPE_BUDGET``.
+
+2. **Uncached jit closures.** ``jax.jit`` keys its cache on function
+   identity: wrapping a fresh ``make_serve_step(cfg)`` closure per call
+   silently retraces the decode step every time. The decode module
+   memoizes the jitted step per ``(cfg, temperature)``
+   (``decode.serve_step_jit``); this check calls it twice and flags if
+   the identities differ.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.analysis.compiled.diagnostics import (
+    RECOMPILE_RISK, SEV_WARNING, CompiledDiagnostic, diag)
+from repro.models.config import ModelConfig
+
+#: distinct prefill shapes tolerated across a serving lifetime; with
+#: 32-token buckets and the backend's 96-token prompt cap this is 3
+PREFILL_SHAPE_BUDGET = 8
+
+
+def prefill_shape_census(max_prompt_tokens: int, max_len: int,
+                         bucket_fn: Optional[Callable[[int, int], int]] = None
+                         ) -> List[int]:
+    """Distinct prefill sequence lengths reachable from prompt lengths
+    ``1..max_prompt_tokens`` under the scheduler's bucketing."""
+    if bucket_fn is None:
+        from repro.serving.scheduler import bucket_len
+        bucket_fn = bucket_len
+    return sorted({bucket_fn(n, max_len)
+                   for n in range(1, max_prompt_tokens + 1)})
+
+
+def check_serving_recompile(cfg: ModelConfig, *, subject: str,
+                            max_prompt_tokens: int = 96,
+                            max_len: int = 112,
+                            budget: int = PREFILL_SHAPE_BUDGET,
+                            bucket_fn: Optional[Callable[[int, int], int]] = None
+                            ) -> List[CompiledDiagnostic]:
+    out: List[CompiledDiagnostic] = []
+    census = prefill_shape_census(max_prompt_tokens, max_len,
+                                  bucket_fn=bucket_fn)
+    if len(census) > budget:
+        out.append(diag(
+            RECOMPILE_RISK, SEV_WARNING, subject, "scheduler.prefill",
+            f"{len(census)} distinct prefill shapes reachable from prompt "
+            f"lengths 1..{max_prompt_tokens} (budget {budget}): each is a "
+            f"jit retrace at admit time — bucket prompt lengths",
+            distinct_shapes=len(census), budget=budget,
+            sample=census[:12]))
+
+    from repro.serving.decode import serve_step_jit
+    s1 = serve_step_jit(cfg)
+    s2 = serve_step_jit(cfg)
+    if s1 is not s2:
+        out.append(diag(
+            RECOMPILE_RISK, SEV_WARNING, subject, "decode.serve_step",
+            "serve_step_jit returned distinct callables for the same "
+            "(cfg, temperature): the decode step retraces on every "
+            "generate() call instead of hitting the jit cache",
+            cached=False))
+    return out

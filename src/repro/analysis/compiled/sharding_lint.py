@@ -1,0 +1,124 @@
+"""Sharding-annotation consistency: partition specs vs mesh axes.
+
+The spec tables in ``launch/sharding.py`` promise three invariants that
+GSPMD does not check for us (it pads or replicates silently, which the
+roofline then reports as mystery copy traffic):
+
+- every axis named in a ``PartitionSpec`` exists in the mesh;
+- no axis appears twice within one leaf's spec (double-sharding one
+  buffer over the same axis is a GSPMD error at run time);
+- the product of axis sizes assigned to a dim divides that dim evenly
+  (the ``_fit_axes`` contract — uneven sharding means silent padding).
+
+This check builds the spec trees for every production mesh scheme
+against ``eval_shape``'d params/cache/batch trees — no devices, no
+compile — and validates the invariants leaf by leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.compiled.diagnostics import (
+    SEV_ERROR, SHARDING_INCONSISTENCY, CompiledDiagnostic, diag)
+from repro.models.config import ModelConfig
+
+#: production mesh schemes from ``launch/mesh.py`` as axis-size tables
+#: (constructing real Mesh objects would demand 256+ devices)
+MESH_SCHEMES: Dict[str, Dict[str, int]] = {
+    "v5e-pod": {"data": 16, "model": 16},
+    "v5e-multipod": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _path_str(path: Tuple[Any, ...]) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def validate_spec_tree(shapes: Any, specs: Any, axis_sizes: Dict[str, int],
+                       *, subject: str, site: str
+                       ) -> List[CompiledDiagnostic]:
+    """Validate one spec tree against its shape tree leaf by leaf."""
+    out: List[CompiledDiagnostic] = []
+    shape_leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    spec_leaves = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    if len(shape_leaves) != len(spec_leaves):
+        out.append(diag(
+            SHARDING_INCONSISTENCY, SEV_ERROR, subject, site,
+            f"spec tree has {len(spec_leaves)} leaves but the shape tree "
+            f"has {len(shape_leaves)} — the tables and the model pytree "
+            f"diverged", spec_leaves=len(spec_leaves),
+            shape_leaves=len(shape_leaves)))
+        return out
+    for (path, leaf), spec in zip(shape_leaves, spec_leaves):
+        where = f"{site}:{_path_str(path)}"
+        entries = tuple(spec)
+        if len(entries) > leaf.ndim:
+            out.append(diag(
+                SHARDING_INCONSISTENCY, SEV_ERROR, subject, where,
+                f"spec {spec} has {len(entries)} entries for a rank-"
+                f"{leaf.ndim} leaf", spec=str(spec), rank=leaf.ndim))
+            continue
+        used: List[str] = []
+        for dim_idx, entry in enumerate(entries):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            prod = 1
+            for a in axes:
+                if a not in axis_sizes:
+                    out.append(diag(
+                        SHARDING_INCONSISTENCY, SEV_ERROR, subject, where,
+                        f"spec {spec} names axis {a!r} which the mesh "
+                        f"({sorted(axis_sizes)}) does not have",
+                        axis=a, mesh_axes=sorted(axis_sizes)))
+                    continue
+                if a in used:
+                    out.append(diag(
+                        SHARDING_INCONSISTENCY, SEV_ERROR, subject, where,
+                        f"spec {spec} uses axis {a!r} on more than one "
+                        f"dim of the same leaf", axis=a))
+                used.append(a)
+                prod *= axis_sizes[a]
+            dim = leaf.shape[dim_idx]
+            if prod > 1 and dim % prod != 0:
+                out.append(diag(
+                    SHARDING_INCONSISTENCY, SEV_ERROR, subject, where,
+                    f"spec {spec} shards dim {dim_idx} of size {dim} "
+                    f"over {prod} shards — not divisible, GSPMD will "
+                    f"pad silently", dim=dim_idx, size=dim, shards=prod))
+    return out
+
+
+def check_sharding_consistency(cfg: ModelConfig, *, subject: str,
+                               batch: int = 8, max_len: int = 128
+                               ) -> List[CompiledDiagnostic]:
+    from repro.launch.sharding import (ShardingPolicy, batch_pspecs,
+                                       cache_pspecs, param_pspecs)
+    from repro.models import api
+    out: List[CompiledDiagnostic] = []
+    params_shape = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    cache_shape = jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, max_len))
+    tokens_shape = {"tokens": jax.ShapeDtypeStruct((batch, 16), "int32")}
+    for mesh_label, sizes in MESH_SCHEMES.items():
+        pol = ShardingPolicy(
+            data_axes=tuple(a for a in ("pod", "data") if a in sizes),
+            model_axes=("model",),
+            axis_sizes=dict(sizes))
+        for site, shapes, specs in (
+                (f"{mesh_label}/params", params_shape,
+                 param_pspecs(cfg, params_shape, pol)),
+                (f"{mesh_label}/cache", cache_shape,
+                 cache_pspecs(cfg, cache_shape, pol)),
+                (f"{mesh_label}/batch", tokens_shape,
+                 batch_pspecs(cfg, tokens_shape, pol))):
+            out += validate_spec_tree(shapes, specs, sizes,
+                                      subject=subject, site=site)
+    return out

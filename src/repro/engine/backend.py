@@ -547,7 +547,8 @@ class JaxBackend:
 
     def __init__(self, seed: int = 0, max_new_tokens: int = 8,
                  decode_slots: Optional[int] = None,
-                 clock: Optional[Any] = None):
+                 clock: Optional[Any] = None,
+                 strict_compile: bool = False):
         import time
 
         import jax
@@ -558,6 +559,11 @@ class JaxBackend:
         self._jax = jax
         self.seed = seed
         self.max_new_tokens = max_new_tokens
+        # compile-path static-analysis gate (repro.analysis.compiled):
+        # every model is audited once at load. False (default) runs the
+        # fast jaxpr tier and surfaces findings as warnings; True also
+        # compiles the decode step and raises on any error diagnostic.
+        self.strict_compile = strict_compile
         if decode_slots is not None:
             self.DECODE_SLOTS = max(1, int(decode_slots))
         # threaded into each ContinuousBatcher so request timestamps can
@@ -585,11 +591,34 @@ class JaxBackend:
 
     def _model(self, name: str):
         if name not in self._params:
+            self._audit_compile(name)
             cfg = self._get_config(name, reduced=True)
             params = self._api.init_params(
                 self._jax.random.PRNGKey(self.seed), cfg)
             self._params[name] = (cfg, params)
         return self._params[name]
+
+    # process-wide audit memo: the lint is a pure function of the arch's
+    # (frozen) config, so one report serves every backend instance
+    _audit_cache: Dict[Tuple[str, bool], Any] = {}
+
+    def _audit_compile(self, name: str) -> None:
+        """Construction-time compile-path lint gate: warn by default,
+        raise under ``strict_compile`` (errors always fatal there; the
+        jaxpr tier alone is milliseconds, so the default path stays
+        cheap — the HLO tier only runs when strict)."""
+        import warnings
+
+        from repro.analysis.compiled import audit_model
+        key = (name, self.strict_compile)
+        report = self._audit_cache.get(key)
+        if report is None:
+            report = audit_model(name, compile=self.strict_compile)
+            self._audit_cache[key] = report
+        if self.strict_compile:
+            report.raise_for_errors()
+        for d in report.diagnostics:
+            warnings.warn(f"compile-lint: {d.format()}", stacklevel=3)
 
     # -- batched dispatch (Backend protocol v2) -------------------------------
 

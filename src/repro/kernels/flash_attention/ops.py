@@ -44,6 +44,14 @@ def flash_attention(
 ) -> jax.Array:
     b, s, h, hd = q.shape
     kh = k.shape[2]
+    if kh <= 0 or h % kh != 0:
+        raise ValueError(
+            f"flash_attention: heads axis invalid — q has {h} heads, k/v "
+            f"have {kh} kv-heads; GQA needs heads % kv_heads == 0")
+    if block_q <= 0 or block_k <= 0:
+        raise ValueError(
+            f"flash_attention: block shape must be positive, got "
+            f"block_q={block_q}, block_k={block_k}")
     g = h // kh
 
     # kernel layout: (B, Kh, G, S, Hd) for q; (B, Kh, S, Hd) for k/v

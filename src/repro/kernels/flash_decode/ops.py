@@ -24,6 +24,14 @@ def flash_decode(
 ) -> jax.Array:
     b, _, h, hd = q.shape
     kh = k.shape[2]
+    if kh <= 0 or h % kh != 0:
+        raise ValueError(
+            f"flash_decode: heads axis invalid — q has {h} heads, k/v "
+            f"cache has {kh} kv-heads; GQA needs heads % kv_heads == 0")
+    if block_s <= 0:
+        raise ValueError(
+            f"flash_decode: block shape must be positive, got "
+            f"block_s={block_s}")
     g = h // kh
     qg = q.reshape(b, kh, g, hd)
     # pad head_dim to the MXU lane multiple

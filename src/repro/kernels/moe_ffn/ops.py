@@ -23,6 +23,14 @@ def expert_ffn(
 ) -> jax.Array:
     g, e, c, d = x.shape
     f = w_gate.shape[-1]
+    if block_c <= 0 or block_f <= 0:
+        raise ValueError(
+            f"moe_ffn: block shape must be positive, got "
+            f"block_c={block_c}, block_f={block_f}")
+    if w_gate.shape[0] != e or w_gate.shape[1] != d:
+        raise ValueError(
+            f"moe_ffn: experts axis mismatch — x is (G,E,C,D)="
+            f"{x.shape} but w_gate is (E,D,F)={w_gate.shape}")
     bc = min(block_c, max(c, 8))
     bf = min(block_f, max(f, 128))
     c_pad = (-c) % bc

@@ -28,6 +28,18 @@ def ssd(
 ) -> Tuple[jax.Array, jax.Array]:
     b, s, h, p = x.shape
     n = Bm.shape[-1]
+    g = Bm.shape[2]
+    if chunk <= 0:
+        raise ValueError(f"ssd_scan: chunk must be positive, got {chunk}")
+    if s % chunk != 0:
+        raise ValueError(
+            f"ssd_scan: seq axis not divisible — seq={s} is not a "
+            f"multiple of chunk={chunk}; pad the sequence first (the "
+            f"kernel would silently truncate the tail chunk)")
+    if g <= 0 or h % g != 0:
+        raise ValueError(
+            f"ssd_scan: heads axis invalid — x has {h} heads, B/C have "
+            f"{g} groups; needs heads % groups == 0")
     h0 = (initial_state if initial_state is not None
           else jnp.zeros((b, h, p, n), jnp.float32))
     y, hf = ssd_scan(

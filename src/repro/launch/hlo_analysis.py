@@ -23,11 +23,33 @@ from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
-    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5,
     "pred": 1, "c64": 8, "c128": 16,
     "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
 }
+
+#: shape-like tokens that are not arrays and carry no byte cost
+_NON_ARRAY_TYPES = {"token", "tuple", "opaque"}
+
+
+class HLOParseError(ValueError):
+    """An HLO type string used a dtype the byte table doesn't know.
+
+    Silently skipping the shape (the old behavior) under-counts bytes and
+    FLOPs without a trace; the error instead carries the offending dtype
+    and the op line so the table can be extended deliberately.
+    """
+
+    def __init__(self, dtype: str, type_str: str, line: str = ""):
+        at = f" in op line {line.strip()!r}" if line else ""
+        super().__init__(
+            f"unknown HLO dtype {dtype!r} in type {type_str!r}{at} — "
+            f"add it to hlo_analysis._DTYPE_BYTES")
+        self.dtype = dtype
+        self.type_str = type_str
+        self.line = line
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(
@@ -60,17 +82,19 @@ _MEMORY_OPS = {
 }
 
 
-def _type_bytes(type_str: str) -> int:
-    total = 0
+def _type_bytes(type_str: str, line: str = "") -> int:
+    total = 0.0
     for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
+        if dtype in _NON_ARRAY_TYPES:
             continue
+        if dtype not in _DTYPE_BYTES:
+            raise HLOParseError(dtype, type_str, line)
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
         total += n * _DTYPE_BYTES[dtype]
-    return total
+    return int(total)
 
 
 def _shape_dims(type_str: str) -> List[int]:
@@ -142,14 +166,17 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
 
 def _trip_count(cond: Computation) -> int:
     """Loop bound heuristic: the largest integer constant in the condition
-    computation (jax scans lower to `lt(i, constant(n))`)."""
-    best = 1
+    computation (jax scans lower to `lt(i, constant(n))`). A condition
+    whose only constant is 0 is a zero-trip loop and must report 0, not
+    fall back to 1; only a condition with NO constant at all (dynamic
+    bound) falls back to 1."""
+    found: List[int] = []
     for op in cond.ops:
         if op.opcode == "constant":
             m = re.search(r"constant\((\d+)\)", op.line)
             if m:
-                best = max(best, int(m.group(1)))
-    return best
+                found.append(int(m.group(1)))
+    return max(found) if found else 1
 
 
 def _call_edges(comp: Computation) -> List[Tuple[str, str, Optional[str]]]:
@@ -290,21 +317,23 @@ def analyze(hlo: str) -> HLOCosts:
             is_coll = next((c for c in COLLECTIVES if oc.startswith(c)), None)
             if is_coll:
                 operand_bytes = sum(
-                    _type_bytes(comp.symbols.get(o, "")) for o in op.operands)
+                    _type_bytes(comp.symbols.get(o, ""), op.line)
+                    for o in op.operands)
                 costs.collective_bytes[is_coll] = \
                     costs.collective_bytes.get(is_coll, 0.0) + m * operand_bytes
                 costs.collective_counts[is_coll] = \
                     costs.collective_counts.get(is_coll, 0.0) + m
             if oc not in _MEMORY_OPS:
                 continue
-            out_bytes = _type_bytes(op.type_str)
+            out_bytes = _type_bytes(op.type_str, op.line)
             in_bytes = sum(
-                _type_bytes(comp.symbols.get(o, "")) for o in op.operands)
+                _type_bytes(comp.symbols.get(o, ""), op.line)
+                for o in op.operands)
             # refinements toward HloCostAnalysis/TPU semantics:
             if oc in ("dynamic-update-slice", "scatter"):
                 # in-place aliased update: traffic ~ 2x the update slice,
                 # NOT the full target buffer (KV-cache writes!)
-                upd = sum(_type_bytes(comp.symbols.get(o, ""))
+                upd = sum(_type_bytes(comp.symbols.get(o, ""), op.line)
                           for o in op.operands[1:2])
                 costs.bytes_accessed += m * 2 * upd
                 continue

@@ -1,11 +1,20 @@
-"""Static pipeline lint CLI (``python -m repro.launch.lint``).
+"""Static lint CLI (``python -m repro.launch.lint``).
 
-Runs the field-flow analyzer (``repro.analysis``) over the six workload
-pipelines and — unless ``--no-rewrites`` — over every rewrite any
-directive can produce from them (every directive x target x params
-``apply()`` output). Each pipeline is checked closed-world: the source
-field universe is the union of the workload's sample+test document keys,
-so every read is verified, not just the provably-wrong ones.
+Two modes share one CLI surface and exit-code contract:
+
+Pipeline mode (default) runs the field-flow analyzer (``repro.analysis``)
+over the six workload pipelines and — unless ``--no-rewrites`` — over
+every rewrite any directive can produce from them (every directive x
+target x params ``apply()`` output). Each pipeline is checked
+closed-world: the source field universe is the union of the workload's
+sample+test document keys, so every read is verified, not just the
+provably-wrong ones.
+
+Compile mode (``--compile``) runs the compile-path static analyzer
+(``repro.analysis.compiled``) over the model zoo and the Pallas kernel
+cases: dtype-upcast / recompile-risk / sharding lint from traced jaxprs,
+transfer + donation lint from the compiled decode-step HLO, and
+block-shape + VMEM lint from the roofline hardware table.
 
 Usage:
   python -m repro.launch.lint                      # human report
@@ -13,10 +22,13 @@ Usage:
   python -m repro.launch.lint --strict             # warnings fail too
   python -m repro.launch.lint --workloads cuad,medec
   python -m repro.launch.lint --bench              # + BENCH_lint.json
+  python -m repro.launch.lint --compile            # compile-path lint
+  python -m repro.launch.lint --compile --archs llama3.2-1b
+  python -m repro.launch.lint --compile --bench    # + BENCH_compile_lint.json
 
 Exit codes: 0 = no error diagnostics (warnings allowed unless
 ``--strict``), 1 = errors (or warnings under ``--strict``), 2 = a
-directive crashed while instantiating/applying (sweep incomplete).
+directive crashed / a model audit raised (sweep incomplete).
 
 ``--bench`` additionally measures (a) analyzer overhead per candidate
 across the whole sweep (the gate must stay well under 1 ms to be free
@@ -106,6 +118,95 @@ def sweep(workload_names: List[str], *, rewrites: bool = True,
         "analyze_mean_us": round(sum(timings_us) / n, 1) if n else 0.0,
         "analyze_max_us": round(max(timings_us), 1) if n else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# --compile: compile-path static analyzer sweep
+# ---------------------------------------------------------------------------
+
+
+def compile_sweep(archs: Optional[List[str]] = None,
+                  kernels: Optional[List[str]] = None,
+                  *, hlo: bool = True) -> Dict[str, Any]:
+    """Run ``repro.analysis.compiled`` over the model zoo + kernel cases.
+
+    ``archs``/``kernels`` subset the sweep (None = everything); ``hlo``
+    False skips the lower+compile tier (jaxpr lint only — the fast path
+    the backend gate uses). Returns a report shaped like ``sweep()``.
+    """
+    from repro.analysis.compiled import audit_model
+    from repro.analysis.compiled.pallas_lint import default_kernel_cases
+    from repro.analysis.compiled.audit import audit_kernels
+    from repro.configs import list_archs
+
+    names = archs if archs is not None else list_archs()
+    cases = [(k, p) for k, p in default_kernel_cases()
+             if kernels is None or k in kernels]
+
+    records: List[Dict[str, Any]] = []
+    crashes: List[Dict[str, str]] = []
+    for arch in names:
+        try:
+            rep = audit_model(arch, compile=hlo)
+        except Exception as e:  # noqa: BLE001 — audit bug, not a finding
+            crashes.append({"subject": arch, "error": repr(e)})
+            continue
+        records.append(rep.to_dict())
+    for rep in audit_kernels(cases):
+        records.append(rep.to_dict())
+
+    return {
+        "mode": "compile",
+        "archs": names,
+        "kernel_cases": [k for k, _ in cases],
+        "subjects_analyzed": len(records),
+        "flagged": [r for r in records if r["diagnostics"]],
+        "records": records,
+        "crashes": crashes,
+        "errors": sum(r["errors"] for r in records),
+        "warnings": sum(r["warnings"] for r in records),
+        "analyze_total_s": round(sum(r["analyze_s"] for r in records), 3),
+    }
+
+
+def format_compile_human(report: Dict[str, Any]) -> str:
+    lines = [f"compile-lint: {report['subjects_analyzed']} subjects "
+             f"({len(report['archs'])} models, "
+             f"{len(report['kernel_cases'])} kernel cases) in "
+             f"{report['analyze_total_s']:.1f}s"]
+    for rec in report["flagged"]:
+        lines.append(f"\n{rec['subject']}: {rec['errors']} error(s), "
+                     f"{rec['warnings']} warning(s)")
+        for d in rec["diagnostics"]:
+            lines.append(f"  [{d['severity']}] {d['code']} @ "
+                         f"{d['subject']}:{d['site']}: {d['message']}")
+    for c in report["crashes"]:
+        lines.append(f"\nCRASH auditing {c['subject']}: {c['error']}")
+    if not report["flagged"] and not report["crashes"]:
+        lines.append("all clean: no diagnostics")
+    else:
+        lines.append(f"\n{report['errors']} errors, "
+                     f"{report['warnings']} warnings")
+    return "\n".join(lines)
+
+
+def run_compile_bench(report: Dict[str, Any], out_path: str
+                      ) -> Dict[str, Any]:
+    """Record per-subject diagnostics + analyze time for CI tracking."""
+    bench = {
+        "subjects": [
+            {"subject": r["subject"], "errors": r["errors"],
+             "warnings": r["warnings"], "analyze_s": r["analyze_s"],
+             "codes": sorted({d["code"] for d in r["diagnostics"]})}
+            for r in report["records"]],
+        "analyze_total_s": report["analyze_total_s"],
+        "errors": report["errors"],
+        "warnings": report["warnings"],
+        "crashes": len(report["crashes"]),
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+    return bench
 
 
 # ---------------------------------------------------------------------------
@@ -226,9 +327,25 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--bench", action="store_true",
                     help="also run the analyzer-overhead + fault-injected "
-                         "search benchmark")
-    ap.add_argument("--bench-out", default="BENCH_lint.json")
+                         "search benchmark (pipeline mode) or write the "
+                         "per-subject record (compile mode)")
+    ap.add_argument("--bench-out", default=None,
+                    help="bench output path (default BENCH_lint.json / "
+                         "BENCH_compile_lint.json by mode)")
+    ap.add_argument("--compile", action="store_true", dest="compile_mode",
+                    help="run the compile-path analyzer (jaxpr/HLO/Pallas) "
+                         "over the model zoo instead of pipeline lint")
+    ap.add_argument("--archs", default=None,
+                    help="[--compile] comma-separated model subset")
+    ap.add_argument("--kernels", default=None,
+                    help="[--compile] comma-separated kernel-name subset")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="[--compile] skip the lower+compile HLO tier "
+                         "(jaxpr lint only)")
     args = ap.parse_args(argv)
+
+    if args.compile_mode:
+        return _main_compile(ap, args)
 
     names = (args.workloads.split(",") if args.workloads
              else list(WORKLOADS))
@@ -238,7 +355,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     report = sweep(names, rewrites=not args.no_rewrites, seed=args.seed)
     if args.bench:
-        report["bench"] = run_bench(report, args.bench_out)
+        report["bench"] = run_bench(report,
+                                    args.bench_out or "BENCH_lint.json")
 
     if args.as_json:
         print(json.dumps(report, indent=1, sort_keys=True))
@@ -252,6 +370,39 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"{b['lint_on']['faulted_evaluated']} faulted evals), "
                   f"lint off evaluated {b['lint_off']['evaluated']} "
                   f"({b['lint_off']['faulted_evaluated']} faulted evals)")
+
+    if report["crashes"]:
+        return 2
+    if report["errors"] or (args.strict and report["warnings"]):
+        return 1
+    return 0
+
+
+def _main_compile(ap: argparse.ArgumentParser,
+                  args: argparse.Namespace) -> int:
+    from repro.configs import list_archs
+
+    archs = args.archs.split(",") if args.archs else None
+    if archs:
+        known = list_archs()
+        unknown = [a for a in archs if a not in known]
+        if unknown:
+            ap.error(f"unknown archs {unknown} (known: {known})")
+    kernels = args.kernels.split(",") if args.kernels else None
+
+    report = compile_sweep(archs, kernels, hlo=not args.no_hlo)
+    bench_out = args.bench_out or "BENCH_compile_lint.json"
+    if args.bench:
+        report["bench"] = run_compile_bench(report, bench_out)
+
+    if args.as_json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    else:
+        print(format_compile_human(report))
+        if args.bench:
+            print(f"\nbench -> {bench_out}: "
+                  f"{report['subjects_analyzed']} subjects, "
+                  f"{report['analyze_total_s']:.1f}s total analyze time")
 
     if report["crashes"]:
         return 2

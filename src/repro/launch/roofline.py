@@ -21,12 +21,13 @@ from typing import Any, Dict
 from repro.launch.hlo_analysis import HLOCosts, analyze
 from repro.models.config import ModelConfig
 
-HW = dict(
+HW: Dict[str, Any] = dict(
     name="tpu-v5e",
     peak_flops=197e12,   # bf16
     hbm_bw=819e9,        # bytes/s
     ici_bw=50e9,         # bytes/s per link
     hbm_bytes=16 * 2**30,
+    vmem_bytes=16 * 2**20,  # ~16 MB/core on-chip vector memory
 )
 
 

@@ -7,6 +7,7 @@ greedy by default; temperature sampling threads a PRNG key.
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -15,6 +16,13 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
+
+#: decode-step donation declaration: argument 2 is the KV cache, which is
+#: consumed and replaced every step — donating it lets XLA update in
+#: place instead of holding two generations of the cache at peak. The
+#: compile-path donation lint (``repro.analysis.compiled``) verifies the
+#: compiled module actually aliases it.
+SERVE_STEP_DONATE = (2,)
 
 
 def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
@@ -28,6 +36,19 @@ def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
         return next_tok[:, None].astype(jnp.int32), cache
 
     return serve_step
+
+
+@functools.lru_cache(maxsize=64)
+def serve_step_jit(cfg: ModelConfig, temperature: float = 0.0):
+    """Memoized jitted decode step with cache donation.
+
+    ``jax.jit`` keys its trace cache on function identity, so wrapping a
+    fresh ``make_serve_step(cfg)`` closure per call retraces every time.
+    ``ModelConfig`` is frozen/hashable, so one jitted step per
+    ``(cfg, temperature)`` serves every ``generate()`` call — the
+    compile-path recompile lint checks this identity holds."""
+    return jax.jit(make_serve_step(cfg, temperature),
+                   donate_argnums=SERVE_STEP_DONATE)
 
 
 def make_prefill(cfg: ModelConfig, max_len: int):
@@ -53,7 +74,7 @@ def generate(
     inputs = dict(extra_inputs or {})
     inputs["tokens"] = prompt
     logits, cache = api.prefill(params, cfg, max_len, **inputs)
-    serve_step = jax.jit(make_serve_step(cfg, temperature))
+    serve_step = serve_step_jit(cfg, temperature)
     if temperature > 0.0:
         tok = jax.random.categorical(
             jax.random.PRNGKey(seed), logits[:, -1, :] / temperature, axis=-1

@@ -20,7 +20,24 @@ import numpy as np
 
 from repro.models import api
 from repro.models.config import ModelConfig
-from repro.serving.decode import make_serve_step
+from repro.serving.decode import SERVE_STEP_DONATE, make_serve_step
+
+#: prompts right-pad to multiples of this before prefill, so the prefill
+#: jit site sees a handful of shapes instead of one per distinct prompt
+#: length. Causally safe: positions < the true length never attend to
+#: the pads, so the admitted token (read at true_len - 1) and the spliced
+#: cache rows [0, true_len) are bit-identical to the unpadded prefill.
+PREFILL_BUCKET = 32
+
+
+def bucket_len(n: int, max_len: Optional[int] = None,
+               bucket: int = PREFILL_BUCKET) -> int:
+    """Sequence length ``n`` rounded up to a bucket multiple, capped at
+    ``max_len`` (but never below ``n`` itself)."""
+    b = -(-max(n, 1) // bucket) * bucket
+    if max_len is not None:
+        b = min(b, max(max_len, n))
+    return b
 
 
 @dataclass
@@ -75,7 +92,8 @@ class ContinuousBatcher:
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.cache = api.init_cache(cfg, num_slots, max_len)
         self.tokens = jnp.zeros((num_slots, 1), jnp.int32)
-        self._step = jax.jit(make_serve_step(cfg))
+        self._step = jax.jit(make_serve_step(cfg),
+                             donate_argnums=SERVE_STEP_DONATE)
         self._uid = 0
         self.finished: List[Request] = []
         # per-slot position bookkeeping (host side)
@@ -106,10 +124,16 @@ class ContinuousBatcher:
                 continue
             while self.queue:
                 req = self.queue.popleft()
-                prompt = jnp.asarray(req.prompt[None, :])
+                # right-pad to a bucketed length: one prefill trace per
+                # bucket instead of one per distinct prompt length
+                true_len = len(req.prompt)
+                blen = bucket_len(true_len, self.max_len)
+                ids = np.zeros((1, blen), np.int32)
+                ids[0, :true_len] = req.prompt
                 logits, cache1 = api.prefill(self.params, self.cfg,
-                                             self.max_len, tokens=prompt)
-                tok = int(jnp.argmax(logits[0, -1]))
+                                             self.max_len,
+                                             tokens=jnp.asarray(ids))
+                tok = int(jnp.argmax(logits[0, true_len - 1]))
                 req.generated.append(tok)
                 if tok == self.eos_id or \
                         len(req.generated) >= req.max_new_tokens:

@@ -1,0 +1,79 @@
+"""Call-time shape validation in the kernel ops wrappers.
+
+Each wrapper must reject invalid head/block/chunk geometry with a
+``ValueError`` naming the kernel and the offending axis, instead of the
+old behavior (silent wrong-shape reshape, or ``ssd_scan`` silently
+truncating the ragged tail chunk). Validation runs at trace time, so no
+kernel executes in any of these tests.
+"""
+
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
+from repro.kernels.flash_decode.ops import flash_decode  # noqa: E402
+from repro.kernels.moe_ffn.ops import expert_ffn  # noqa: E402
+from repro.kernels.ssd_scan.ops import ssd  # noqa: E402
+
+
+def _z(*shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def test_flash_attention_rejects_ragged_heads():
+    with pytest.raises(ValueError, match="flash_attention.*heads"):
+        flash_attention(_z(1, 8, 3, 16), _z(1, 8, 2, 16), _z(1, 8, 2, 16))
+
+
+def test_flash_attention_rejects_nonpositive_block():
+    with pytest.raises(ValueError, match="flash_attention.*block"):
+        flash_attention(_z(1, 8, 4, 16), _z(1, 8, 2, 16), _z(1, 8, 2, 16),
+                        block_q=0)
+
+
+def test_flash_decode_rejects_ragged_heads():
+    with pytest.raises(ValueError, match="flash_decode.*heads"):
+        flash_decode(_z(1, 1, 3, 16), _z(1, 8, 2, 16), _z(1, 8, 2, 16),
+                     jnp.asarray(4))
+
+
+def test_flash_decode_rejects_nonpositive_block():
+    with pytest.raises(ValueError, match="flash_decode.*block"):
+        flash_decode(_z(1, 1, 4, 16), _z(1, 8, 2, 16), _z(1, 8, 2, 16),
+                     jnp.asarray(4), block_s=-1)
+
+
+def test_moe_ffn_rejects_nonpositive_block():
+    with pytest.raises(ValueError, match="moe_ffn.*block"):
+        expert_ffn(_z(1, 2, 4, 8), _z(2, 8, 16), _z(2, 8, 16),
+                   _z(2, 16, 8), block_c=0)
+
+
+def test_moe_ffn_rejects_expert_dim_mismatch():
+    with pytest.raises(ValueError, match="moe_ffn.*experts"):
+        expert_ffn(_z(1, 2, 4, 8), _z(3, 8, 16), _z(3, 8, 16),
+                   _z(3, 16, 8))
+
+
+def _ssd_args(s, h=4, g=2, p=8, n=4):
+    return (_z(1, s, h, p), _z(1, s, h), _z(h), _z(1, s, g, n),
+            _z(1, s, g, n), _z(h))
+
+
+def test_ssd_rejects_ragged_seq():
+    # the raw kernel computes nc = s // chunk and would silently drop
+    # the 2-element tail; the wrapper must refuse instead
+    with pytest.raises(ValueError, match="ssd_scan.*seq"):
+        ssd(*_ssd_args(10), chunk=4)
+
+
+def test_ssd_rejects_nonpositive_chunk():
+    with pytest.raises(ValueError, match="ssd_scan.*chunk"):
+        ssd(*_ssd_args(8), chunk=0)
+
+
+def test_ssd_rejects_ragged_head_groups():
+    with pytest.raises(ValueError, match="ssd_scan.*heads"):
+        ssd(*_ssd_args(8, h=5, g=2), chunk=4)

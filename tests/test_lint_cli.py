@@ -1,0 +1,98 @@
+"""Exit-code contract of ``python -m repro.launch.lint --compile``.
+
+The CI job keys off these codes (0 clean / 1 errors-or-strict-warnings /
+2 crash), so they are pinned with synthetic reports via monkeypatch plus
+one real single-arch run through the jaxpr tier.
+"""
+
+import json
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.launch import lint  # noqa: E402
+
+
+def _fake_report(errors=0, warnings=0, crashed=False):
+    diags = []
+    if errors:
+        diags.append({"code": "non-donated-buffer", "severity": "error",
+                      "subject": "m", "site": "s", "message": "boom",
+                      "data": {}})
+    if warnings:
+        diags.append({"code": "recompile-risk", "severity": "warning",
+                      "subject": "m", "site": "s", "message": "meh",
+                      "data": {}})
+    rec = {"subject": "m", "errors": errors, "warnings": warnings,
+           "analyze_s": 0.01, "diagnostics": diags}
+    return {
+        "mode": "compile", "archs": ["m"], "kernel_cases": [],
+        "subjects_analyzed": 1,
+        "flagged": [rec] if diags else [],
+        "records": [rec],
+        "crashes": [{"subject": "m", "error": "RuntimeError('x')"}]
+        if crashed else [],
+        "errors": errors, "warnings": warnings, "analyze_total_s": 0.01,
+    }
+
+
+def _run(monkeypatch, report, argv):
+    monkeypatch.setattr(lint, "compile_sweep",
+                        lambda *a, **k: report)
+    return lint.main(argv)
+
+
+def test_clean_exits_zero(monkeypatch, capsys):
+    assert _run(monkeypatch, _fake_report(), ["--compile"]) == 0
+    assert "all clean" in capsys.readouterr().out
+
+
+def test_errors_exit_one(monkeypatch):
+    assert _run(monkeypatch, _fake_report(errors=1), ["--compile"]) == 1
+
+
+def test_warnings_pass_unless_strict(monkeypatch):
+    assert _run(monkeypatch, _fake_report(warnings=1), ["--compile"]) == 0
+    assert _run(monkeypatch, _fake_report(warnings=1),
+                ["--compile", "--strict"]) == 1
+
+
+def test_crash_exits_two(monkeypatch):
+    assert _run(monkeypatch, _fake_report(crashed=True), ["--compile"]) == 2
+
+
+def test_json_output_parses(monkeypatch, capsys):
+    assert _run(monkeypatch, _fake_report(warnings=1),
+                ["--compile", "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["mode"] == "compile"
+    assert out["warnings"] == 1
+    assert out["flagged"][0]["diagnostics"][0]["code"] == "recompile-risk"
+
+
+def test_bench_writes_per_subject_record(monkeypatch, capsys, tmp_path):
+    out_path = tmp_path / "BENCH_compile_lint.json"
+    assert _run(monkeypatch, _fake_report(),
+                ["--compile", "--bench", "--bench-out", str(out_path)]) == 0
+    bench = json.loads(out_path.read_text())
+    assert bench["subjects"][0]["subject"] == "m"
+    assert bench["errors"] == 0 and bench["crashes"] == 0
+
+
+def test_unknown_arch_rejected(monkeypatch):
+    with pytest.raises(SystemExit):
+        lint.main(["--compile", "--archs", "not-a-model"])
+
+
+def test_real_single_arch_jaxpr_tier(capsys):
+    # end-to-end through the real analyzer: one arch, one kernel,
+    # no HLO compile — seconds, not minutes
+    rc = lint.main(["--compile", "--archs", "llama3.2-1b",
+                    "--kernels", "flash_attention", "--no-hlo", "--json"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["errors"] == 0
+    subjects = [r["subject"] for r in out["records"]]
+    assert "llama3.2-1b" in subjects
+    assert any(s.startswith("flash_attention") for s in subjects)

@@ -33,14 +33,18 @@ class _StubApi:
         self.first_token = first_token
         self.vocab = vocab
         self.prefills = 0
+        self.prefill_shapes = []
 
     def init_cache(self, cfg, num_slots, max_len):
         return {"len": jnp.asarray(0, jnp.int32)}
 
     def prefill(self, params, cfg, max_len, tokens):
         self.prefills += 1
+        self.prefill_shapes.append(tuple(tokens.shape))
+        # peak at every position: the scheduler buckets prompts and reads
+        # the logits at the TRUE last prompt position, not at -1
         logits = np.zeros((1, tokens.shape[1], self.vocab), np.float32)
-        logits[0, -1, self.first_token] = 1.0
+        logits[0, :, self.first_token] = 1.0
         return jnp.asarray(logits), {"len": jnp.asarray(0, jnp.int32)}
 
 
@@ -156,6 +160,45 @@ def test_default_clock_is_wall_time(monkeypatch):
     (r,) = b.run_until_drained()
     import time
     assert abs(r.submitted_at - time.time()) < 60.0
+
+
+def test_prefill_prompts_are_bucketed(monkeypatch):
+    """Distinct prompt lengths collapse onto PREFILL_BUCKET multiples:
+    the prefill jit site sees a bounded shape census instead of one
+    retrace per length."""
+    b, stub = _batcher(monkeypatch, first_token=5, eos_id=2, num_slots=2)
+    for n in (1, 3, 7, 17, 31, 32):
+        b.submit(np.arange(n), max_new_tokens=1)
+    b.run_until_drained()
+    assert stub.prefills == 6
+    assert {s[1] for s in stub.prefill_shapes} == {32}
+
+
+def test_bucket_len_caps_at_max_len():
+    assert sched.bucket_len(1) == sched.PREFILL_BUCKET
+    assert sched.bucket_len(32) == 32
+    assert sched.bucket_len(33) == 64
+    assert sched.bucket_len(40, max_len=48) == 48   # capped
+    assert sched.bucket_len(50, max_len=48) == 50   # never below n
+
+
+def test_bucketed_prefill_reads_true_last_position(monkeypatch):
+    """The admitted first token must come from the logits at the true
+    prompt end, not the padded end — a stub peaking ONLY at position
+    true_len-1 proves the read index."""
+
+    class _PositionStub(_StubApi):
+        def prefill(self, params, cfg, max_len, tokens):
+            self.prefills += 1
+            logits = np.zeros((1, tokens.shape[1], self.vocab), np.float32)
+            logits[0, 4, self.first_token] = 1.0  # true_len=5 -> index 4
+            return jnp.asarray(logits), {"len": jnp.asarray(0, jnp.int32)}
+
+    b, _ = _batcher(monkeypatch, first_token=7, eos_id=2,
+                    stub=_PositionStub(7))
+    b.submit(np.arange(5), max_new_tokens=1)
+    (r,) = b.run_until_drained()
+    assert r.generated == [7]
 
 
 def test_jax_backend_normalizes_clock_objects():
